@@ -1,0 +1,63 @@
+"""Paper Fig. 8a analogue: UniGPS engines vs NetworkX (the paper's actual
+baseline library) on PR / SSSP / CC.
+
+The paper ran as-skitter/livejournal/orkut/uk-2002 on a 9-node cluster;
+offline we use generated graphs of the same family (power-law lognormal) at
+CPU-feasible scale. Derived column = speedup over NetworkX.
+"""
+import numpy as np
+
+import repro
+from repro.core import io as gio
+
+from .common import row, timeit
+
+
+def nx_graph(g, directed=True):
+    import networkx as nx
+
+    G = nx.DiGraph() if directed else nx.Graph()
+    G.add_nodes_from(range(g.num_vertices))
+    w = g.edge_props.get("weight")
+    if w is None:
+        G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    else:
+        G.add_weighted_edges_from(zip(g.src.tolist(), g.dst.tolist(),
+                                      w.tolist()))
+    return G
+
+
+def main(scale=20000):
+    import networkx as nx
+
+    g = gio.lognormal_graph(scale, mu=1.6, sigma=1.1, seed=3, weighted=True)
+    G = nx_graph(g)
+    u = repro.UniGPS()
+
+    t_nx = timeit(lambda: nx.pagerank(G, alpha=0.85, max_iter=1000,
+                                      tol=1e-10), iters=1)
+    for eng in ("pregel", "gas", "pushpull"):
+        t = timeit(lambda e=eng: u.pagerank(g, num_iters=20, engine=e),
+                   iters=1)
+        row(f"fig8a.pagerank.{eng}", t, f"speedup_vs_networkx={t_nx/t:.2f}")
+    row("fig8a.pagerank.networkx", t_nx, "baseline")
+
+    t_nx = timeit(lambda: nx.single_source_dijkstra_path_length(G, 0),
+                  iters=1)
+    for eng in ("pregel", "gas", "pushpull"):
+        t = timeit(lambda e=eng: u.sssp(g, root=0, engine=e), iters=1)
+        row(f"fig8a.sssp.{eng}", t, f"speedup_vs_networkx={t_nx/t:.2f}")
+    row("fig8a.sssp.networkx", t_nx, "baseline")
+
+    g2 = gio.uniform_graph(scale, scale * 4, seed=4, directed=False)
+    G2 = nx_graph(g2, directed=False)
+    t_nx = timeit(lambda: list(nx.connected_components(G2)), iters=1)
+    for eng in ("pregel", "gas", "pushpull"):
+        t = timeit(lambda e=eng: u.connected_components(g2, engine=e),
+                   iters=1)
+        row(f"fig8a.cc.{eng}", t, f"speedup_vs_networkx={t_nx/t:.2f}")
+    row("fig8a.cc.networkx", t_nx, "baseline")
+
+
+if __name__ == "__main__":
+    main()

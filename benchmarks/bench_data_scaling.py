@@ -1,0 +1,32 @@
+"""Paper Fig. 8b analogue: data scalability — PageRank time vs |E| on
+lognormal graphs (the generator the paper used), UniGPS vs NetworkX.
+Derived column = edges and time-per-edge (flat time/edge == the paper's
+near-linear data scalability claim C2)."""
+import repro
+from repro.core import io as gio
+
+from .common import row, timeit
+
+
+def main(scales=(2000, 8000, 32000, 128000)):
+    import networkx as nx
+
+    u = repro.UniGPS()
+    for V in scales:
+        g = gio.lognormal_graph(V, mu=1.6, sigma=1.1, seed=5)
+        t = timeit(lambda: u.pagerank(g, num_iters=10, engine="pushpull"),
+                   iters=1)
+        row(f"fig8b.unigps.V{V}", t,
+            f"edges={g.num_edges};ns_per_edge={t*1e9/g.num_edges:.1f}")
+        if V <= 32000:  # NetworkX OOM/slow ceiling comes much earlier
+            G = nx.DiGraph()
+            G.add_nodes_from(range(V))
+            G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+            t_nx = timeit(lambda: nx.pagerank(G, max_iter=1000, tol=1e-10),
+                          iters=1)
+            row(f"fig8b.networkx.V{V}", t_nx,
+                f"edges={g.num_edges};ns_per_edge={t_nx*1e9/g.num_edges:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Kernel micro-bench: Pallas segment-combine (interpret mode on CPU — the
+numbers validate plumbing, not TPU perf; TPU perf comes from the roofline)
+vs the jnp segment ops and the one-hot matmul it replaces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import row, timeit
+
+
+def main(E=20000, V=2048, D=8):
+    rng = np.random.default_rng(0)
+    seg = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    vals = rng.normal(size=(E, D)).astype(np.float32)
+    segj, valsj = jnp.asarray(seg), jnp.asarray(vals)
+
+    ref = jax.jit(lambda v, s: ops.segment_combine_ref(v, s, V, "sum"))
+    ref(valsj, segj).block_until_ready()
+    t = timeit(lambda: ref(valsj, segj).block_until_ready(), iters=5)
+    row("kernel.segment_sum.jnp_ref", t, f"E={E};D={D}")
+
+    t = timeit(lambda: ops.segment_combine(valsj, segj, V, "sum")
+               .block_until_ready(), iters=2)
+    row("kernel.segment_sum.pallas_interpret", t, "correctness-path timing")
+
+    # one-hot matmul (what the MXU actually executes on TPU)
+    onehot = jax.jit(lambda v, s: jax.nn.one_hot(s, V, dtype=v.dtype).T @ v)
+    onehot(valsj, segj).block_until_ready()
+    t = timeit(lambda: onehot(valsj, segj).block_until_ready(), iters=5)
+    row("kernel.segment_sum.onehot_matmul", t, "MXU-shaped formulation")
+
+
+if __name__ == "__main__":
+    main()

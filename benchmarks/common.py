@@ -1,0 +1,16 @@
+"""Shared benchmark helpers. All benches print ``name,us_per_call,derived``
+CSV rows so run.py can aggregate."""
+import time
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters
+
+
+def row(name, seconds, derived=""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,47 @@
+"""Benchmark harness (deliverable d): one module per paper figure.
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks scales for CI.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8a,...]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (bench_algorithms, bench_data_scaling, bench_ipc,
+                   bench_kernels, bench_machine_scaling)
+
+    benches = {
+        "fig8a": lambda: bench_algorithms.main(
+            scale=4000 if args.quick else 20000),
+        "fig8b": lambda: bench_data_scaling.main(
+            scales=(1000, 4000) if args.quick else (2000, 8000, 32000,
+                                                    128000)),
+        "fig8c": bench_machine_scaling.main,
+        "fig8d": lambda: bench_ipc.main(scale=2000 if args.quick else 5000),
+        "kernels": bench_kernels.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

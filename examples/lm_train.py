@@ -1,0 +1,76 @@
+"""End-to-end LM training driver (deliverable b): a ~100M-parameter dense
+transformer trained for a few hundred steps on CPU through the SAME
+train-step builder, checkpoint manager and data pipeline the pod launcher
+uses. Loss must drop measurably.
+
+    PYTHONPATH=src python examples/lm_train.py [--steps 300]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import register
+from repro.configs.base import ArchConfig, param_count
+from repro.data import Prefetcher, SyntheticLMDataset
+from repro.launch.mesh import make_host_mesh
+from repro.optim import linear_warmup_cosine
+from repro.train import step as TS
+
+# a real ~100M config (not a smoke shim): 8L × 768d, GQA 12/4, 32k vocab
+DEMO_100M = register(ArchConfig(
+    name="demo-100m", family="dense", num_layers=8, d_model=768,
+    num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+    activation="swiglu", norm="rmsnorm", rope_theta=1e4,
+    tied_embeddings=True, block_pattern=("attn",), dtype="float32",
+    remat="none", max_seq_len=2048))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = DEMO_100M
+    print(f"model: {cfg.name}, ~{param_count(cfg)/1e6:.0f}M params")
+
+    mesh = make_host_mesh()
+    lr = linear_warmup_cosine(6e-4, 30, args.steps)
+    jitted = jax.jit(TS.make_train_step(cfg, mesh, lr), donate_argnums=(0,))
+
+    state = TS.init_train_state(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq_len,
+                              args.global_batch, seed=0, zipf_a=1.1)
+    pf = Prefetcher(data)
+    ckpt = CheckpointManager("/tmp/repro_demo100m", keep=2)
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        _, batch = pf.next()
+        state, metrics = jitted(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(step+1)*1e3:.0f} ms/step avg)",
+                  flush=True)
+    ckpt.save(args.steps, state, block=True)
+    pf.close()
+
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"(drop {first-last:.3f}) over {args.steps} steps")
+    assert last < first - 0.5, "expected a clear loss drop"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving example: prefill + KV-cache greedy decode on a reduced
+qwen3 (GQA + qk_norm) and a reduced recurrentgemma (RG-LRU hybrid — O(1)
+state, the long-context family), through the serve-step builders.
+
+    PYTHONPATH=src python examples/serving.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models as M
+from repro.configs import get_config, smoke
+from repro.launch.mesh import make_host_mesh
+from repro.train import step as TS
+
+
+def serve_demo(arch: str, batch=4, prompt_len=24, gen_len=24):
+    cfg = smoke(get_config(arch)).replace(dtype="float32")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params, _ = M.init_model(cfg, key)
+    max_len = prompt_len + gen_len
+
+    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    prefill = jax.jit(lambda p, t: TS.make_prefill_step(cfg, mesh,
+                                                        max_len)(p, t))
+    serve = jax.jit(TS.make_serve_step(cfg, mesh), donate_argnums=(2,))
+
+    logits, state = prefill(params, prompt)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [tok]
+    t0 = time.time()
+    for _ in range(gen_len - 1):
+        logits, state = serve(params, tok, state)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+    tok.block_until_ready()
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in outs], 1)
+
+    # teacher-forcing check: decode path == full forward on the same tokens
+    full = jnp.concatenate([prompt, jnp.asarray(gen)], axis=1)
+    ref_logits, _, _ = M.forward(params, cfg, full)
+    ref_last = np.argmax(np.asarray(ref_logits[:, -2]), -1)
+    assert np.array_equal(ref_last, gen[:, -1]), "decode != forward"
+
+    print(f"{arch:22s} batch={batch} {dt*1e3/max(gen_len-1,1):6.1f} ms/tok  "
+          f"sample={gen[0][:10].tolist()}")
+
+
+def main():
+    serve_demo("qwen3-14b")            # dense GQA + qk_norm, KV cache
+    serve_demo("recurrentgemma-9b")    # RG-LRU hybrid, recurrent state
+    serve_demo("xlstm-350m")           # mLSTM/sLSTM, O(1) state
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+# repro — UniGPS-in-JAX: unified vertex-centric graph processing (the paper's
+# contribution, under repro.core) + the LM training/serving substrate that
+# shares its mesh/launch/roofline tooling.
+from .core.api import UniGPS  # noqa: F401
+from .core.graph import PropertyGraph, from_edges, partition_graph  # noqa: F401
+from .core.vcprog import VCProgram  # noqa: F401
+from .core.engines import run_vcprog  # noqa: F401
+from .core import io, operators  # noqa: F401
+
+__version__ = "0.1.0"

@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpoint manager.
+
+  * atomic: write to step dir with a `.tmp` suffix, fsync, rename
+  * keep-k pruning of complete checkpoints
+  * async save on a background thread (training never blocks on disk)
+  * reshard-on-load: arrays are restored with the *target* sharding
+    (device_put with NamedSharding), so a checkpoint written on one mesh
+    restores onto another — the elastic-rescale path after node loss
+  * metadata json carries step / config name / mesh shape for audits
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, tuple) and hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    """Rebuild a pytree with template's structure from the flat dict."""
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, list):
+        return [_unflatten_into(v, flat, f"{prefix}#{i}/")
+                for i, v in enumerate(template)]
+    if isinstance(template, tuple) and hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields])
+    if isinstance(template, tuple):
+        return tuple(_unflatten_into(v, flat, f"{prefix}#{i}/")
+                     for i, v in enumerate(template))
+    return flat[prefix.rstrip("/")]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             block: bool = False):
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        meta = dict(metadata or {}, step=int(step), time=time.time())
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{k.replace("/", "\x1f"): v for k, v in host.items()})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._prune()
+
+        if self.async_save and not block:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into template's structure; `shardings` (matching pytree
+        of jax.sharding.Sharding or None) reshards on load."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
+        z = np.load(path)
+        flat = {k.replace("\x1f", "/"): z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                tree, shardings)
+        return tree
+
+    def metadata(self, step: Optional[int] = None) -> dict:
+        if step is None:
+            step = self.latest_step()
+        with open(os.path.join(self.dir, f"step_{step:010d}",
+                               "meta.json")) as f:
+            return json.load(f)

@@ -1,0 +1,7 @@
+# The paper's primary contribution — the VCProg unified vertex-centric
+# programming model + cross-platform engines, in JAX.
+from .api import UniGPS  # noqa: F401
+from .graph import PropertyGraph, from_edges, partition_graph  # noqa: F401
+from .vcprog import VCProgram  # noqa: F401
+from .engines import run_vcprog  # noqa: F401
+from . import io, operators  # noqa: F401

@@ -1,0 +1,110 @@
+"""UniGPS user-facing facade (paper Fig. 3's `unigps` handle).
+
+Mirrors the paper's API shape:
+
+    import repro as unigps_lib
+    unigps = unigps_lib.UniGPS()
+    g = unigps.create_by_edge_list("graph.txt")
+    out = unigps.vcprog(g, user_program=MyProgram(), engine="pregel")
+    ranks, info = unigps.pagerank(g, engine="pushpull")
+    unigps.save(out_vprops, "result.tsv")
+
+Every call takes `engine=` to pick the backend — the cross-platform
+"write once, run anywhere" knob. Engines: pregel | gas | pushpull |
+callback | distributed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from . import io as gio
+from . import operators
+from .engines import run_vcprog
+from .graph import PropertyGraph, from_edges
+from .vcprog import VCProgram
+
+DEFAULT_ENGINE = "pushpull"
+
+
+class UniGPS:
+    """Session handle; holds defaults (engine, kernel opt-in)."""
+
+    def __init__(self, engine: str = DEFAULT_ENGINE, use_kernel: bool = False):
+        self.engine = engine
+        self.use_kernel = use_kernel
+
+    # -- graph creation (unified I/O module) -------------------------------
+    def create_by_edge_list(self, path: str, directed: bool = True,
+                            weighted: bool = False) -> PropertyGraph:
+        return gio.load_edge_list(path, directed=directed, weighted=weighted)
+
+    def create_by_edges(self, src, dst, num_vertices: Optional[int] = None,
+                        edge_props=None, vertex_props=None,
+                        directed: bool = True) -> PropertyGraph:
+        return from_edges(src, dst, num_vertices, edge_props=edge_props,
+                          vertex_props=vertex_props, directed=directed)
+
+    def create_by_npz(self, path: str) -> PropertyGraph:
+        return gio.load_npz(path)
+
+    def create_lognormal(self, num_vertices: int, **kw) -> PropertyGraph:
+        return gio.lognormal_graph(num_vertices, **kw)
+
+    def save_graph(self, graph: PropertyGraph, path: str) -> None:
+        gio.save_npz(graph, path)
+
+    def save_vertex_table(self, vprops: Dict[str, np.ndarray], path: str) -> None:
+        gio.save_vertex_table(vprops, path)
+
+    # -- VCProg API (paper Fig. 3 `unigps.vcprog(...)`) ---------------------
+    def vcprog(self, graph: PropertyGraph, user_program: VCProgram,
+               max_iter: int = 100, engine: Optional[str] = None,
+               output_file: Optional[str] = None, **kw):
+        eng = engine or self.engine
+        vprops, info = run_vcprog(user_program, graph, max_iter=max_iter,
+                                  engine=eng,
+                                  use_kernel=kw.get("use_kernel", self.use_kernel))
+        if output_file:
+            host = {k: np.asarray(v) for k, v in vprops.items()}
+            gio.save_vertex_table(host, output_file)
+        return vprops, info
+
+    # -- native operator API -------------------------------------------------
+    def pagerank(self, graph, num_iters: int = 20, damping: float = 0.85,
+                 engine: Optional[str] = None, output_file: Optional[str] = None):
+        ranks, info = operators.pagerank(graph, num_iters, damping,
+                                         engine=engine or self.engine,
+                                         use_kernel=self.use_kernel)
+        if output_file:
+            gio.save_vertex_table({"rank": ranks}, output_file)
+        return ranks, info
+
+    def sssp(self, graph, root: int = 0, max_iter: int = 100,
+             engine: Optional[str] = None, output_file: Optional[str] = None):
+        dist, info = operators.sssp(graph, root, max_iter,
+                                    engine=engine or self.engine,
+                                    use_kernel=self.use_kernel)
+        if output_file:
+            gio.save_vertex_table({"distance": dist}, output_file)
+        return dist, info
+
+    def connected_components(self, graph, max_iter: int = 200,
+                             engine: Optional[str] = None,
+                             output_file: Optional[str] = None):
+        labels, info = operators.connected_components(
+            graph, max_iter, engine=engine or self.engine,
+            use_kernel=self.use_kernel)
+        if output_file:
+            gio.save_vertex_table({"label": labels}, output_file)
+        return labels, info
+
+    def bfs(self, graph, root: int = 0, max_iter: int = 100,
+            engine: Optional[str] = None):
+        return operators.bfs(graph, root, max_iter,
+                             engine=engine or self.engine,
+                             use_kernel=self.use_kernel)
+
+    def degrees(self, graph, engine: Optional[str] = None):
+        return operators.degrees(graph, engine=engine or self.engine)

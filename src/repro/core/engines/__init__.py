@@ -1,0 +1,21 @@
+"""Execution engines for VCProg programs.
+
+Each engine realizes the *same* Algorithm-1 semantics with a different
+dataflow — the JAX analogue of the paper's Giraph/GraphX/Gemini backends:
+
+  pregel    push-style: emissions evaluated on the out-edge (src-sorted)
+            layout, scattered (permuted) to dst order, segment-combined.
+  gas       gather-apply-scatter: emissions materialized into an E-sized
+            edge-message store (GAS memory profile), then gathered.
+  pushpull  Gemini-style adaptive: lax.cond between sparse push and dense
+            pull on frontier density.
+  callback  execution-environment-isolation analogue: the user's Python
+            methods run on the HOST via jax.pure_callback (the paper's
+            IPC boundary); dataflow is dense pull.
+  distributed  shard_map multi-device engine (all-gather pull, ring-
+            pipelined pull, or all-to-all push).
+
+"Write once, run anywhere": any VCProgram runs on every engine unmodified,
+and tests assert bit-identical results.
+"""
+from .common import ENGINES, prepare_device_graph, run_vcprog  # noqa: F401

@@ -1,0 +1,68 @@
+"""Execution-environment-isolation engine (paper §IV-C analogue).
+
+The paper lets JVM/C++ engines call Python UDFs through an IPC client/server
+pair; every UDF invocation crosses a process boundary. The TPU analogue of
+that boundary is the host↔device hop: this engine executes the user's
+VCProg methods ON THE HOST via `jax.pure_callback`, from inside the
+compiled iteration loop. Each iteration pays (a) device→host transfer of
+operands, (b) host-side eager execution of the UDF batch, (c) host→device
+transfer of results — the cost structure of the paper's IPC mechanism
+(batched per phase rather than per call; see DESIGN.md §2).
+
+The paper's *zero-copy* optimization corresponds to the other engines,
+where the UDFs are traced into XLA and the boundary disappears entirely.
+`benchmarks/bench_ipc.py` reproduces Fig. 8d with this pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import records, vcprog
+from .common import register
+from .pushpull import pull_emit_and_combine
+
+
+def _as_shapes(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+@register("callback")
+class CallbackEngine:
+    def init_extra(self, gdev, program):
+        return ()
+
+    # Phase 2 on the host --------------------------------------------------
+    def compute_phase(self, gdev, program, vprops, inbox, process_mask, it):
+        def host(vp, ib, mask, it_):
+            new_props, is_active = jax.vmap(
+                program.vertex_compute, in_axes=(0, 0, None))(vp, ib, int(it_))
+            vp2 = records.tree_where(jnp.asarray(mask), new_props, vp)
+            act = jnp.asarray(mask) & jnp.asarray(is_active).astype(bool)
+            return jax.tree.map(np.asarray, (vp2, act))
+
+        out_shapes = (_as_shapes(vprops),
+                      jax.ShapeDtypeStruct(process_mask.shape, jnp.bool_))
+        vprops, active = jax.pure_callback(
+            host, out_shapes, vprops, inbox, process_mask, it)
+        return vprops, active
+
+    # Phase 3 + Phase 1 on the host ----------------------------------------
+    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+                         use_kernel):
+        V = gdev["num_vertices"]
+
+        def host(vp, act, src, dst, eprops):
+            g = {"src": jnp.asarray(src), "dst": jnp.asarray(dst),
+                 "eprops": eprops, "num_vertices": V}
+            inbox, has_msg = pull_emit_and_combine(
+                g, program, vp, jnp.asarray(act), empty, use_kernel=False)
+            return jax.tree.map(np.asarray, (inbox, has_msg))
+
+        inbox_shape = _as_shapes(records.tree_tile(empty, V))
+        out_shapes = (inbox_shape, jax.ShapeDtypeStruct((V,), jnp.bool_))
+        inbox, has_msg = jax.pure_callback(
+            host, out_shapes, vprops, active, gdev["src"], gdev["dst"],
+            gdev["eprops"])
+        return inbox, has_msg, extra

@@ -1,0 +1,137 @@
+"""Engine-agnostic driver: device graph prep + Algorithm-1 loop runner."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import records, vcprog
+from ..graph import PropertyGraph
+
+
+def prepare_device_graph(g: PropertyGraph) -> Dict[str, Any]:
+    """Host→device conversion of the canonical + src-sorted edge layouts."""
+    src_s, dst_s, eprops_s = g.src_sorted()
+    inv_csc = np.empty_like(g.csc_perm)
+    inv_csc[g.csc_perm] = np.arange(g.csc_perm.shape[0])
+    return {
+        "num_vertices": int(g.num_vertices),
+        "num_edges": int(g.num_edges),
+        "src": jnp.asarray(g.src),
+        "dst": jnp.asarray(g.dst),
+        "eprops": jax.tree.map(jnp.asarray, g.edge_props),
+        "src_s": jnp.asarray(src_s),
+        "dst_s": jnp.asarray(dst_s),
+        "eprops_s": jax.tree.map(jnp.asarray, eprops_s),
+        # canonical -> src-sorted position (scatter emissions back to dst order)
+        "inv_csc": jnp.asarray(inv_csc),
+        "out_degree": jnp.asarray(g.out_degree),
+        "in_degree": jnp.asarray(g.in_degree),
+        "vprops_in": jax.tree.map(jnp.asarray, g.vertex_props),
+    }
+
+
+def _run_compiled(program, gdev, max_iter: int, engine, use_kernel: bool):
+    V = gdev["num_vertices"]
+    empty = jax.tree.map(jnp.asarray, program.empty_message())
+
+    vprops0 = vcprog.init_vertices(program, gdev["vprops_in"],
+                                   gdev["out_degree"], V)
+    inbox0 = records.tree_tile(empty, V)
+    active0 = jnp.ones((V,), bool)
+    has_msg0 = jnp.zeros((V,), bool)
+    extra0 = engine.init_extra(gdev, program)
+
+    compute_override = getattr(engine, "compute_phase", None)
+
+    def step(it, vprops, active, inbox, has_msg, extra):
+        process = active | has_msg
+        if compute_override is not None:
+            vprops, active = compute_override(gdev, program, vprops, inbox,
+                                              process, it)
+        else:
+            vprops, active = vcprog.compute_phase(program, vprops, inbox,
+                                                  process, it)
+        inbox, has_msg, extra = engine.emit_and_combine(
+            gdev, program, vprops, active, extra, empty, use_kernel)
+        return vprops, active, inbox, has_msg, extra
+
+    state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
+                                   has_msg0, extra0), max_iter)
+    final_it, vprops, active, _, _, _ = state
+    return vprops, final_it - 1, jnp.sum(active)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_runner(engine_name: str, program_key, max_iter: int,
+                   use_kernel: bool, V: int, E: int):
+    from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
+    engine = ENGINES[engine_name]
+    program = program_key.program
+
+    def run(gdev_arrays):
+        gdev = dict(gdev_arrays)
+        gdev["num_vertices"] = V
+        gdev["num_edges"] = E
+        return _run_compiled(program, gdev, max_iter, engine, use_kernel)
+
+    return jax.jit(run)
+
+
+class _ProgramKey:
+    """Hashable wrapper keying the jit cache on program *semantics*
+    (class + constructor attributes), so repeated operator calls — which
+    build fresh program objects — reuse the compiled runner instead of
+    recompiling (a fresh PageRankProgram per call cost ~0.8 s each)."""
+
+    def __init__(self, program):
+        self.program = program
+        try:
+            attrs = tuple(sorted(program.__dict__.items()))
+            hash(attrs)
+            self._key = (type(program), attrs)
+        except TypeError:
+            self._key = (type(program), id(program))
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, _ProgramKey) and other._key == self._key
+
+
+def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
+               engine: str = "pushpull", use_kernel: bool = False,
+               gdev: Dict[str, Any] | None = None):
+    """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
+
+    This is the single-device path; `repro.core.engines.distributed` provides
+    the shard_map multi-device path with identical semantics.
+    """
+    if engine == "distributed":
+        from . import distributed
+        return distributed.run_vcprog_distributed(program, graph, max_iter)
+    if gdev is None:
+        gdev = prepare_device_graph(graph)
+    arrays = {k: v for k, v in gdev.items()
+              if k not in ("num_vertices", "num_edges")}
+    runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
+                            bool(use_kernel), gdev["num_vertices"],
+                            gdev["num_edges"])
+    vprops, iters, num_active = runner(arrays)
+    return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}
+
+
+# Registered by the engine modules at import time (see package __init__).
+ENGINES: Dict[str, Any] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        ENGINES[name] = cls()
+        cls.name = name
+        return cls
+    return deco

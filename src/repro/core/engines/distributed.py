@@ -1,0 +1,376 @@
+"""Distributed VCProg engine: shard_map over a TPU mesh.
+
+The graph is partitioned into P contiguous vertex ranges (Gemini-style
+chunking, core/graph.py). Each device owns one range: its vertex
+properties, its in-edges (bucketed by the *owner part of their src*), and
+its slice of the Algorithm-1 state. One iteration is the dense-pull
+dataflow (emissions evaluated on in-edges), with two communication
+schedules for reading remote source properties:
+
+  allgather  baseline: `lax.all_gather` the full vertex-property array,
+             then scan the P src buckets locally. Simple; memory
+             O(V · prop_bytes) per device.
+  ring       pipelined: vertex-property slices rotate around the ring via
+             `lax.ppermute` while the previous bucket computes — the
+             compute/communication overlap the paper lists as future work
+             (§VI "organize RPC invocations in a pipeline manner").
+             Memory O(V/P), wire bytes identical, latency hidden.
+
+Semantics are identical to the single-device engines (tests assert
+equality); the user program is the same VCProgram object — cross-platform
+execution in the paper's sense, where the "platform" here is the mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import records, vcprog
+from ..graph import PropertyGraph, partition_graph
+
+AXIS = "graph"
+
+
+# ---------------------------------------------------------------------------
+# Host-side: partition -> device arrays (leading dim P, sharded over AXIS)
+# ---------------------------------------------------------------------------
+
+def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
+    part = partition_graph(g, num_parts)
+    Pn, v_pp = part.num_parts, part.v_per_part
+    V_pad = Pn * v_pp
+
+    # pad vertex-level arrays to V_pad and reshape to [P, v_pp]
+    def pad_v(a, fill=0):
+        a = np.asarray(a)
+        out = np.full((V_pad,) + a.shape[1:], fill, a.dtype)
+        out[:g.num_vertices] = a
+        return out.reshape((Pn, v_pp) + a.shape[1:])
+
+    eprops = {k: np.asarray(v)[part.edge_prop_idx]
+              for k, v in g.edge_props.items()}
+    src_local = part.edge_src % v_pp if v_pp else part.edge_src
+
+    # The [P(dst part), B(src-part bucket), L] layout transposes into the
+    # push engine's [P(src part), B(dst-part bucket), L] view for free —
+    # within-bucket dst order is preserved (segment ops stay valid).
+    return {
+        "num_parts": Pn,
+        "v_per_part": v_pp,
+        "num_vertices": g.num_vertices,
+        # [P, B=P, L] edge structure: dst part -> (src-owner bucket, slot)
+        "edge_src_local": src_local.astype(np.int32),
+        "edge_dst_local": part.edge_dst_local.astype(np.int32),
+        "edge_src_global": part.edge_src.astype(np.int32),
+        "edge_dst_global": (part.edge_dst_local
+                            + part.v_start[:, None, None]).astype(np.int32),
+        "edge_mask": part.edge_mask,
+        "eprops": eprops,          # [P, B, L, ...]
+        "out_degree": pad_v(g.out_degree),
+        "vprops_in": {k: pad_v(v) for k, v in g.vertex_props.items()},
+        "vertex_valid": pad_v(np.ones(g.num_vertices, bool)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Device-side iteration (runs inside shard_map; all args are LOCAL slices)
+# ---------------------------------------------------------------------------
+
+def _bucket_combine(program, empty, inbox, has_msg, msgs, valid, dst_local,
+                    v_pp):
+    """Merge one bucket's emissions into the local inbox (monoid merge)."""
+    b_inbox, b_has = vcprog.segment_combine(
+        program, msgs, dst_local, valid, v_pp, empty)
+    merged = jax.vmap(program.merge_message)(inbox, b_inbox)
+    inbox = records.tree_where(b_has & has_msg, merged,
+                               records.tree_where(b_has, b_inbox, inbox))
+    return inbox, has_msg | b_has
+
+
+def _emit_bucket(program, src_props_part, active_part, bucket):
+    """Evaluate emissions for one src-owner bucket of local in-edges."""
+    src_p = records.tree_gather(src_props_part, bucket["src_local"])
+    is_emit, msgs = jax.vmap(program.emit_message)(
+        bucket["src_global"], bucket["dst_global"], src_p, bucket["eprops"])
+    valid = (is_emit.astype(bool) & bucket["mask"]
+             & active_part[bucket["src_local"]])
+    return msgs, valid
+
+
+def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
+                          num_parts: int, schedule: str = "ring",
+                          unroll_buckets: bool = False,
+                          skip_buckets: bool = False):
+    """One Algorithm-1 iteration as a shard_map-able local function.
+
+    Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
+    [B=P, L, ...] for this device's dst range. Returns updated local state
+    + global num_active.
+    """
+    empty = None  # bound lazily inside (needs jnp)
+
+    def local_step(it, vprops, active, inbox, has_msg, edges):
+        empty = jax.tree.map(jnp.asarray, program.empty_message())
+        my = jax.lax.axis_index(AXIS)
+
+        # Phase 2: vertex_compute on the local slice
+        process = active | has_msg
+        vprops, active = vcprog.compute_phase(program, vprops, inbox,
+                                              process, it)
+
+        # Phases 3+1: emit along in-edges, reading remote src props
+        inbox0 = records.tree_tile(empty, v_pp)
+        has0 = jnp.zeros((v_pp,), bool)
+
+        def bucket_at(b):
+            return {
+                "src_local": edges["edge_src_local"][b],
+                "src_global": edges["edge_src_global"][b],
+                "dst_global": edges["edge_dst_global"][b],
+                "dst_local": edges["edge_dst_local"][b],
+                "mask": edges["edge_mask"][b],
+                "eprops": jax.tree.map(lambda a: a[b], edges["eprops"]),
+            }
+
+        if skip_buckets:
+            # cost-calibration variant: everything EXCEPT the bucket loop
+            # (launch/graph_job.py solves cost = outside + P·body from the
+            # pair of lowers, because a lax.scan body is cost-counted once).
+            # The allgather schedule's gather is per-ITERATION, not
+            # per-bucket, so keep it alive here (prevents DCE) to land in
+            # the `outside` term.
+            inbox, has_msg = inbox0, has0
+            if schedule == "allgather":
+                all_vp = jax.lax.all_gather(vprops, AXIS)
+                all_act = jax.lax.all_gather(active, AXIS)
+                alive = jnp.sum(all_act) < 0
+                for leaf in jax.tree.leaves(all_vp):
+                    alive |= jnp.isnan(jnp.sum(leaf.astype(jnp.float32)))
+                has_msg = has_msg | alive
+            elif schedule == "push":
+                # keep the per-iteration exchange+fold in the outside term;
+                # values must be data-DEPENDENT or XLA constant-folds the
+                # all_to_all away and the calibration subtraction breaks
+                tau = jnp.sum(active.astype(jnp.int32)) * 0
+                partials = records.tree_tile(empty, num_parts * v_pp)
+                partials = jax.tree.map(
+                    lambda a: (a + tau.astype(a.dtype)
+                               if a.dtype != jnp.bool_
+                               else a | (tau > 0)).reshape(
+                        (num_parts, v_pp) + a.shape[1:]),
+                    partials)
+                phas = jnp.zeros((num_parts, v_pp), bool) | (tau > 0)
+                ex = jax.tree.map(
+                    lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
+                                                 concat_axis=0),
+                    partials)
+                exh = jax.lax.all_to_all(phas, AXIS, split_axis=0,
+                                         concat_axis=0)
+
+                def fold0(carry, x):
+                    ib, hm = carry
+                    part, ph = x
+                    merged = jax.vmap(program.merge_message)(ib, part)
+                    ib = records.tree_where(
+                        ph & hm, merged, records.tree_where(ph, part, ib))
+                    return (ib, hm | ph), None
+
+                (inbox, has_msg), _ = jax.lax.scan(fold0, (inbox0, has0),
+                                                   (ex, exh))
+        elif schedule == "allgather":
+            all_vp = jax.lax.all_gather(vprops, AXIS)       # [P, v_pp, ...]
+            all_act = jax.lax.all_gather(active, AXIS)
+
+            def body(carry, b):
+                inbox, has_msg = carry
+                bk = bucket_at(b)
+                msgs, valid = _emit_bucket(
+                    program, records.tree_row(all_vp, b), all_act[b], bk)
+                inbox, has_msg = _bucket_combine(
+                    program, empty, inbox, has_msg, msgs, valid,
+                    bk["dst_local"], v_pp)
+                return (inbox, has_msg), None
+
+            if unroll_buckets:
+                # python loop: every bucket appears in the HLO, so the
+                # dry-run's cost_analysis counts all P buckets (a lax.scan
+                # body is counted once regardless of trip count)
+                carry = (inbox0, has0)
+                for b in range(num_parts):
+                    carry, _ = body(carry, jnp.int32(b))
+                inbox, has_msg = carry
+            else:
+                (inbox, has_msg), _ = jax.lax.scan(
+                    body, (inbox0, has0), jnp.arange(num_parts))
+        elif schedule == "ring":
+            perm = [(i, (i + 1) % num_parts) for i in range(num_parts)]
+
+            def body(carry, r):
+                inbox, has_msg, vp_rot, act_rot = carry
+                b = (my - r) % num_parts        # whose props we hold now
+                bk = bucket_at(b)
+                msgs, valid = _emit_bucket(program, vp_rot, act_rot, bk)
+                inbox, has_msg = _bucket_combine(
+                    program, empty, inbox, has_msg, msgs, valid,
+                    bk["dst_local"], v_pp)
+                # rotate towards the next neighbour (overlaps with compute)
+                vp_rot = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, AXIS, perm), vp_rot)
+                act_rot = jax.lax.ppermute(act_rot, AXIS, perm)
+                return (inbox, has_msg, vp_rot, act_rot), None
+
+            if unroll_buckets:
+                carry = (inbox0, has0, vprops, active)
+                for r in range(num_parts):
+                    carry, _ = body(carry, jnp.int32(r))
+                inbox, has_msg, _, _ = carry
+            else:
+                (inbox, has_msg, _, _), _ = jax.lax.scan(
+                    body, (inbox0, has0, vprops, active),
+                    jnp.arange(num_parts))
+        elif schedule == "push":
+            # §Perf (Gemini push mode): src props are LOCAL; combine
+            # per-dst-part partial inboxes locally, exchange them with ONE
+            # all_to_all of message-width data, then monoid-fold the P
+            # partials. Wire = V·msg_bytes (vs the ring's V·prop_bytes) and
+            # one collective launch instead of P permute steps.
+            # edges here are the transposed (src-part major) view.
+            def part_body(carry, b):
+                inbox_b, has_b = carry
+                bk = bucket_at(b)
+                msgs, valid = _emit_bucket(program, vprops, active, bk)
+                one, oneh = vcprog.segment_combine(
+                    program, msgs, bk["dst_local"], valid, v_pp, empty)
+                return carry, (one, oneh)
+
+            _, (partials, phas) = jax.lax.scan(
+                part_body, (inbox0, has0), jnp.arange(num_parts))
+            # partials: [P, v_pp, ...] — row b = my messages for part b
+            ex = jax.tree.map(
+                lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
+                                             concat_axis=0, tiled=False),
+                partials)
+            exh = jax.lax.all_to_all(phas, AXIS, split_axis=0,
+                                     concat_axis=0, tiled=False)
+
+            def fold(carry, x):
+                inbox, has_msg = carry
+                part, ph = x
+                merged = jax.vmap(program.merge_message)(inbox, part)
+                inbox = records.tree_where(
+                    ph & has_msg, merged,
+                    records.tree_where(ph, part, inbox))
+                return (inbox, has_msg | ph), None
+
+            (inbox, has_msg), _ = jax.lax.scan(fold, (inbox0, has0),
+                                               (ex, exh))
+        else:
+            raise ValueError(schedule)
+
+        num_active = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), AXIS)
+        num_msg = jax.lax.psum(jnp.sum(has_msg.astype(jnp.int32)), AXIS)
+        return vprops, active, inbox, has_msg, num_active + num_msg
+
+    return local_step
+
+
+def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
+                            num_parts: int, mesh: Mesh, max_iter: int,
+                            schedule: str = "ring"):
+    """jit(shard_map(full Algorithm-1 loop)) over mesh axis AXIS."""
+    local_step = make_distributed_step(program, v_pp, num_parts, schedule)
+
+    vspec = P(AXIS)
+    espec = P(AXIS)
+
+    def local_loop(vprops, active, out_degree, valid, edges):
+        # shard_map slices keep a size-1 leading (part) dim; drop it locally
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        vprops, active, out_degree, valid, edges = map(
+            sq, (vprops, active, out_degree, valid, edges))
+        empty = jax.tree.map(jnp.asarray, program.empty_message())
+        v_start = jax.lax.axis_index(AXIS).astype(jnp.int32) * v_pp
+        vids = v_start + jnp.arange(v_pp, dtype=jnp.int32)
+        vprops = jax.vmap(program.init_vertex)(vids, out_degree, vprops)
+        inbox = records.tree_tile(empty, v_pp)
+        has_msg = jnp.zeros((v_pp,), bool)
+        active = active & valid
+
+        def cond(state):
+            it, _, _, _, _, n = state
+            return (it <= max_iter) & (n > 0)
+
+        def body(state):
+            it, vprops, active, inbox, has_msg, _ = state
+            vprops, active, inbox, has_msg, n = local_step(
+                it, vprops, active & valid, inbox, has_msg, edges)
+            active = active & valid
+            return (it + 1, vprops, active, inbox, has_msg, n)
+
+        # bootstrap count so iteration 1 always runs
+        n0 = jnp.int32(1)
+        state = (jnp.int32(1), vprops, active, inbox, has_msg, n0)
+        _, vprops, active, _, _, _ = jax.lax.while_loop(cond, body, state)
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return ex(vprops), ex(active)
+
+    smapped = jax.shard_map(
+        local_loop, mesh=mesh,
+        in_specs=(vspec, vspec, vspec, vspec, espec),
+        out_specs=(vspec, vspec),
+        check_vma=False)
+    return jax.jit(smapped)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
+                           max_iter: int, mesh: Optional[Mesh] = None,
+                           num_parts: Optional[int] = None,
+                           schedule: str = "ring"):
+    if mesh is None:
+        dev = np.asarray(jax.devices())
+        mesh = Mesh(dev.reshape(-1), (AXIS,))
+    Pn = num_parts or mesh.devices.size
+    assert Pn == mesh.devices.size, "one part per device"
+
+    sg = build_sharded_graph(graph, Pn)
+    v_pp = sg["v_per_part"]
+    if schedule == "push":
+        # transpose to the src-part-major view (src ids become local)
+        for k in ("edge_src_local", "edge_src_global", "edge_dst_global",
+                  "edge_dst_local", "edge_mask"):
+            sg[k] = np.swapaxes(sg[k], 0, 1)
+        sg["eprops"] = {k: np.swapaxes(v, 0, 1)
+                        for k, v in sg["eprops"].items()}
+        sg["edge_src_local"] = sg["edge_src_global"] % v_pp
+
+    runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
+                                     schedule)
+
+    # initial vertex props: the input props (init_vertex runs on device)
+    vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
+    active0 = jnp.ones((Pn, v_pp), bool)
+    edges = {
+        "edge_src_local": jnp.asarray(sg["edge_src_local"]),
+        "edge_src_global": jnp.asarray(sg["edge_src_global"]),
+        "edge_dst_global": jnp.asarray(sg["edge_dst_global"]),
+        "edge_dst_local": jnp.asarray(sg["edge_dst_local"]),
+        "edge_mask": jnp.asarray(sg["edge_mask"]),
+        "eprops": jax.tree.map(jnp.asarray, sg["eprops"]),
+    }
+    vprops, active = runner(vprops0, active0,
+                            jnp.asarray(sg["out_degree"]),
+                            jnp.asarray(sg["vertex_valid"]), edges)
+    V = sg["num_vertices"]
+    host = jax.tree.map(
+        lambda a: np.asarray(a).reshape((Pn * v_pp,) + a.shape[2:])[:V],
+        vprops)
+    return host, {"schedule": schedule, "num_parts": Pn}

@@ -1,0 +1,43 @@
+"""GAS engine (paper Fig. 4b — GraphX/PowerGraph style).
+
+SCATTER writes a message onto every out-edge's storage (`e.msg`); the next
+GATHER phase reads the per-edge store over in-edges and SUMs it with the
+user monoid. We materialize the E-sized edge-message store explicitly and
+carry it through the loop state — the GAS memory profile — then gather-
+combine from the store. Inactive sources store the empty message, exactly
+like Fig. 4b's `e.msg <- VP.emptyMessage()` default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import records, vcprog
+from .common import register
+
+
+@register("gas")
+class GASEngine:
+    def init_extra(self, gdev, program):
+        empty = jax.tree.map(jnp.asarray, program.empty_message())
+        E = gdev["num_edges"]
+        store = records.tree_tile(empty, E)  # e.msg, canonical order
+        valid = jnp.zeros((E,), bool)
+        return (store, valid)
+
+    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+                         use_kernel):
+        # SCATTER: evaluate emit for every edge (canonical order), store e.msg
+        src, dst = gdev["src"], gdev["dst"]
+        src_prop = records.tree_gather(vprops, src)
+        is_emit, msgs = jax.vmap(program.emit_message)(
+            src, dst, src_prop, gdev["eprops"])
+        valid = is_emit.astype(bool) & active[src]
+        empty_b = records.tree_tile(empty, gdev["num_edges"])
+        store = records.tree_where(valid, msgs, empty_b)
+
+        # GATHER + SUM: read e.msg over in-edges, combine with the monoid
+        inbox, has_msg = vcprog.segment_combine(
+            program, store, dst, valid, gdev["num_vertices"], empty,
+            use_kernel)
+        return inbox, has_msg, (store, valid)

@@ -1,0 +1,58 @@
+"""Push-Pull adaptive engine (paper Fig. 4c — Gemini style).
+
+Gemini switches between a sparse *push* mode (iterate out-edges of the
+active frontier) and a dense *pull* mode (iterate in-edges of every vertex)
+based on frontier density. The dense/sparse duality survives on TPU as a
+schedule choice under `lax.cond`:
+
+  sparse/push: the Pregel dataflow (out-edge order + permute + combine)
+  dense/pull : emissions evaluated directly on the in-edge (canonical)
+               layout — "DENSESIGNAL(v, inEdgeIterator)" — no permute.
+
+Heuristic (Gemini): push when `sum(out_degree[active]) < |E| / alpha`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import records, vcprog
+from .common import register
+
+
+def pull_emit_and_combine(gdev, program, vprops, active, empty, use_kernel):
+    """Dense pull: evaluate emit on in-edge order; combine in place."""
+    src, dst = gdev["src"], gdev["dst"]
+    src_prop = records.tree_gather(vprops, src)
+    is_emit, msgs = jax.vmap(program.emit_message)(
+        src, dst, src_prop, gdev["eprops"])
+    valid = is_emit.astype(bool) & active[src]
+    return vcprog.segment_combine(program, msgs, dst, valid,
+                                  gdev["num_vertices"], empty, use_kernel)
+
+
+@register("pushpull")
+class PushPullEngine:
+    alpha: float = 20.0
+
+    def init_extra(self, gdev, program):
+        return ()
+
+    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+                         use_kernel):
+        from .pregel import PregelEngine  # reuse the push dataflow
+
+        active_out_edges = jnp.sum(jnp.where(active, gdev["out_degree"], 0))
+        use_push = active_out_edges < (gdev["num_edges"] / self.alpha)
+
+        def push(_):
+            inbox, has_msg, _ = PregelEngine().emit_and_combine(
+                gdev, program, vprops, active, (), empty, use_kernel)
+            return inbox, has_msg
+
+        def pull(_):
+            return pull_emit_and_combine(gdev, program, vprops, active,
+                                         empty, use_kernel)
+
+        inbox, has_msg = jax.lax.cond(use_push, push, pull, operand=None)
+        return inbox, has_msg, extra

@@ -1,0 +1,256 @@
+"""Native operators (paper §IV-A "native operator module").
+
+Each frequently-used operator is provided as a pre-built VCProg program, so
+every operator runs on every engine by construction — the strongest form of
+the paper's "natively implements every operator for every system". Every
+API takes an `engine=` parameter exactly like the paper's Fig. 3.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import vcprog
+from .engines import run_vcprog
+from .graph import PropertyGraph
+
+# practical +inf for min-monoids in f32 (python float: creating a jnp
+# constant at import would initialize the backend before the dry-run can
+# set --xla_force_host_platform_device_count)
+INF = float(3.4e38)
+
+
+# ---------------------------------------------------------------------------
+# PageRank (paper Fig. 8 "PR")
+# ---------------------------------------------------------------------------
+
+class PageRankProgram(vcprog.VCProgram):
+    """Iteration-synchronous PageRank with damping; runs exactly
+    `num_iters` rounds (all vertices stay active until then)."""
+
+    monoid = "sum"
+
+    def __init__(self, num_vertices: int, num_iters: int, damping: float = 0.85):
+        self.num_vertices = num_vertices
+        self.num_iters = num_iters
+        self.damping = damping
+
+    def init_vertex(self, vid, out_degree, vprop):
+        n = jnp.float32(self.num_vertices)
+        return {"rank": jnp.float32(1.0) / n,
+                "out_degree": out_degree.astype(jnp.float32)}
+
+    def empty_message(self):
+        return {"rank": jnp.float32(0.0)}
+
+    def merge_message(self, m1, m2):
+        return {"rank": m1["rank"] + m2["rank"]}
+
+    def vertex_compute(self, prop, msg, it):
+        n = jnp.float32(self.num_vertices)
+        new_rank = jnp.where(
+            it == 1,
+            prop["rank"],  # round 1: no messages yet, keep the uniform init
+            (1.0 - self.damping) / n + self.damping * msg["rank"])
+        is_active = it < self.num_iters
+        return {"rank": new_rank, "out_degree": prop["out_degree"]}, is_active
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        deg = jnp.maximum(src_prop["out_degree"], 1.0)
+        return jnp.bool_(True), {"rank": src_prop["rank"] / deg}
+
+
+def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
+             engine: str = "pushpull", use_kernel: bool = False):
+    prog = PageRankProgram(graph.num_vertices, num_iters, damping)
+    vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
+                              use_kernel=use_kernel)
+    return np.asarray(vprops["rank"]), info
+
+
+# ---------------------------------------------------------------------------
+# Single-source shortest path (paper Fig. 3 demo, Bellman-Ford)
+# ---------------------------------------------------------------------------
+
+class SSSPProgram(vcprog.VCProgram):
+    monoid = "min"
+
+    def __init__(self, root: int):
+        self.root = root
+
+    def init_vertex(self, vid, out_degree, vprop):
+        dist = jnp.where(vid == self.root, jnp.float32(0.0), INF)
+        return {"vid": vid, "distance": dist}
+
+    def empty_message(self):
+        return {"distance": INF}
+
+    def merge_message(self, m1, m2):
+        return {"distance": jnp.minimum(m1["distance"], m2["distance"])}
+
+    def vertex_compute(self, prop, msg, it):
+        better = msg["distance"] < prop["distance"]
+        new_dist = jnp.minimum(prop["distance"], msg["distance"])
+        # round 1 (paper demo's `iter == -1` clause): only the root activates
+        is_active = jnp.where(it == 1, prop["vid"] == self.root, better)
+        return {"vid": prop["vid"], "distance": new_dist}, is_active
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        w = edge_prop.get("weight", jnp.float32(1.0))
+        reachable = src_prop["distance"] < INF
+        return reachable, {"distance": src_prop["distance"] + w}
+
+
+def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
+         engine: str = "pushpull", use_kernel: bool = False):
+    prog = SSSPProgram(root)
+    vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
+                              use_kernel=use_kernel)
+    dist = np.asarray(vprops["distance"])
+    return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
+
+
+# ---------------------------------------------------------------------------
+# Connected components (label propagation; paper Fig. 8 "CC")
+# ---------------------------------------------------------------------------
+
+class CCProgram(vcprog.VCProgram):
+    monoid = "min"
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"label": vid.astype(jnp.int32)}
+
+    def empty_message(self):
+        return {"label": jnp.int32(2**31 - 1)}
+
+    def merge_message(self, m1, m2):
+        return {"label": jnp.minimum(m1["label"], m2["label"])}
+
+    def vertex_compute(self, prop, msg, it):
+        better = msg["label"] < prop["label"]
+        new_label = jnp.minimum(prop["label"], msg["label"])
+        is_active = jnp.where(it == 1, jnp.bool_(True), better)
+        return {"label": new_label}, is_active
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return jnp.bool_(True), {"label": src_prop["label"]}
+
+
+def connected_components(graph: PropertyGraph, max_iter: int = 200,
+                         engine: str = "pushpull", use_kernel: bool = False):
+    prog = CCProgram()
+    vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
+                              use_kernel=use_kernel)
+    return np.asarray(vprops["label"]), info
+
+
+# ---------------------------------------------------------------------------
+# BFS depth
+# ---------------------------------------------------------------------------
+
+class BFSProgram(vcprog.VCProgram):
+    monoid = "min"
+    BIG = 2**31 - 1  # python int (no backend init at import)
+
+    def __init__(self, root: int):
+        self.root = root
+
+    def init_vertex(self, vid, out_degree, vprop):
+        depth = jnp.where(vid == self.root, jnp.int32(0), self.BIG)
+        return {"vid": vid, "depth": depth}
+
+    def empty_message(self):
+        return {"depth": self.BIG}
+
+    def merge_message(self, m1, m2):
+        return {"depth": jnp.minimum(m1["depth"], m2["depth"])}
+
+    def vertex_compute(self, prop, msg, it):
+        better = msg["depth"] < prop["depth"]
+        new_depth = jnp.minimum(prop["depth"], msg["depth"])
+        is_active = jnp.where(it == 1, prop["vid"] == self.root, better)
+        return {"vid": prop["vid"], "depth": new_depth}, is_active
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        reachable = src_prop["depth"] < self.BIG
+        return reachable, {"depth": src_prop["depth"] + 1}
+
+
+def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
+        engine: str = "pushpull", use_kernel: bool = False):
+    prog = BFSProgram(root)
+    vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
+                              use_kernel=use_kernel)
+    depth = np.asarray(vprops["depth"]).astype(np.int64)
+    return np.where(depth >= 2**31 - 1, -1, depth), info
+
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank (beyond the paper's operator set; same VCProg base)
+# ---------------------------------------------------------------------------
+
+class PersonalizedPageRankProgram(PageRankProgram):
+    """Random-walk-with-restart mass concentrated on a source vertex."""
+
+    def __init__(self, num_vertices: int, num_iters: int, source: int,
+                 damping: float = 0.85):
+        super().__init__(num_vertices, num_iters, damping)
+        self.source = source
+
+    def init_vertex(self, vid, out_degree, vprop):
+        r = jnp.where(vid == self.source, jnp.float32(1.0), jnp.float32(0.0))
+        return {"rank": r, "vid": vid,
+                "out_degree": out_degree.astype(jnp.float32)}
+
+    def vertex_compute(self, prop, msg, it):
+        restart = jnp.where(prop["vid"] == self.source, 1.0, 0.0)
+        new_rank = jnp.where(
+            it == 1, prop["rank"],
+            (1.0 - self.damping) * restart + self.damping * msg["rank"])
+        return {"rank": new_rank, "vid": prop["vid"],
+                "out_degree": prop["out_degree"]}, it < self.num_iters
+
+
+def personalized_pagerank(graph: PropertyGraph, source: int,
+                          num_iters: int = 20, damping: float = 0.85,
+                          engine: str = "pushpull"):
+    prog = PersonalizedPageRankProgram(graph.num_vertices, num_iters,
+                                       source, damping)
+    vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine)
+    return np.asarray(vprops["rank"]), info
+
+
+# ---------------------------------------------------------------------------
+# Degree count (trivial operator; one round)
+# ---------------------------------------------------------------------------
+
+class DegreeProgram(vcprog.VCProgram):
+    monoid = "sum"
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"out_degree": out_degree.astype(jnp.int32),
+                "in_degree": jnp.int32(0)}
+
+    def empty_message(self):
+        return {"one": jnp.int32(0)}
+
+    def merge_message(self, m1, m2):
+        return {"one": m1["one"] + m2["one"]}
+
+    def vertex_compute(self, prop, msg, it):
+        return {"out_degree": prop["out_degree"],
+                "in_degree": jnp.where(it == 1, prop["in_degree"],
+                                       msg["one"])}, it < 2
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return jnp.bool_(True), {"one": jnp.int32(1)}
+
+
+def degrees(graph: PropertyGraph, engine: str = "pushpull"):
+    prog = DegreeProgram()
+    vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine)
+    return (np.asarray(vprops["out_degree"]),
+            np.asarray(vprops["in_degree"])), info

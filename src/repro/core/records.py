@@ -1,0 +1,81 @@
+"""Record utilities for VCProg property/message pytrees.
+
+A *record* is a pytree (typically a flat dict) of scalar jnp values — the
+unit the user's VCProg methods are written against (paper §III-B: vertex
+properties, edge properties and messages are records with a fixed schema).
+A *record batch* is the same pytree with a leading axis (vertices or edges).
+
+The engine `vmap`s user methods over record batches, preserving the paper's
+per-vertex programming illusion while executing dense TPU-friendly code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_gather(batch, idx):
+    """Gather rows `idx` from every leaf of a record batch."""
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), batch)
+
+
+def tree_where(mask, a, b):
+    """Row-wise select between two record batches; mask has the leading dim."""
+    def sel(x, y):
+        m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+        return jnp.where(m, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+def tree_tile(record, n):
+    """Tile a scalar record into a batch of n identical rows."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x)[None], (n,) + jnp.asarray(x).shape),
+        record,
+    )
+
+
+def tree_scatter_rows(batch, idx, rows):
+    """Write `rows` (a record batch) at positions `idx` of `batch`."""
+    return jax.tree.map(lambda a, r: a.at[idx].set(r), batch, rows)
+
+
+def tree_row(batch, i):
+    """Extract row i of a record batch as a scalar record."""
+    return jax.tree.map(lambda a: a[i], batch)
+
+
+def tree_concat(batches, axis=0):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=axis), *batches)
+
+
+def tree_zeros_like_batch(record, n):
+    return jax.tree.map(
+        lambda x: jnp.zeros((n,) + jnp.asarray(x).shape, jnp.asarray(x).dtype), record
+    )
+
+
+def tree_bytes(record):
+    """Per-record payload size in bytes (host-side; for roofline bookkeeping)."""
+    leaves = jax.tree.leaves(record)
+    return int(sum(np.prod(np.shape(x), dtype=np.int64) * np.dtype(jnp.asarray(x).dtype).itemsize
+                   for x in leaves))
+
+
+def tree_equal(a, b):
+    """Structural + numerical equality of two record batches (host-side bool)."""
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    if ta != tb:
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    if ta != tb:
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))

@@ -1,0 +1,204 @@
+"""VCProg — the paper's unified vertex-centric programming model (§III).
+
+Users subclass :class:`VCProgram` and implement the five abstract methods
+over *scalar records* (pytrees of jnp scalars). The framework vmaps them
+over vertices/edges and compiles the whole Algorithm-1 iteration with
+`lax.while_loop`; the user never sees distribution (criterion 2 of the
+paper's usability criteria).
+
+Laws the paper imposes (checked by hypothesis tests):
+  merge_message(a, b) == merge_message(b, a)               (commutative)
+  merge_message(a, merge_message(b, c))
+      == merge_message(merge_message(a, b), c)             (associative)
+  merge_message(a, empty_message()) == a                   (identity)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import records
+
+Record = Any  # pytree of scalars
+RecordBatch = Any  # pytree of arrays with a leading axis
+
+
+class VCProgram:
+    """Abstract base class — mirrors paper Fig. 2 exactly (snake_case)."""
+
+    #: optional fast-path hint: "sum" | "min" | "max" | "general".
+    #: "general" always works; the named monoids unlock segment-op /
+    #: Pallas fast paths. Correctness is engine-independent.
+    monoid: str = "general"
+
+    # -- Phase 0 (before iterations) --------------------------------------
+    def init_vertex(self, vid, out_degree, vprop) -> Record:
+        """Generate the initial property for each vertex."""
+        raise NotImplementedError
+
+    def empty_message(self) -> Record:
+        """The identity element of merge_message."""
+        raise NotImplementedError
+
+    # -- Phase 1 -----------------------------------------------------------
+    def merge_message(self, m1: Record, m2: Record) -> Record:
+        raise NotImplementedError
+
+    # -- Phase 2 -----------------------------------------------------------
+    def vertex_compute(self, vprop: Record, msg: Record, it) -> Tuple[Record, Any]:
+        """Returns (new_prop, is_active). `it` is the 1-based iteration."""
+        raise NotImplementedError
+
+    # -- Phase 3 -----------------------------------------------------------
+    def emit_message(self, src, dst, src_prop: Record, edge_prop: Record
+                     ) -> Tuple[Any, Record]:
+        """Returns (is_emit, msg) for the out-edge (src, dst)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Message combination under the user monoid
+# ---------------------------------------------------------------------------
+
+def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
+                     valid: jnp.ndarray, num_segments: int,
+                     empty: Record) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Generic segment-combine via a flagged associative scan.
+
+    Edges must be dst-sorted. Works for ANY associative+commutative
+    merge_message — the TPU-native replacement for scatter-combine.
+    """
+    E = dst.shape[0]
+    # identity-mask invalid emissions so they cannot contribute
+    empty_b = records.tree_tile(empty, E)
+    msgs = records.tree_where(valid, msgs, empty_b)
+
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), dst[1:] != dst[:-1]])
+
+    def comb(left, right):
+        fl, vl = left
+        fr, vr = right
+        merged = jax.vmap(program.merge_message)(vl, vr)
+        v = records.tree_where(fr, vr, merged)
+        return (fl | fr, v)
+
+    _, scanned = jax.lax.associative_scan(comb, (seg_start, msgs))
+
+    # inbox[v] = scanned value at the last in-edge of v (if any)
+    # find per-vertex last-edge index from the sorted dst array
+    idx = jnp.searchsorted(dst, jnp.arange(num_segments, dtype=dst.dtype),
+                           side="right") - 1
+    has_edge = idx >= jnp.searchsorted(dst, jnp.arange(num_segments, dtype=dst.dtype),
+                                       side="left")
+    idx = jnp.clip(idx, 0, E - 1)
+    inbox = records.tree_gather(scanned, idx)
+    empty_v = records.tree_tile(empty, num_segments)
+    inbox = records.tree_where(has_edge, inbox, empty_v)
+
+    has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                   num_segments=num_segments,
+                                   indices_are_sorted=True) > 0)
+    return inbox, has_msg
+
+
+def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
+                   valid: jnp.ndarray, num_segments: int,
+                   empty: Record) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Fast path for named elementwise monoids (sum/min/max on every field)."""
+    op = {"sum": jax.ops.segment_sum,
+          "min": jax.ops.segment_min,
+          "max": jax.ops.segment_max}[program.monoid]
+    E = dst.shape[0]
+    empty_b = records.tree_tile(empty, E)
+    msgs = records.tree_where(valid, msgs, empty_b)
+
+    def leaf(x, e):
+        out = op(x, dst, num_segments=num_segments, indices_are_sorted=True)
+        if program.monoid in ("min", "max"):
+            # segments with no edges return +/-inf-ish init; clamp to identity
+            has = jax.ops.segment_sum(jnp.ones_like(dst), dst,
+                                      num_segments=num_segments,
+                                      indices_are_sorted=True) > 0
+            has = has.reshape(has.shape + (1,) * (out.ndim - 1))
+            out = jnp.where(has, out, jnp.broadcast_to(e, out.shape).astype(out.dtype))
+        return out.astype(x.dtype)
+
+    empty_v = jax.tree.map(jnp.asarray, empty)
+    inbox = jax.tree.map(leaf, msgs, empty_v)
+    has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                   num_segments=num_segments,
+                                   indices_are_sorted=True) > 0)
+    return inbox, has_msg
+
+
+def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
+                    use_kernel: bool = False):
+    """Combine per-edge messages into per-vertex inboxes (dst-sorted edges).
+
+    use_kernel=True routes named monoids through the Pallas segment kernel
+    (MXU one-hot matmul for sum, masked VPU reduce for min/max).
+    """
+    if program.monoid in ("sum", "min", "max"):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            E = dst.shape[0]
+            empty_b = records.tree_tile(empty, E)
+            msgs_m = records.tree_where(valid, msgs, empty_b)
+            inbox = jax.tree.map(
+                lambda x: kops.segment_combine(x, dst, num_segments,
+                                               monoid=program.monoid),
+                msgs_m)
+            if program.monoid in ("min", "max"):
+                has = jax.ops.segment_sum(jnp.ones_like(dst), dst,
+                                          num_segments=num_segments,
+                                          indices_are_sorted=True) > 0
+                empty_v = records.tree_tile(empty, num_segments)
+                inbox = records.tree_where(has, inbox, empty_v)
+            has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                           num_segments=num_segments,
+                                           indices_are_sorted=True) > 0)
+            return inbox, has_msg
+        return _segment_named(program, msgs, dst, valid, num_segments, empty)
+    return _segment_general(program, msgs, dst, valid, num_segments, empty)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-1 driver (engine-agnostic part)
+# ---------------------------------------------------------------------------
+
+def init_vertices(program: VCProgram, graph_vprops, out_degree, num_vertices):
+    vids = jnp.arange(num_vertices, dtype=jnp.int32)
+    return jax.vmap(program.init_vertex)(vids, out_degree, graph_vprops)
+
+
+def compute_phase(program: VCProgram, vprops, inbox, process_mask, it):
+    """Phase 2 over all vertices, masked to the processed set."""
+    new_props, is_active = jax.vmap(program.vertex_compute,
+                                    in_axes=(0, 0, None))(vprops, inbox, it)
+    vprops = records.tree_where(process_mask, new_props, vprops)
+    active = process_mask & is_active.astype(bool)
+    return vprops, active
+
+
+def run_loop(step_fn: Callable, init_state, max_iter: int):
+    """`lax.while_loop` around one engine iteration.
+
+    state = (it, vprops, active, inbox, has_msg, extra)
+    Termination: it > max_iter OR previous round had zero active vertices
+    (paper Algorithm 1 line 17-18).
+    """
+
+    def cond(state):
+        it, _, active, _, has_msg, _ = state
+        return (it <= max_iter) & (jnp.sum(active) + jnp.sum(has_msg) > 0)
+
+    def body(state):
+        it, vprops, active, inbox, has_msg, extra = state
+        vprops, active, inbox, has_msg, extra = step_fn(
+            it, vprops, active, inbox, has_msg, extra)
+        return (it + 1, vprops, active, inbox, has_msg, extra)
+
+    return jax.lax.while_loop(cond, body, init_state)

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMDataset, TokenFileDataset, Prefetcher  # noqa: F401

@@ -1,0 +1,89 @@
+"""GPipe-style pipeline parallelism over a 'pipe' mesh axis.
+
+Not used by the required 512-chip mesh (data×model covers it), but provided
+and tested as the scale-out path beyond 2D meshes (1000+ nodes): stages hold
+layer shards; microbatches stream through a `lax.scan` whose steps
+`ppermute` activations to the next stage. Bubble fraction is the standard
+(S-1)/(M+S-1).
+
+Implementation: shard_map over the 'pipe' axis. Each device holds
+`params_stage` (its layers). The scan runs M + S - 1 ticks; tick t feeds
+microbatch t to stage 0, and stage s works on microbatch t - s.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_fwd(stage_fn: Callable, params_stage, x_mb, *, axis_name: str,
+                 num_stages: int):
+    """Run inside shard_map. x_mb [M, mb, ...] microbatched inputs (same on
+    every stage; only stage 0 consumes them). Returns [M, mb, ...] outputs
+    (valid on the last stage; others hold zeros)."""
+    M = x_mb.shape[0]
+    S = num_stages
+    stage = jax.lax.axis_index(axis_name)
+    ticks = M + S - 1
+
+    buf0 = jnp.zeros_like(x_mb[0])
+
+    def tick(carry, t):
+        inbound = carry
+        # stage 0 ingests microbatch t (if any); others take the permuted input
+        mb_idx = jnp.clip(t, 0, M - 1)
+        x_in = jnp.where(stage == 0, x_mb[mb_idx], inbound)
+        y = stage_fn(params_stage, x_in)
+        # push activations to the next stage (ring; last->0 discarded)
+        nxt = jax.lax.ppermute(
+            y, axis_name, [(i, (i + 1) % S) for i in range(S)])
+        # last stage records its output for microbatch t - (S-1)
+        out_idx = t - (S - 1)
+        return nxt, (out_idx, y)
+
+    _, (out_idx, ys) = jax.lax.scan(tick, buf0, jnp.arange(ticks))
+    # gather the last stage's outputs for valid ticks into [M, ...]
+    out = jnp.zeros_like(x_mb)
+    valid = out_idx >= 0
+
+    def place(out, i):
+        idx = jnp.clip(out_idx[i], 0, M - 1)
+        return jax.lax.cond(
+            valid[i],
+            lambda o: jax.lax.dynamic_update_slice(
+                o, ys[i][None], (idx,) + (0,) * (out.ndim - 1)),
+            lambda o: o, out)
+
+    out = jax.lax.fori_loop(0, ticks, lambda i, o: place(o, i), out)
+    return out
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, axis_name: str = "pipe",
+                      num_microbatches: int = 4):
+    """Wrap stage_fn(params_stage, x)->y into a pipelined function over the
+    mesh's `axis_name`. params are sharded stage-major on their leading dim."""
+    S = mesh.shape[axis_name]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+        check_vma=False)
+    def run(params_stacked, x):
+        params_stage = jax.tree.map(lambda a: a[0], params_stacked)
+        M = num_microbatches
+        mb = x.shape[0] // M
+        x_mb = x.reshape((M, mb) + x.shape[1:])
+        y_mb = pipeline_fwd(stage_fn, params_stage, x_mb,
+                            axis_name=axis_name, num_stages=S)
+        y = y_mb.reshape((M * mb,) + y_mb.shape[2:])
+        # only the last stage holds real outputs; broadcast them
+        stage = jax.lax.axis_index(axis_name)
+        y = jnp.where(stage == S - 1, y, jnp.zeros_like(y))
+        return jax.lax.psum(y, axis_name)
+
+    return run

@@ -1,0 +1,10 @@
+"""TPU Pallas kernels for the framework's compute hot-spots.
+
+  segment_reduce   Phase-1 message combine (the paper's scatter hot loop)
+                   as a blocked one-hot MXU matmul / masked VPU reduce
+  flash_attention  causal GQA flash attention for the LM substrate
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py holds the jit'd
+wrappers (interpret=True on CPU).
+"""
+from . import ops, ref  # noqa: F401

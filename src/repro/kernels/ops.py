@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with `interpret=True` — the
+kernel body runs in Python, validating the exact TPU code path; on TPU the
+same call sites compile to Mosaic. `interpret=None` means auto-detect.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_kernel
+from .segment_reduce import segment_combine_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def segment_combine(vals, seg_ids, num_segments: int, monoid: str = "sum",
+                    interpret=None, **block_kw):
+    """Segment combine of dst-sorted messages; vals [E] or [E, D]."""
+    squeeze = vals.ndim == 1
+    if squeeze:
+        vals = vals[:, None]
+    out = segment_combine_kernel(vals, seg_ids, num_segments, monoid=monoid,
+                                 interpret=_auto_interpret(interpret),
+                                 **block_kw)
+    return out[:, 0] if squeeze else out
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    sm_scale: float | None = None, interpret=None,
+                    **block_kw):
+    """Causal GQA flash attention; q [B,Hq,T,Dh], k/v [B,Hkv,S,Dh]."""
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  sm_scale=sm_scale,
+                                  interpret=_auto_interpret(interpret),
+                                  **block_kw)
+
+
+# re-export oracles for convenience
+segment_combine_ref = ref.segment_combine_ref
+mha_ref = ref.mha_ref

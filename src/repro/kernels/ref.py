@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+for the shape/dtype sweep tests and the jit fallback path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_IDENT = {"sum": 0.0, "min": 3.4e38, "max": -3.4e38}
+
+
+def segment_combine_ref(vals, seg_ids, num_segments: int, monoid: str = "sum"):
+    """vals [E, D], seg_ids [E] sorted -> [num_segments, D]."""
+    op = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+          "max": jax.ops.segment_max}[monoid]
+    out = op(vals, seg_ids, num_segments=num_segments,
+             indices_are_sorted=True)
+    if monoid in ("min", "max"):
+        has = jax.ops.segment_sum(jnp.ones_like(seg_ids), seg_ids,
+                                  num_segments=num_segments,
+                                  indices_are_sorted=True) > 0
+        if jnp.issubdtype(vals.dtype, jnp.integer):
+            info = jnp.iinfo(vals.dtype)
+            ident = info.max if monoid == "min" else info.min
+        else:
+            ident = _IDENT[monoid]
+        out = jnp.where(has[:, None], out, jnp.asarray(ident, out.dtype))
+    return out.astype(vals.dtype)
+
+
+def mha_ref(q, k, v, causal: bool = True, window: int | None = None,
+            sm_scale: float | None = None):
+    """Reference GQA attention. q [B,Hq,T,Dh], k/v [B,Hkv,S,Dh]."""
+    B, Hq, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = Dh ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid keys: softmax of all -inf -> uniform; zero them
+    any_valid = mask.any(axis=-1)
+    p = jnp.where(any_valid[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhts,bhsd->bhtd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,127 @@
+"""Blocked segment-combine Pallas kernel — the TPU-native rewrite of the
+paper's Phase-1 message merging (scatter-combine at dst).
+
+GPU systems scatter messages with atomics; on TPU the idiomatic form is a
+dense *one-hot matmul on the MXU* for sum-monoids and a masked VPU reduce
+for min/max. Edges arrive dst-sorted (the framework's canonical order), so
+each (segment-block × edge-block) grid cell is usually empty — we predicate
+the compute on block overlap (`@pl.when`), turning dst-sortedness into
+block-sparsity the TPU can skip.
+
+Layout: vals [E, D] (messages × payload), seg [E] (dst ids, sorted,
+padding rows carry the sentinel id == V_pad so they never hit a segment),
+out [V, D].
+
+Grid (nv, nd, ne), ne innermost ("arbitrary" = sequential accumulation);
+VMEM scratch acc [BV, BD] carries the partial combine across edge blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IDENT = {"sum": 0.0, "min": 3.4e38, "max": -3.4e38}
+
+
+def _kernel(seg_ref, vals_ref, out_ref, acc_ref, *, monoid: str,
+            block_v: int, n_e: int, ident: float):
+    iv = pl.program_id(0)
+    ie = pl.program_id(2)
+
+    @pl.when(ie == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+
+    seg = seg_ref[...]  # [BE] int32 (dst-sorted)
+    v_lo = iv * block_v
+
+    # dst-sortedness => this edge block touches segments [seg[0], seg[-1]];
+    # skip the whole block when it cannot overlap our segment rows.
+    overlap = (seg[-1] >= v_lo) & (seg[0] < v_lo + block_v)
+
+    @pl.when(overlap)
+    def _compute():
+        vals = vals_ref[...].astype(jnp.float32)  # [BE, BD]
+        seg_ids = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], block_v),
+                                           1) + v_lo
+        onehot = (seg[:, None] == seg_ids)  # [BE, BV]
+        if monoid == "sum":
+            # MXU path: out[v, d] += onehot[e, v]^T @ vals[e, d]
+            acc_ref[...] += jax.lax.dot_general(
+                onehot.astype(jnp.float32), vals,
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            # VPU path: masked elementwise reduce over the edge axis
+            masked = jnp.where(onehot[:, :, None], vals[:, None, :],
+                               jnp.float32(ident))
+            red = masked.min(axis=0) if monoid == "min" else masked.max(axis=0)
+            op = jnp.minimum if monoid == "min" else jnp.maximum
+            acc_ref[...] = op(acc_ref[...], red)
+
+    @pl.when(ie == n_e - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "monoid", "block_v", "block_e",
+                     "block_d", "interpret"))
+def segment_combine_kernel(vals, seg_ids, num_segments: int,
+                           monoid: str = "sum", block_v: int = 128,
+                           block_e: int = 512, block_d: int = 128,
+                           interpret: bool = False):
+    """vals [E, D] combined into [num_segments, D] under `monoid`.
+
+    seg_ids must be sorted ascending (dst-sorted canonical edge order).
+    """
+    E, D = vals.shape
+    if monoid != "sum":
+        block_e = min(block_e, 64)  # 3-D mask intermediate must fit VMEM
+    bv, be, bd = (min(block_v, _ceil_to(num_segments, 8)),
+                  min(block_e, _ceil_to(E, 8)), min(block_d, _ceil_to(D, 128)))
+
+    # dtype-appropriate monoid identity (int payloads use iinfo bounds)
+    if jnp.issubdtype(vals.dtype, jnp.integer):
+        info = jnp.iinfo(vals.dtype)
+        ident = {"sum": 0, "min": int(info.max), "max": int(info.min)}[monoid]
+    else:
+        ident = _IDENT[monoid]
+
+    E_pad = pl.cdiv(E, be) * be
+    V_pad = pl.cdiv(num_segments, bv) * bv
+    D_pad = pl.cdiv(D, bd) * bd
+
+    vals_p = jnp.pad(vals, ((0, E_pad - E), (0, D_pad - D)),
+                     constant_values=ident)
+    # sentinel id beyond every block's range => padded edges never combine
+    seg_p = jnp.pad(seg_ids.astype(jnp.int32), (0, E_pad - E),
+                    constant_values=jnp.int32(V_pad))
+
+    grid = (V_pad // bv, D_pad // bd, E_pad // be)
+    out = pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid, block_v=bv, n_e=grid[2],
+                          ident=float(ident)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be,), lambda iv, id_, ie: (ie,)),
+            pl.BlockSpec((be, bd), lambda iv, id_, ie: (ie, id_)),
+        ],
+        out_specs=pl.BlockSpec((bv, bd), lambda iv, id_, ie: (iv, id_)),
+        out_shape=jax.ShapeDtypeStruct((V_pad, D_pad), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bv, bd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name=f"segment_{monoid}",
+    )(seg_p, vals_p)
+    return out[:num_segments, :D]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return max(m, ((x + m - 1) // m) * m)

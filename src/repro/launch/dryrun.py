@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell against ShapeDtypeStruct inputs,
+print memory_analysis / cost_analysis, and emit the roofline terms
+(deliverable g) as JSON under experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init, and only the dry-run wants 512 placeholders.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, model_flops
+from repro.launch import roofline as RL
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _cell_model_flops(cfg, shape_name: str) -> float:
+    """6·N·D already includes fwd+bwd (train); inference is the 2·N·D
+    forward share."""
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        return model_flops(cfg, sh["global_batch"] * sh["seq_len"])
+    if sh["kind"] == "prefill":
+        return model_flops(cfg, sh["global_batch"] * sh["seq_len"]) / 3.0
+    return model_flops(cfg, sh["global_batch"]) / 3.0  # decode: 1 tok/seq
+
+
+def lower_cell(arch: str, shape: str, mesh, overrides: dict | None = None):
+    """Build the jitted step for one cell and lower against its templates."""
+    spec = SP.input_specs(arch, shape, overrides)
+    cfg = spec["cfg"]
+
+    from repro.train import step as TS
+
+    if spec["kind"] == "skip":
+        return None, spec
+    if spec["kind"] == "train":
+        _, jit_for = TS.build_train_step(cfg, mesh)
+        fn = jit_for(spec["state"], spec["batch"])
+        lowered = fn.lower(spec["state"], spec["batch"])
+    elif spec["kind"] == "prefill":
+        _, jit_for = TS.build_prefill_step(cfg, mesh)
+        fn = jit_for(spec["params"], spec["tokens"])
+        lowered = fn.lower(spec["params"], spec["tokens"])
+    else:  # decode
+        _, jit_for = TS.build_serve_step(cfg, mesh)
+        fn = jit_for(spec["params"], spec["tokens"], spec["state"])
+        lowered = fn.lower(spec["params"], spec["tokens"], spec["state"])
+    return lowered, spec
+
+
+def _cost_vector(compiled):
+    """(flops, hbm_bytes, wire_bytes) of one compiled program."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    colls = RL.parse_collectives(compiled.as_text())
+    wire = sum(d["wire_bytes"] for d in colls.values())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), wire, colls)
+
+
+def corrected_costs(arch: str, shape: str, mesh, overrides=None):
+    """XLA's cost_analysis counts a lax.scan body ONCE regardless of trip
+    count, so a scanned-layer model under-reports by ~num_layers. We lower
+    two small UNROLLED variants (1 and 2 pattern groups) and solve
+        cost(k groups) = outside + k·body
+    then extrapolate to the real depth (+ unrolled remainder layers)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    pat = cfg.block_pattern
+    P = len(pat)
+    n_groups = cfg.num_layers // P
+    remainder = cfg.layer_types[n_groups * P:]
+
+    def small(k_layers, pattern):
+        ov = dict(overrides or {}, num_layers=k_layers,
+                  block_pattern=tuple(pattern), scan_layers=False)
+        lowered, _ = lower_cell(arch, shape, mesh, ov)
+        return _cost_vector(lowered.compile())
+
+    c1 = small(P, pat)
+    c2 = small(2 * P, pat)
+    body = tuple(b - a for a, b in zip(c1[:3], c2[:3]))
+    outside = tuple(2 * a - b for a, b in zip(c1[:3], c2[:3]))
+    total = [o + n_groups * b for o, b in zip(outside, body)]
+    if remainder:
+        cr = small(len(remainder), remainder)
+        rem = tuple(r - o for r, o in zip(cr[:3], outside))
+        total = [t + r for t, r in zip(total, rem)]
+    return {"flops": max(total[0], 0.0), "hbm_bytes": max(total[1], 0.0),
+            "wire_bytes": max(total[2], 0.0),
+            "body_per_group": body, "outside": outside}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             overrides: dict | None = None, verbose: bool = True,
+             correct_costs: bool = True) -> dict:
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "chips": chips, "overrides": overrides or {}}
+    try:
+        with mesh:
+            lowered, spec = lower_cell(arch, shape, mesh, overrides)
+            if lowered is None:
+                result.update(status="SKIP", reason=spec["reason"])
+                return result
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            mem_d = {k: float(getattr(mem, k, 0) or 0) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")}
+            rf = RL.analyze(compiled, chips,
+                            _cell_model_flops(spec["cfg"], shape))
+            if correct_costs and spec["cfg"].scan_layers:
+                cc = corrected_costs(arch, shape, mesh, overrides)
+                rf = RL.Roofline(flops=cc["flops"],
+                                 hbm_bytes=cc["hbm_bytes"],
+                                 wire_bytes=cc["wire_bytes"], chips=chips,
+                                 model_flops=rf.model_flops,
+                                 collectives=rf.collectives)
+            result.update(status="OK", lower_s=t_lower, compile_s=t_compile,
+                          memory=mem_d, roofline=rf.to_dict())
+            if verbose:
+                per_dev = (mem_d["argument_size_in_bytes"]
+                           + mem_d["temp_size_in_bytes"]) / 1e9
+                print(f"[{arch} × {shape} × {mesh_kind}] OK "
+                      f"args+temp={per_dev:.2f} GB/dev "
+                      f"compute={rf.compute_s*1e3:.2f}ms "
+                      f"memory={rf.memory_s*1e3:.2f}ms "
+                      f"coll={rf.collective_s*1e3:.2f}ms "
+                      f"bottleneck={rf.bottleneck} "
+                      f"roofline_frac={rf.roofline_fraction:.3f}",
+                      flush=True)
+    except Exception as e:  # a failed cell is a bug in the system
+        result.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{arch} × {shape} × {mesh_kind}] FAIL: {e}", flush=True)
+    return result
+
+
+def save_result(res: dict, tag: str = ""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{res['arch']}__{res['shape']}__{res['mesh']}{tag}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(res, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. remat=dots)")
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the scan trip-count cost correction "
+                         "(compile-proof only; used for the multipod sweep)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                res = run_cell(arch, shape, mk, overrides or None,
+                               correct_costs=not args.no_correct
+                               and mk == "pod")
+                save_result(res, args.tag)
+                n_fail += res["status"] == "FAIL"
+    print(f"done; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

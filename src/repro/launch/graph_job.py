@@ -1,0 +1,203 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Graph-engine dry-run: lower + compile ONE Algorithm-1 iteration of the
+distributed VCProg engine at web scale on the production mesh, and derive
+its roofline terms — the graph-side counterpart of launch/dryrun.py.
+
+Scale: V = 2^28 vertices, E = 2^32 edges (≈14× uk-2002), lognormal-like
+padding factor 1.25. Per device (256 parts): 1M vertices, ~21M edge slots.
+
+    PYTHONPATH=src python -m repro.launch.graph_job --op pagerank \
+        --schedule ring --mesh pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.engines import distributed as D
+from repro.core.operators import PageRankProgram, SSSPProgram
+from repro.launch import roofline as RL
+
+SDS = jax.ShapeDtypeStruct
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _cost3(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    colls = RL.parse_collectives(compiled.as_text())
+    wire = sum(d["wire_bytes"] for d in colls.values())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), wire)
+
+V_SCALE = 1 << 28          # 268M vertices
+E_SCALE = 1 << 32          # 4.3B edges
+PAD = 1.25
+
+
+def graph_templates(num_parts: int, weighted: bool, prog):
+    v_pp = V_SCALE // num_parts
+    L = int(E_SCALE / (num_parts ** 2) * PAD)
+    L = -(-L // 128) * 128
+    Pn, B = num_parts, num_parts
+    edges = {
+        "edge_src_local": SDS((Pn, B, L), jnp.int32),
+        "edge_src_global": SDS((Pn, B, L), jnp.int32),
+        "edge_dst_global": SDS((Pn, B, L), jnp.int32),
+        "edge_dst_local": SDS((Pn, B, L), jnp.int32),
+        "edge_mask": SDS((Pn, B, L), jnp.bool_),
+        "eprops": ({"weight": SDS((Pn, B, L), jnp.float32)}
+                   if weighted else {}),
+    }
+    empty = jax.tree.map(jnp.asarray, prog.empty_message())
+    vprop0 = jax.eval_shape(lambda: jax.vmap(
+        lambda vid, deg: prog.init_vertex(vid, deg, {}))(
+        jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32)))
+    vprops = jax.tree.map(lambda x: SDS((Pn, v_pp) + x.shape[1:], x.dtype),
+                          vprop0)
+    inbox = jax.tree.map(lambda x: SDS((Pn, v_pp) + np.shape(x), x.dtype),
+                         empty)
+    return {
+        "v_pp": v_pp, "L": L,
+        "vprops": vprops,
+        "active": SDS((Pn, v_pp), jnp.bool_),
+        "inbox": inbox,
+        "has_msg": SDS((Pn, v_pp), jnp.bool_),
+        "edges": edges,
+    }
+
+
+def build_iteration(prog, v_pp, num_parts, mesh, schedule,
+                    skip_buckets=False):
+    """One Algorithm-1 iteration (not the full while loop) — the unit the
+    roofline is reported per."""
+    local = D.make_distributed_step(prog, v_pp, num_parts, schedule,
+                                    skip_buckets=skip_buckets)
+    from jax.sharding import PartitionSpec as P
+    spec = P(D.AXIS)
+
+    def stepper(vprops, active, inbox, has_msg, edges):
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        vprops, active, inbox, has_msg, edges = map(
+            sq, (vprops, active, inbox, has_msg, edges))
+        vprops, active, inbox, has_msg, n = local(
+            jnp.int32(2), vprops, active, inbox, has_msg, edges)
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return ex(vprops), ex(active), ex(inbox), ex(has_msg), n
+
+    sm = jax.shard_map(stepper, mesh=mesh,
+                       in_specs=(spec, spec, spec, spec, spec),
+                       out_specs=(spec, spec, spec, spec, P()),
+                       check_vma=False)
+    return jax.jit(sm, donate_argnums=(0, 1, 2, 3))
+
+
+def graph_mesh(multi_pod: bool):
+    need = 512 if multi_pod else 256
+    dev = np.asarray(jax.devices()[:need])
+    return Mesh(dev, (D.AXIS,))
+
+
+def run_graph_cell(op: str, schedule: str, mesh_kind: str,
+                   verbose=True) -> dict:
+    multi = mesh_kind == "multipod"
+    mesh = graph_mesh(multi)
+    Pn = mesh.devices.size
+    prog = (PageRankProgram(V_SCALE, 20) if op == "pagerank"
+            else SSSPProgram(0))
+    weighted = op == "sssp"
+    res = {"arch": f"graph-{op}", "shape": f"{schedule}-V228-E232",
+           "mesh": mesh_kind, "chips": Pn}
+    try:
+        tpl = graph_templates(Pn, weighted, prog)
+        t0 = time.time()
+
+        def lower_compile(skip):
+            fn = build_iteration(prog, tpl["v_pp"], Pn, mesh, schedule,
+                                 skip_buckets=skip)
+            return fn.lower(tpl["vprops"], tpl["active"], tpl["inbox"],
+                            tpl["has_msg"], tpl["edges"]).compile()
+
+        compiled = lower_compile(False)
+        mem = compiled.memory_analysis()
+        mem_d = {k: float(getattr(mem, k, 0) or 0) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes")}
+        # The bucket loop is a lax.scan whose body cost_analysis counts
+        # once; solve cost = outside + P·body from a skip-buckets twin.
+        # EXCEPT push: its per-iteration cost is dominated by the single
+        # all_to_all exchange + fold (fully visible in c_full); the
+        # once-counted bucket bodies are ~0.2% of traffic, and the skip
+        # twin differs structurally (no scan ys buffer), so extrapolation
+        # would misattribute the exchange ×P. Report c_full directly.
+        c_full = _cost3(compiled)
+        if schedule == "push":
+            tot = c_full
+        else:
+            c_skip = _cost3(lower_compile(True))
+            body = tuple(max(f - s, 0.0) for f, s in zip(c_full, c_skip))
+            tot = tuple(s + Pn * b for s, b in zip(c_skip, body))
+        # "useful work" for a graph iteration: one merge+emit per edge
+        # (~10 flops/edge) — reported for completeness; graph processing is
+        # memory/collective-bound by nature.
+        rf = RL.Roofline(flops=tot[0], hbm_bytes=tot[1], wire_bytes=tot[2],
+                         chips=Pn, model_flops=10.0 * E_SCALE,
+                         collectives=RL.parse_collectives(compiled.as_text()))
+        res.update(status="OK", compile_s=time.time() - t0, memory=mem_d,
+                   roofline=rf.to_dict(), v_scale=V_SCALE, e_scale=E_SCALE)
+        if verbose:
+            per_dev = (mem_d["argument_size_in_bytes"]
+                       + mem_d["temp_size_in_bytes"]) / 1e9
+            print(f"[graph-{op} × {schedule} × {mesh_kind}] OK "
+                  f"args+temp={per_dev:.2f} GB/dev "
+                  f"compute={rf.compute_s*1e3:.2f}ms "
+                  f"memory={rf.memory_s*1e3:.2f}ms "
+                  f"coll={rf.collective_s*1e3:.2f}ms "
+                  f"bottleneck={rf.bottleneck}", flush=True)
+    except Exception as e:
+        res.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[graph-{op} × {schedule} × {mesh_kind}] FAIL: {e}",
+                  flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--op", default="pagerank",
+                    choices=["pagerank", "sssp", "all"])
+    ap.add_argument("--schedule", default="ring",
+                    choices=["ring", "allgather", "push", "all"])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    args = ap.parse_args()
+    ops = ["pagerank", "sssp"] if args.op == "all" else [args.op]
+    scheds = (["ring", "allgather", "push"] if args.schedule == "all"
+              else [args.schedule])
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    n_fail = 0
+    for op in ops:
+        for sc in scheds:
+            for mk in meshes:
+                r = run_graph_cell(op, sc, mk)
+                with open(os.path.join(
+                        OUT_DIR, f"graph-{op}__{sc}__{mk}.json"), "w") as f:
+                    json.dump(r, f, indent=2)
+                n_fail += r["status"] == "FAIL"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders (a FUNCTION, not a module-level constant, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
+    axis (the DCN dimension)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host has (smoke tests / CPU examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    mp = math.gcd(model_parallel, n)
+    dev = np.asarray(devices).reshape(n // mp, mp)
+    return jax.sharding.Mesh(dev, ("data", "model"))

@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as M
+from repro.configs import SHAPES, get_config
+from repro.train.step import TrainState, _model_specs
+from repro.optim.adamw import AdamWState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_state_template(cfg) -> TrainState:
+    shapes, _ = _model_specs(cfg)  # ShapeDtypeStruct tree via eval_shape
+    f32 = lambda t: jax.tree.map(lambda x: SDS(x.shape, jnp.float32), t)
+    return TrainState(params=shapes, opt=AdamWState(
+        step=SDS((), jnp.int32), m=f32(shapes), v=f32(shapes)),
+        step=SDS((), jnp.int32))
+
+
+def params_template(cfg):
+    shapes, _ = _model_specs(cfg)
+    return shapes
+
+
+def decode_state_template(cfg, batch: int, max_len: int,
+                          cache_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_decode_state(cfg, batch, max_len, cache_dtype))
+
+
+def batch_template(cfg, global_batch: int, seq_len: int):
+    """Training batch: tokens [B, T+1], or (embeds, labels) for stub-frontend
+    archs (vlm/audio: precomputed patch/frame embeddings per the brief)."""
+    if cfg.embed_inputs:
+        return {"inputs": SDS((global_batch, seq_len, cfg.d_model),
+                              jnp.bfloat16),
+                "labels": SDS((global_batch, seq_len), jnp.int32)}
+    return SDS((global_batch, seq_len + 1), jnp.int32)
+
+
+def prefill_template(cfg, global_batch: int, seq_len: int):
+    if cfg.embed_inputs:
+        return SDS((global_batch, seq_len, cfg.d_model), jnp.bfloat16)
+    return SDS((global_batch, seq_len), jnp.int32)
+
+
+def decode_tokens_template(cfg, global_batch: int):
+    if cfg.embed_inputs:
+        return SDS((global_batch, cfg.d_model), jnp.bfloat16)
+    return SDS((global_batch,), jnp.int32)
+
+
+def input_specs(arch: str, shape: str,
+                overrides: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    """All templates for one (arch × shape) cell, keyed by step-arg name."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    sh = SHAPES[shape]
+    B, T, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    if kind == "train":
+        return {"kind": "train", "cfg": cfg,
+                "state": train_state_template(cfg),
+                "batch": batch_template(cfg, B, T)}
+    if kind == "prefill":
+        # 32k prefill needs linear-memory attention: the chunked
+        # online-softmax path (the XLA twin of the Pallas flash kernel,
+        # which is what the CPU dry-run can lower and measure)
+        cfg = cfg.replace(attn_impl="xla_chunked")
+        return {"kind": "prefill", "cfg": cfg,
+                "params": params_template(cfg),
+                "tokens": prefill_template(cfg, B, T)}
+    if kind == "decode":
+        if shape == "long_500k" and not cfg.sub_quadratic:
+            return {"kind": "skip", "cfg": cfg,
+                    "reason": "full-attention arch: 500k dense KV is "
+                              "quadratic; skipped per the brief"}
+        return {"kind": "decode", "cfg": cfg,
+                "params": params_template(cfg),
+                "tokens": decode_tokens_template(cfg, B),
+                "state": decode_state_template(cfg, B, T)}
+    raise ValueError(shape)

@@ -1,0 +1,12 @@
+"""LM architecture zoo (deliverable f): one assembly covering the ten
+assigned architectures via config block patterns."""
+from . import layers, moe, recurrent, transformer, decoding  # noqa: F401
+from .transformer import (decode_step, forward, init_decode_state,  # noqa: F401
+                          decode_state_specs, init_model, lm_loss)
+from .decoding import greedy_generate, prefill_step  # noqa: F401
+
+
+def real_param_count(params) -> int:
+    import jax
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))

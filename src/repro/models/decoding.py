@@ -1,0 +1,84 @@
+"""Prefill / decode entry points (serve path).
+
+`prefill_step` runs the training forward with state collection and
+assembles the decode state (KV caches padded to max_len, recurrent states
+passed through). `decode_step` lives in transformer.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+
+def _kv_to_cache(kv, max_len: int, dtype):
+    """(k, v) [(...,) B, T, Hkv, hd] -> cache dict padded to max_len.
+    Handles an optional leading scan (n_groups) axis."""
+    k, v = kv
+    t_axis = k.ndim - 3
+    T_cur = k.shape[t_axis]
+    pad = [(0, 0)] * k.ndim
+    pad[t_axis] = (0, max_len - T_cur)
+    lead = k.shape[:t_axis - 1]
+    pos = jnp.full(lead, T_cur, jnp.int32) if lead else jnp.int32(T_cur)
+    return {"k": jnp.pad(k.astype(dtype), pad),
+            "v": jnp.pad(v.astype(dtype), pad),
+            "pos": pos}
+
+
+def prefill_step(params: Params, cfg, tokens, max_len: int | None = None,
+                 cache_dtype=jnp.bfloat16):
+    """tokens [B,T] (or embeds [B,T,D]) -> (last_logits [B,V], decode state).
+
+    max_len defaults to T (the dry-run's prefill_32k cell measures exactly
+    the prompt-length cache build)."""
+    B, T_in = tokens.shape[:2]
+    max_len = max_len or T_in
+    logits, _, states = T.forward(params, cfg, tokens, collect_states=True)
+
+    pat, n_groups, remainder = T._pattern_split(cfg)
+    state: Params = {}
+
+    def convert(kind, st):
+        if kind in ("attn", "local", "moe"):
+            return _kv_to_cache(st, max_len, cache_dtype)
+        return st  # recurrent states pass through
+
+    if cfg.scan_layers and n_groups > 0 and "groups" in params:
+        sts = states[0]  # list per pattern slot, stacked over groups
+        state["groups"] = [convert(kind, sts[j])
+                           for j, kind in enumerate(pat)]
+        rem_states = states[1:]
+    else:
+        n_body = n_groups * len(pat)
+        state["layers"] = [convert(kind, states[i])
+                           for i, kind in enumerate(cfg.layer_types[:n_body])]
+        rem_states = states[n_body:]
+
+    state["rem"] = [convert(kind, st)
+                    for kind, st in zip(remainder, rem_states)]
+    return logits[:, -1], state
+
+
+def greedy_generate(params: Params, cfg, prompt, num_steps: int,
+                    max_len: int | None = None):
+    """Greedy decoding loop (example/serving path)."""
+    B, T0 = prompt.shape
+    max_len = max_len or (T0 + num_steps)
+    logits, state = prefill_step(params, cfg, prompt, max_len)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        tok, state = carry
+        logits, state = T.decode_step(params, cfg, tok, state)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, state), nxt
+
+    (_, state), toks = jax.lax.scan(body, (tok, state), None,
+                                    length=num_steps - 1)
+    return jnp.concatenate([tok[None], toks], 0).T  # [B, num_steps]

@@ -1,0 +1,362 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (three impls),
+gated/plain MLPs, embeddings — all pure-JAX functional, params as nested
+dicts with a parallel tree of logical-axis tuples for pjit sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter builder: params tree + logical-axis spec tree, built together
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    def __init__(self, key, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.specs: Params = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, name, shape, axes, std: float | None = 0.02,
+              init: str = "normal"):
+        assert len(axes) == len(shape), (name, axes, shape)
+        if init == "zeros":
+            p = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            p = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            p = (jax.random.normal(self._split(), shape, self.dtype)
+                 * jnp.asarray(std, self.dtype))
+        else:
+            raise ValueError(init)
+        self.params[name] = p
+        self.specs[name] = tuple(axes)
+        return p
+
+    def child(self, name) -> "ParamBuilder":
+        sub = ParamBuilder(self._split(), self.dtype)
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+
+def stack_param_trees(trees):
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_spec_trees(trees):
+    return jax.tree.map(
+        lambda *xs: ("layers",) + xs[0], *trees,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(pb: ParamBuilder, name: str, dim: int, kind: str):
+    c = pb.child(name)
+    c.param("scale", (dim,), (None,), init="ones")
+    if kind == "layernorm":
+        c.param("bias", (dim,), (None,), init="zeros")
+
+
+def apply_norm(p: Params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = ((xf - mu) * jax.lax.rsqrt(var + eps)
+               * p["scale"].astype(jnp.float32)
+               + p["bias"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x [..., T, H, Dh] (Dh even), positions [..., T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions [..., T] -> [..., T, 1, half] broadcast over heads & freq
+    ang = positions.astype(jnp.float32)[..., None, None] * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — init + three forward impls + decode
+# ---------------------------------------------------------------------------
+
+def init_attention(pb: ParamBuilder, cfg, name="attn"):
+    c = pb.child(name)
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    std = 0.02
+    c.param("wq", (d, hq, hd), ("embed", "heads", "head_dim"), std)
+    c.param("wk", (d, hkv, hd), ("embed", "kv_heads", "head_dim"), std)
+    c.param("wv", (d, hkv, hd), ("embed", "kv_heads", "head_dim"), std)
+    c.param("wo", (hq, hd, d), ("heads", "head_dim", "embed"),
+            std / math.sqrt(2 * cfg.num_layers))
+    if cfg.qk_norm:
+        init_norm(c, "q_norm", hd, "rmsnorm")
+        init_norm(c, "k_norm", hd, "rmsnorm")
+
+
+def _qkv(p: Params, cfg, x, positions):
+    """x [B,T,D] -> q [B,T,Hq,hd], k/v [B,T,Hkv,hd] with qk_norm + RoPE."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+    k = shard(k, "batch", "seq", "act_kv_heads", None)
+    v = shard(v, "batch", "seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def _mask(T, S, offset, window):
+    """[T,S] boolean; offset = (global position of q0) - (position of k0)."""
+    qpos = jnp.arange(T)[:, None] + offset
+    kpos = jnp.arange(S)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_scores_xla(q, k, v, window: int, out_dtype):
+    """Full-scores einsum attention, GQA-grouped (no kv repeat).
+    q [B,T,Hq,hd], k/v [B,S,Hkv,hd] -> [B,T,Hq,hd]."""
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, hd)
+    s = jnp.einsum("bthgk,bshk->bhgts", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    m = _mask(T, S, S - T, window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshk->bthgk", pattn, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, hd).astype(out_dtype)
+
+
+def attention_scores_chunked(q, k, v, window: int, out_dtype,
+                             chunk: int = 1024):
+    """Online-softmax over KV chunks (flash-in-XLA): linear memory for 32k
+    prefill. q [B,T,Hq,hd], k/v [B,S,Hkv,hd]."""
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    S_pad = n_chunks * chunk
+    if S_pad != S:
+        k = jnp.pad(k, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    qg = (q.reshape(B, T, Hkv, G, hd).astype(jnp.float32)
+          .transpose(0, 2, 3, 1, 4))                        # [B,Hkv,G,T,hd]
+    kc = (k.astype(jnp.float32).transpose(0, 2, 1, 3)
+          .reshape(B, Hkv, n_chunks, chunk, hd))
+    vc = (v.astype(jnp.float32).transpose(0, 2, 1, 3)
+          .reshape(B, Hkv, n_chunks, chunk, hd))
+
+    qpos = jnp.arange(T) + (S - T)
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        kb, vb, ci = inputs
+        s = jnp.einsum("bhgtk,bhsk->bhgts", qg, kb) * (hd ** -0.5)
+        kpos = ci * chunk + jnp.arange(chunk)
+        msk = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < S)
+        if window:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgts,bhsk->bhgtk",
+                                                  pexp, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, T), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         jnp.arange(n_chunks)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, hd)
+    return o.astype(out_dtype)
+
+
+def attention_fwd(p: Params, cfg, x, positions, *, window: int = 0,
+                  impl: Optional[str] = None):
+    """Training / prefill attention over the full sequence.
+    Returns (y [B,T,D], kv) where kv=(k,v) for cache construction."""
+    impl = impl or cfg.attn_impl
+    q, k, v = _qkv(p, cfg, x, positions)
+    if impl == "flash_kernel":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3),
+                                 causal=True, window=window or None)
+        o = o.transpose(0, 2, 1, 3)
+    elif impl == "xla_chunked":
+        o = attention_scores_chunked(q, k, v, window, x.dtype)
+    else:
+        o = attention_scores_xla(q, k, v, window, x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype))
+    return shard(y, "batch", "seq", "act_embed"), (k, v)
+
+
+def attention_decode(p: Params, cfg, x, cache: Dict[str, Any], *,
+                     window: int = 0):
+    """Single-token decode against a KV cache.
+
+    x [B,1,D]; cache {"k","v": [B,S,Hkv,hd], "pos": scalar int32 (tokens
+    already in cache)}. Returns (y [B,1,D], new cache).
+    """
+    pos = cache["pos"]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    posv = jnp.full(x.shape[:1] + (1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    ck = shard(ck, "batch", "cache_seq", None, None)
+    cv = shard(cv, "batch", "cache_seq", None, None)
+
+    B, S, Hkv, hd = ck.shape
+    Hq = cfg.num_heads
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd).astype(ck.dtype)
+    # preferred_element_type keeps the cache in bf16 on the HBM side (no
+    # materialized f32 copy of a multi-GB cache) with f32 accumulation
+    s = jnp.einsum("bthgk,bshk->bhgts", qg, ck,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(S)
+    m = kpos <= pos
+    if window:
+        m &= kpos > pos - window
+    s = jnp.where(m[None, None, None, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshk->bthgk", pattn.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, Hq, hd).astype(x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "pos": jnp.int32(0)}
+
+
+def kv_cache_specs(cfg):
+    return {"k": ("batch", "cache_seq", None, None),
+            "v": ("batch", "cache_seq", None, None),
+            "pos": ()}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(pb: ParamBuilder, cfg, name="mlp", d_ff: Optional[int] = None):
+    c = pb.child(name)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    std = 0.02
+    if cfg.activation in ("swiglu", "geglu"):
+        c.param("w_gate", (d, f), ("embed", "mlp"), std)
+    c.param("w_up", (d, f), ("embed", "mlp"), std)
+    c.param("w_down", (f, d), ("mlp", "embed"),
+            std / math.sqrt(2 * cfg.num_layers))
+
+
+def mlp_fwd(p: Params, cfg, x):
+    up = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * up
+    elif cfg.activation == "geglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.gelu(g) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", "seq", "act_mlp")
+    y = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+    return shard(y, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embeddings(pb: ParamBuilder, cfg):
+    """Tables are padded to cfg.padded_vocab (Megatron-style) so the vocab
+    dim shards over TP even for odd vocabs; logits_fwd masks the padding."""
+    pb.param("embedding", (cfg.padded_vocab, cfg.d_model),
+             ("vocab", "embed"), 0.02)
+    if not cfg.tied_embeddings:
+        pb.param("lm_head", (cfg.d_model, cfg.padded_vocab),
+                 ("embed", "vocab"), 0.02)
+
+
+def embed_tokens(params: Params, cfg, tokens, dtype):
+    e = params["embedding"].astype(dtype)[tokens]
+    return shard(e, "batch", "seq", "act_embed")
+
+
+def logits_fwd(params: Params, cfg, h):
+    w = (params["embedding"].T if cfg.tied_embeddings
+         else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", h, w.astype(h.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return shard(logits, "batch", "seq", "act_vocab")

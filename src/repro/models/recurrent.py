@@ -1,0 +1,342 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and Griffin's RG-LRU.
+
+TPU adaptation (DESIGN.md): the GPU implementations of these papers are
+fused CUDA scans; here each recurrence is expressed in its TPU-native
+parallel form —
+
+  mLSTM   chunkwise-parallel linear attention: within-chunk quadratic
+          (MXU matmuls) + cross-chunk recurrent state, exponential-gate
+          stabilizers carried in log-space (max-trick), lax.scan over
+          chunks.
+  sLSTM   genuinely sequential (the paper says so): lax.scan over time
+          with per-head block-diagonal recurrence.
+  RG-LRU  first-order diagonal recurrence h_t = a_t h_{t-1} + b_t via
+          jax.lax.associative_scan (log-depth parallel scan).
+
+All three expose a one-step `*_decode` update carrying O(1) state — the
+reason xlstm/recurrentgemma run the long_500k cell that full-attention
+archs must skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as shard
+from .layers import ParamBuilder, apply_norm, init_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Causal conv1d (shared by mLSTM / RG-LRU branches)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(pb: ParamBuilder, name, width, channels):
+    c = pb.child(name)
+    c.param("w", (width, channels), ("conv", "rnn"),
+            1.0 / math.sqrt(width))
+    c.param("b", (channels,), ("rnn",), init="zeros")
+
+
+def conv1d_fwd(p: Params, x, state=None):
+    """Depthwise causal conv. x [B,T,C]; state [B,W-1,C] for decode."""
+    w = p["w"].astype(x.dtype)           # [W, C]
+    W = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xx[:, -(W - 1):] if W > 1 else state
+    else:
+        xx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = xx[:, -(W - 1):] if W > 1 else None
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + p["b"].astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def init_mlstm(pb: ParamBuilder, cfg, name="mlstm"):
+    c = pb.child(name)
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    std = 0.02
+    c.param("w_up", (d, inner), ("embed", "rnn"), std)
+    c.param("w_gate_up", (d, inner), ("embed", "rnn"), std)
+    init_conv1d(c, "conv", cfg.conv_width, inner)
+    c.param("wq", (inner, inner), ("rnn", None), std)
+    c.param("wk", (inner, inner), ("rnn", None), std)
+    c.param("wv", (inner, inner), ("rnn", None), std)
+    c.param("wi", (inner, h), ("rnn", None), std)
+    c.param("bi", (h,), (None,), init="zeros")
+    c.param("wf", (inner, h), ("rnn", None), std)
+    c.param("bf", (h,), (None,), init="ones")   # forget-bias init
+    init_norm(c, "out_norm", inner, "rmsnorm")
+    c.param("w_down", (inner, d), ("rnn", "embed"),
+            std / math.sqrt(2 * cfg.num_layers))
+
+
+def _mlstm_qkvif(p, cfg, x, conv_state=None):
+    u = jnp.einsum("btd,di->bti", x, p["w_up"].astype(x.dtype))
+    g = jnp.einsum("btd,di->bti", x, p["w_gate_up"].astype(x.dtype))
+    uc, new_conv = conv1d_fwd(p["conv"], u, conv_state)
+    uc = jax.nn.silu(uc)
+    B, T, inner = u.shape
+    H = cfg.num_heads
+    dh = inner // H
+    q = jnp.einsum("bti,ij->btj", uc, p["wq"].astype(x.dtype)).reshape(B, T, H, dh)
+    k = jnp.einsum("bti,ij->btj", uc, p["wk"].astype(x.dtype)).reshape(B, T, H, dh)
+    v = jnp.einsum("bti,ij->btj", u, p["wv"].astype(x.dtype)).reshape(B, T, H, dh)
+    li = (jnp.einsum("bti,ih->bth", uc, p["wi"].astype(x.dtype))
+          + p["bi"].astype(x.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bti,ih->bth", uc, p["wf"].astype(x.dtype))
+         + p["bf"].astype(x.dtype)).astype(jnp.float32))
+    return q, k, v, li, lf, g, new_conv
+
+
+def mlstm_fwd(p: Params, cfg, x, chunk: int = 256):
+    """x [B,T,D] -> ([B,T,D], final state). Chunkwise-parallel with
+    log-space stabilizer."""
+    q, k, v, li, lf, g, new_conv = _mlstm_qkvif(p, cfg, x)
+    B, T, H, dh = q.shape
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    n_chunks = T // C
+    scale = dh ** -0.5
+
+    def to_chunks(a):
+        return a.reshape(B, n_chunks, C, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32) * scale,
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    lic, lfc = map(to_chunks, (li, lf))           # [n,B,C,H]
+
+    def body(carry, inp):
+        Cm, n, m0 = carry                          # [B,H,dh,dh],[B,H,dh],[B,H]
+        qb, kb, vb, lib, lfb = inp
+        s = jnp.cumsum(lfb, axis=1)                # [B,C,H] in-chunk Σ log f
+        # u_t = max_{s<=t}(li_s - s_s); M_t = max(m0, u_t)
+        a = lib - s                                # [B,C,H]
+        u = jax.lax.associative_scan(jnp.maximum, a, axis=1)
+        M = jnp.maximum(m0[:, None, :], u)         # [B,C,H]
+        # intra-chunk: P_ts = exp(li_s - s_s - M_t) for s<=t
+        logp = a[:, None, :, :] - M[:, :, None, :]  # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((s.shape[1], s.shape[1]), bool))
+        pmat = jnp.where(tri[None, :, :, None], jnp.exp(logp), 0.0)
+        sc = jnp.einsum("bthk,bshk->btsh", qb, kb) * pmat
+        h_intra = jnp.einsum("btsh,bshk->bthk", sc, vb)
+        n_intra = jnp.einsum("btsh,bshk->bthk", pmat, kb)  # k-weight sums
+        # inter-chunk: exp(m0 - M_t) q_t^T C_prev
+        w_in = jnp.exp(m0[:, None, :] - M)          # [B,C,H]
+        h_inter = jnp.einsum("bthk,bhkj->bthj", qb, Cm) * w_in[..., None]
+        n_inter = jnp.einsum("bthk,bhk->bth", qb, n) * w_in
+        num = h_intra + h_inter                     # [B,C,H,dh]
+        den = jnp.einsum("bthk,bthk->bth", qb, n_intra) + n_inter
+        m_t = s + M                                 # running stabilizer
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state
+        CL = s[:, -1:, :]                           # [B,1,H]
+        ML = M[:, -1, :]
+        wC = jnp.exp(a - ML[:, None, :])            # [B,C,H]
+        C_new = (Cm * jnp.exp(m0 - ML)[..., None, None]
+                 + jnp.einsum("bsh,bshk,bshj->bhkj", wC, kb, vb))
+        n_new = (n * jnp.exp(m0 - ML)[..., None]
+                 + jnp.einsum("bsh,bshk->bhk", wC, kb))
+        m_new = CL[:, 0, :] + ML
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0),
+                                    (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, T, H * dh)     # [B,T,inner]
+    h = apply_norm(p["out_norm"], h.astype(x.dtype), "rmsnorm")
+    h = h * jax.nn.silu(g)
+    y = jnp.einsum("bti,id->btd", h, p["w_down"].astype(x.dtype))
+    return y, {"C": Cf, "n": nf, "m": mf, "conv": new_conv}
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = inner // H
+    W = cfg.conv_width
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, inner), dtype)}
+
+
+def mlstm_decode(p: Params, cfg, x, state):
+    """One-step recurrent update. x [B,1,D]."""
+    q, k, v, li, lf, g, new_conv = _mlstm_qkvif(p, cfg, x, state["conv"])
+    B, _, H, dh = q.shape
+    qb = q[:, 0].astype(jnp.float32) * dh ** -0.5
+    kb, vb = k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    lib, lfb = li[:, 0], lf[:, 0]                   # [B,H]
+    m_new = jnp.maximum(lfb + state["m"], lib)
+    a = jnp.exp(lfb + state["m"] - m_new)
+    b = jnp.exp(lib - m_new)
+    C_new = (state["C"] * a[..., None, None]
+             + b[..., None, None] * kb[..., :, None] * vb[..., None, :])
+    n_new = state["n"] * a[..., None] + b[..., None] * kb
+    num = jnp.einsum("bhk,bhkj->bhj", qb, C_new)
+    den = jnp.einsum("bhk,bhk->bh", qb, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, H * dh)
+    h = apply_norm(p["out_norm"], h.astype(x.dtype), "rmsnorm")
+    h = h * jax.nn.silu(g)
+    y = jnp.einsum("bti,id->btd", h, p["w_down"].astype(x.dtype))
+    return y, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — sequential scan
+# ---------------------------------------------------------------------------
+
+def init_slstm(pb: ParamBuilder, cfg, name="slstm"):
+    c = pb.child(name)
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    std = 0.02
+    c.param("w_in", (d, 4 * d), ("embed", "rnn"), std)    # i,f,z,o from x
+    c.param("b_in", (4 * d,), ("rnn",), init="zeros")
+    c.param("r", (H, dh, 4 * dh), (None, None, None), std)  # recurrent
+    init_norm(c, "out_norm", d, "rmsnorm")
+    c.param("w_down", (d, d), ("rnn", "embed"),
+            std / math.sqrt(2 * cfg.num_layers))
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """xt [B,4d] pre-computed input projection; state dict of [B,H,dh]."""
+    B = xt.shape[0]
+    H = cfg.num_heads
+    d = cfg.d_model
+    dh = d // H
+    hprev = state["h"]                                 # [B,H,dh]
+    rec = jnp.einsum("bhk,hkj->bhj", hprev, p["r"].astype(hprev.dtype))
+    gates = xt.reshape(B, H, 4 * dh) + rec             # [B,H,4dh]
+    li, lf, z, o = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + state["m"], li)
+    i = jnp.exp(li - m_new)
+    f = jnp.exp(lf + state["m"] - m_new)
+    c_new = f * state["c"] + i * jnp.tanh(z)
+    n_new = f * state["n"] + i
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_fwd(p: Params, cfg, x):
+    B, T, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    xin = (jnp.einsum("btd,dj->btj", x, p["w_in"].astype(x.dtype))
+           + p["b_in"].astype(x.dtype))
+
+    def body(state, xt):
+        new = _slstm_cell(p, cfg, xt, state)
+        return new, new["h"]
+
+    s0 = slstm_init_state(cfg, B)
+    sf, hs = jax.lax.scan(body, s0, xin.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, T, d).astype(x.dtype)
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    return jnp.einsum("btd,dj->btj", h, p["w_down"].astype(x.dtype)), sf
+
+
+def slstm_init_state(cfg, batch):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full_like(z, -1e30)}
+
+
+def slstm_decode(p: Params, cfg, x, state):
+    xin = (jnp.einsum("btd,dj->btj", x, p["w_in"].astype(x.dtype))
+           + p["b_in"].astype(x.dtype))[:, 0]
+    new = _slstm_cell(p, cfg, xin, state)
+    B = x.shape[0]
+    h = new["h"].reshape(B, 1, cfg.d_model).astype(x.dtype)
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    y = jnp.einsum("btd,dj->btj", h, p["w_down"].astype(x.dtype))
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def init_rglru(pb: ParamBuilder, cfg, name="rglru"):
+    c = pb.child(name)
+    d, r = cfg.d_model, cfg.rnn_width_
+    std = 0.02
+    c.param("w_x", (d, r), ("embed", "rnn"), std)
+    c.param("w_gate", (d, r), ("embed", "rnn"), std)
+    init_conv1d(c, "conv", cfg.conv_width, r)
+    c.param("w_a", (r, r), ("rnn", None), std)     # recurrence gate
+    c.param("w_i", (r, r), ("rnn", None), std)     # input gate
+    c.param("lam", (r,), (None,), init="ones")     # Λ (a = sigmoid(Λ)^(c·r))
+    c.param("w_out", (r, d), ("rnn", "embed"),
+            std / math.sqrt(2 * cfg.num_layers))
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_gates(p, u):
+    """u [B,T,R] conv output -> per-step (log_a, b)."""
+    rt = jax.nn.sigmoid(jnp.einsum("btr,rs->bts", u, p["w_a"].astype(u.dtype))
+                        .astype(jnp.float32))
+    it = jax.nn.sigmoid(jnp.einsum("btr,rs->bts", u, p["w_i"].astype(u.dtype))
+                        .astype(jnp.float32))
+    log_a = -_RGLRU_C * rt * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * it * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_fwd(p: Params, cfg, x):
+    """Griffin recurrent block: gate ⊙ RG-LRU(conv(Wx x)) -> out proj."""
+    g = jax.nn.gelu(jnp.einsum("btd,dr->btr", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("btd,dr->btr", x, p["w_x"].astype(x.dtype))
+    u, new_conv = conv1d_fwd(p["conv"], u)
+    a, b = _rglru_gates(p, u)
+
+    # h_t = a_t h_{t-1} + b_t  — log-depth associative scan
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    hs = shard(h.astype(x.dtype), "batch", "seq", "act_mlp")
+    y = jnp.einsum("btr,rd->btd", hs * g, p["w_out"].astype(x.dtype))
+    return (shard(y, "batch", "seq", "act_embed"),
+            {"h": h[:, -1], "conv": new_conv})
+
+
+def rglru_init_state(cfg, batch, dtype=jnp.float32):
+    r, W = cfg.rnn_width_, cfg.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, r), dtype)}
+
+
+def rglru_decode(p: Params, cfg, x, state):
+    g = jax.nn.gelu(jnp.einsum("btd,dr->btr", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("btd,dr->btr", x, p["w_x"].astype(x.dtype))
+    u, new_conv = conv1d_fwd(p["conv"], u, state["conv"])
+    a, b = _rglru_gates(p, u)
+    h_new = a[:, 0] * state["h"] + b[:, 0]
+    h = h_new[:, None].astype(x.dtype)
+    y = jnp.einsum("btr,rd->btd", h * g, p["w_out"].astype(x.dtype))
+    return y, {"h": h_new, "conv": new_conv}

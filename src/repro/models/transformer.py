@@ -1,0 +1,371 @@
+"""Model assembly for all 10 assigned architectures.
+
+One code path covers dense / MoE / ssm / hybrid / vlm / audio families via
+the config's `block_pattern`. Layers are executed with `lax.scan` over
+*pattern groups* (params stacked on a leading 'layers' axis) so compile
+time is O(pattern) instead of O(num_layers) — essential for the 40-cell
+dry-run — with an unstacked remainder (e.g. recurrentgemma's trailing two
+recurrent layers). Activation remat (`cfg.remat`) wraps each scanned group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as shard
+from . import layers as L
+from . import moe as M
+from . import recurrent as R
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(pb: L.ParamBuilder, cfg, kind: str):
+    c = pb  # caller passes a fresh child builder per block
+    L.init_norm(c, "norm1", cfg.d_model, cfg.norm)
+    if kind in ("attn", "local", "moe"):
+        L.init_attention(c, cfg, "attn")
+        L.init_norm(c, "norm2", cfg.d_model, cfg.norm)
+        if kind == "moe":
+            M.init_moe(c, cfg, "moe")
+        else:
+            L.init_mlp(c, cfg, "mlp")
+    elif kind == "mlstm":
+        R.init_mlstm(c, cfg, "mlstm")
+    elif kind == "slstm":
+        R.init_slstm(c, cfg, "slstm")
+    elif kind == "rglru":
+        R.init_rglru(c, cfg, "rglru")
+        if cfg.d_ff:
+            L.init_norm(c, "norm2", cfg.d_model, cfg.norm)
+            L.init_mlp(c, cfg, "mlp")
+    else:
+        raise ValueError(kind)
+
+
+def _pattern_split(cfg):
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    remainder = cfg.layer_types[n_groups * len(pat):]
+    return pat, n_groups, remainder
+
+
+def init_model(cfg, key) -> Tuple[Params, Params]:
+    """Returns (params, logical_axis_specs) — parallel pytrees."""
+    pb = L.ParamBuilder(key, jnp.float32)
+    if not cfg.embed_inputs:
+        L.init_embeddings(pb, cfg)
+    else:
+        pb.param("lm_head", (cfg.d_model, cfg.padded_vocab),
+                 ("embed", "vocab"), 0.02)
+
+    pat, n_groups, remainder = _pattern_split(cfg)
+
+    if cfg.scan_layers and n_groups > 0:
+        group_params, group_specs = [], []
+        for _ in range(n_groups):
+            gb = L.ParamBuilder(pb._split(), pb.dtype)
+            for j, kind in enumerate(pat):
+                _init_block(gb.child(f"blk{j}"), cfg, kind)
+            group_params.append(gb.params)
+            group_specs.append(gb.specs)
+        pb.params["groups"] = L.stack_param_trees(group_params)
+        pb.specs["groups"] = L.stack_spec_trees(group_specs)
+    else:
+        for i, kind in enumerate(cfg.layer_types[:n_groups * len(pat)]):
+            _init_block(pb.child(f"layer{i}"), cfg, kind)
+
+    for i, kind in enumerate(remainder):
+        _init_block(pb.child(f"rem{i}"), cfg, kind)
+
+    L.init_norm(pb, "final_norm", cfg.d_model, cfg.norm)
+    return pb.params, pb.specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p: Params, cfg, kind: str, x, positions):
+    """Returns (x_out, aux, temporal_state) — state for prefill caches."""
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    aux = jnp.float32(0.0)
+    if kind in ("attn", "local", "moe"):
+        window = cfg.sliding_window if kind in ("attn", "local") else 0
+        if kind == "attn" and cfg.sliding_window == 0:
+            window = 0
+        y, kv = L.attention_fwd(p["attn"], cfg, h, positions, window=window)
+        x = x + y
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+        if kind == "moe":
+            y2, auxd = M.moe_fwd(p["moe"], cfg, h2)
+            aux = auxd["moe_aux"]
+        else:
+            y2 = L.mlp_fwd(p["mlp"], cfg, h2)
+        return x + y2, aux, kv
+    if kind == "mlstm":
+        y, st = R.mlstm_fwd(p["mlstm"], cfg, h)
+        return x + y, aux, st
+    if kind == "slstm":
+        y, st = R.slstm_fwd(p["slstm"], cfg, h)
+        return x + y, aux, st
+    if kind == "rglru":
+        y, st = R.rglru_fwd(p["rglru"], cfg, h)
+        x = x + y
+        if cfg.d_ff:
+            h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+            x = x + L.mlp_fwd(p["mlp"], cfg, h2)
+        return x, aux, st
+    raise ValueError(kind)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def forward(params: Params, cfg, inputs, positions=None,
+            collect_states: bool = False):
+    """inputs: tokens [B,T] int32, or embeddings [B,T,D] when
+    cfg.embed_inputs. Returns (logits [B,T,V] f32, aux, states)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs:
+        x = inputs.astype(dtype)
+    else:
+        x = L.embed_tokens(params, cfg, inputs, dtype)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+    x = shard(x, "batch", "seq", "act_embed")
+
+    pat, n_groups, remainder = _pattern_split(cfg)
+    aux_total = jnp.float32(0.0)
+    states = []
+
+    def group_fwd(gp, x):
+        aux = jnp.float32(0.0)
+        sts = []
+        for j, kind in enumerate(pat):
+            x, a, st = _block_fwd(gp[f"blk{j}"], cfg, kind, x, positions)
+            aux = aux + a
+            sts.append(st)
+        return x, aux, sts
+
+    if cfg.scan_layers and n_groups > 0 and "groups" in params:
+        gfn = _remat(lambda gp, x: group_fwd(gp, x)[:2], cfg)
+
+        if collect_states:
+            # prefill: states must survive the scan — carry them out
+            def body(x, gp):
+                x, aux, sts = group_fwd(gp, x)
+                return x, (aux, sts)
+
+            x, (auxs, sts) = jax.lax.scan(body, x, params["groups"])
+            aux_total += auxs.sum()
+            states.append(sts)  # stacked [n_groups, ...] per pattern slot
+        else:
+            def body(x, gp):
+                x, aux = gfn(gp, x)
+                return x, aux
+
+            x, auxs = jax.lax.scan(body, x, params["groups"])
+            aux_total += auxs.sum()
+    else:
+        for i, kind in enumerate(cfg.layer_types[:n_groups * len(pat)]):
+            blk = _remat(
+                functools.partial(_block_fwd, cfg=cfg, kind=kind,
+                                  positions=positions), cfg)
+            x, a, st = blk(params[f"layer{i}"], x=x)
+            aux_total += a
+            if collect_states:
+                states.append(st)
+
+    for i, kind in enumerate(remainder):
+        x, a, st = _block_fwd(params[f"rem{i}"], cfg, kind, x, positions)
+        aux_total += a
+        if collect_states:
+            states.append(st)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.logits_fwd(params, cfg, x)
+    return logits, aux_total, (states if collect_states else None)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg, inputs, labels=None,
+            z_loss: float = 1e-4, aux_weight: float = 1e-2):
+    """Next-token cross-entropy; labels default to shifted inputs."""
+    if labels is None:
+        logits, aux, _ = forward(params, cfg, inputs[:, :-1])
+        targets = inputs[:, 1:]
+    else:
+        logits, aux, _ = forward(params, cfg, inputs)
+        targets = labels
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    zl = z_loss * jnp.square(lse).mean()
+    total = nll + zl + aux_weight * aux
+    return total, {"nll": nll, "z_loss": zl, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) — cache pytree mirrors the layer structure
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> Params:
+    """Per-layer temporal state: KV cache for attention layers (window
+    layers get a full-length buffer in the baseline; see §Perf for the
+    rolling-buffer optimization), recurrent state for ssm layers."""
+    pat, n_groups, remainder = _pattern_split(cfg)
+
+    def one(kind):
+        if kind in ("attn", "local", "moe"):
+            return L.init_kv_cache(cfg, batch, max_len, cache_dtype)
+        if kind == "mlstm":
+            return R.mlstm_init_state(cfg, batch, cache_dtype)
+        if kind == "slstm":
+            return R.slstm_init_state(cfg, batch)
+        if kind == "rglru":
+            return R.rglru_init_state(cfg, batch, cache_dtype)
+        raise ValueError(kind)
+
+    def stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+    state: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        state["groups"] = [stack([one(kind) for _ in range(n_groups)])
+                           for kind in pat]
+    else:
+        state["layers"] = [one(kind)
+                           for kind in cfg.layer_types[:n_groups * len(pat)]]
+    state["rem"] = [one(kind) for kind in remainder]
+    return state
+
+
+def decode_state_specs(cfg):
+    """Logical-axis spec tree matching init_decode_state's structure."""
+    pat, n_groups, remainder = _pattern_split(cfg)
+
+    def one(kind, stacked):
+        lead = ("layers",) if stacked else ()
+        if kind in ("attn", "local", "moe"):
+            return {"k": lead + ("batch", "cache_seq", None, None),
+                    "v": lead + ("batch", "cache_seq", None, None),
+                    "pos": lead if stacked else ()}
+        if kind == "mlstm":
+            return {"C": lead + ("batch", "act_heads", None, None),
+                    "n": lead + ("batch", "act_heads", None),
+                    "m": lead + ("batch", "act_heads"),
+                    "conv": lead + ("batch", None, "act_mlp")}
+        if kind == "slstm":
+            z = lead + ("batch", "act_heads", None)
+            return {"h": z, "c": z, "n": z, "m": z}
+        if kind == "rglru":
+            return {"h": lead + ("batch", "act_mlp"),
+                    "conv": lead + ("batch", None, "act_mlp")}
+        raise ValueError(kind)
+
+    specs: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        specs["groups"] = [one(kind, True) for kind in pat]
+    else:
+        specs["layers"] = [one(kind, False)
+                           for kind in cfg.layer_types]
+    specs["rem"] = [one(kind, False) for kind in remainder]
+    return specs
+
+
+def _block_decode(p: Params, cfg, kind: str, x, state):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "local", "moe"):
+        window = cfg.sliding_window if kind in ("attn", "local") else 0
+        y, new_state = L.attention_decode(p["attn"], cfg, h, state,
+                                          window=window)
+        x = x + y
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+        if kind == "moe":
+            y2, _ = M.moe_fwd(p["moe"], cfg, h2)
+        else:
+            y2 = L.mlp_fwd(p["mlp"], cfg, h2)
+        return x + y2, new_state
+    if kind == "mlstm":
+        y, st = R.mlstm_decode(p["mlstm"], cfg, h, state)
+        return x + y, st
+    if kind == "slstm":
+        y, st = R.slstm_decode(p["slstm"], cfg, h, state)
+        return x + y, st
+    if kind == "rglru":
+        y, st = R.rglru_decode(p["rglru"], cfg, h, state)
+        x = x + y
+        if cfg.d_ff:
+            h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+            x = x + L.mlp_fwd(p["mlp"], cfg, h2)
+        return x, st
+    raise ValueError(kind)
+
+
+def decode_step(params: Params, cfg, tokens, state: Params):
+    """One serve step: tokens [B] (or [B,D] embeds) -> logits [B,V].
+
+    state comes from init_decode_state; returns (logits, new_state).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs:
+        x = (tokens[:, None] if tokens.ndim == 2 else tokens).astype(dtype)
+    else:
+        x = L.embed_tokens(params, cfg, tokens[:, None], dtype)
+
+    pat, n_groups, remainder = _pattern_split(cfg)
+    new_state: Params = {}
+
+    if cfg.scan_layers and n_groups > 0 and "groups" in params:
+        def body(x, per_group):
+            gp, sts = per_group
+            new_sts = []
+            for j, kind in enumerate(pat):
+                x, ns = _block_decode(gp[f"blk{j}"], cfg, kind, x, sts[j])
+                new_sts.append(ns)
+            return x, tuple(new_sts)
+
+        x, ns = jax.lax.scan(body, x, (params["groups"],
+                                       tuple(state["groups"])))
+        new_state["groups"] = list(ns)
+    elif "layers" in state:
+        new_layers = []
+        for i, kind in enumerate(cfg.layer_types[:n_groups * len(pat)]):
+            x, ns = _block_decode(params[f"layer{i}"], cfg, kind, x,
+                                  state["layers"][i])
+            new_layers.append(ns)
+        new_state["layers"] = new_layers
+
+    new_rem = []
+    for i, kind in enumerate(remainder):
+        x, ns = _block_decode(params[f"rem{i}"], cfg, kind, x,
+                              state["rem"][i])
+        new_rem.append(ns)
+    new_state["rem"] = new_rem
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.logits_fwd(params, cfg, x)
+    return logits[:, 0], new_state

@@ -1,0 +1,80 @@
+"""AdamW + schedules + clipping, pure JAX (no optax in this environment).
+
+Optimizer state (m, v) inherits the parameter sharding — under pjit the
+state shards exactly like the FSDP/TP-sharded params (ZeRO-style), so the
+optimizer adds 2× param memory *per shard*, not per replica.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    m: Any                     # pytree like params
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.int32(0),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return lr

@@ -1,0 +1,2 @@
+from .step import (TrainState, build_serve_step, build_prefill_step,  # noqa: F401
+                   build_train_step, init_train_state, train_state_specs)

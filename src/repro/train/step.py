@@ -1,0 +1,240 @@
+"""train_step / serve_step builders: the functions the dry-run lowers and
+the launchers execute.
+
+All sharding is pjit-style: in/out shardings resolved from the logical-axis
+spec trees (distributed/sharding.py). Inside the step, mesh_rules() makes
+the model's logical_constraint() calls bind to the same mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models as M
+from repro.distributed import sharding as S
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+Params = Dict[str, Any]
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: Any                    # AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(cfg, key) -> TrainState:
+    params, _ = M.init_model(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.int32(0))
+
+
+def train_state_specs(cfg) -> TrainState:
+    """Logical-axis spec tree matching init_train_state's structure."""
+    _, pspecs = _model_specs(cfg)
+    from repro.optim.adamw import AdamWState
+    return TrainState(params=pspecs,
+                      opt=AdamWState(step=(), m=pspecs, v=pspecs),
+                      step=())
+
+
+@functools.lru_cache(maxsize=None)
+def _model_specs_cached(cfg):
+    """Shapes + logical specs WITHOUT allocating (eval_shape) — full-size
+    configs (dbrx-132b…) must never materialize on the host."""
+    box = {}
+
+    def f(key):
+        params, specs = M.init_model(cfg, key)
+        box["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["specs"], shapes
+
+
+def _model_specs(cfg):
+    specs, shapes = _model_specs_cached(cfg)
+    return shapes, specs
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def resolve_param_shardings(cfg, mesh: Mesh, state_template) -> Any:
+    """NamedSharding tree for a TrainState / params tree."""
+    spec_tree = train_state_specs(cfg) if isinstance(state_template,
+                                                     TrainState) else None
+    if spec_tree is None:
+        _, pspecs = _model_specs(cfg)
+        spec_tree = pspecs
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, S.param_spec(axes, leaf.shape, mesh))
+
+    return jax.tree.map(one, spec_tree, state_template, is_leaf=_is_axes)
+
+
+def resolve_specs(spec_tree, template, mesh: Mesh, rules) -> Any:
+    def one(axes, leaf):
+        return NamedSharding(mesh, S.spec_for(axes, leaf.shape, mesh, rules))
+    return jax.tree.map(one, spec_tree, template, is_leaf=_is_axes)
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, mesh: Optional[Mesh], lr_schedule,
+                    clip_norm: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics). batch is
+    tokens [B, T+1] int32 (or dict(inputs=…, labels=…) for embed archs)."""
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def train_step(state: TrainState, batch):
+        def ctx():
+            return (S.mesh_rules(mesh, rules) if mesh is not None
+                    else _nullctx())
+
+        with ctx():
+            def loss_fn(params):
+                if isinstance(batch, dict):
+                    loss, metrics = M.lm_loss(params, cfg, batch["inputs"],
+                                              batch["labels"])
+                else:
+                    loss, metrics = M.lm_loss(params, cfg, batch)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params)
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            lr = lr_schedule(state.step)
+            new_params, new_opt = adamw_update(grads, state.opt,
+                                               state.params, lr=lr)
+            new_state = TrainState(params=new_params, opt=new_opt,
+                                   step=state.step + 1)
+            out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                           **{k: v for k, v in metrics.items()}}
+            return new_state, out_metrics
+
+    return train_step
+
+
+def build_train_step(cfg, mesh: Mesh, lr_schedule=None,
+                     donate: bool = True):
+    """Jit the train step with fully-resolved in/out shardings."""
+    if lr_schedule is None:
+        from repro.optim import linear_warmup_cosine
+        lr_schedule = linear_warmup_cosine(3e-4, 100, 10000)
+    step_fn = make_train_step(cfg, mesh, lr_schedule)
+
+    state_spec_tree = train_state_specs(cfg)
+
+    def state_shardings(template):
+        return jax.tree.map(
+            lambda axes, leaf: NamedSharding(
+                mesh, S.param_spec(axes, leaf.shape, mesh)),
+            state_spec_tree, template, is_leaf=_is_axes)
+
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def batch_sharding(batch_template):
+        def one(leaf):
+            axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+            return NamedSharding(mesh, S.spec_for(axes, leaf.shape, mesh,
+                                                  rules))
+        return jax.tree.map(one, batch_template)
+
+    def jit_for(state_template, batch_template):
+        in_sh = (state_shardings(state_template),
+                 batch_sharding(batch_template))
+        return jax.jit(step_fn, in_shardings=in_sh,
+                       out_shardings=(in_sh[0], None),
+                       donate_argnums=(0,) if donate else ())
+
+    return step_fn, jit_for
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg, mesh: Optional[Mesh]):
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def serve_step(params, tokens, state):
+        ctx = (S.mesh_rules(mesh, rules) if mesh is not None
+               else _nullctx())
+        with ctx:
+            logits, new_state = M.decode_step(params, cfg, tokens, state)
+            return logits, new_state
+    return serve_step
+
+
+def make_prefill_step(cfg, mesh: Optional[Mesh], max_len: int | None = None):
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def prefill(params, tokens):
+        ctx = (S.mesh_rules(mesh, rules) if mesh is not None
+               else _nullctx())
+        with ctx:
+            return M.prefill_step(params, cfg, tokens, max_len=max_len)
+    return prefill
+
+
+def build_serve_step(cfg, mesh: Mesh):
+    step = make_serve_step(cfg, mesh)
+    _, pspecs = _model_specs(cfg)
+    sspecs = M.decode_state_specs(cfg)
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def jit_for(params_t, tokens_t, state_t):
+        p_sh = jax.tree.map(
+            lambda axes, leaf: NamedSharding(
+                mesh, S.param_spec(axes, leaf.shape, mesh)),
+            pspecs, params_t, is_leaf=_is_axes)
+        s_sh = jax.tree.map(
+            lambda axes, leaf: NamedSharding(
+                mesh, S.spec_for(axes, leaf.shape, mesh, rules)),
+            sspecs, state_t, is_leaf=_is_axes)
+        tok_axes = ("batch",) + (None,) * (len(tokens_t.shape) - 1)
+        t_sh = NamedSharding(mesh, S.spec_for(tok_axes, tokens_t.shape,
+                                              mesh, rules))
+        return jax.jit(step, in_shardings=(p_sh, t_sh, s_sh),
+                       out_shardings=(None, s_sh),
+                       donate_argnums=(2,))
+
+    return step, jit_for
+
+
+def build_prefill_step(cfg, mesh: Mesh, max_len: int | None = None):
+    step = make_prefill_step(cfg, mesh, max_len)
+    _, pspecs = _model_specs(cfg)
+    rules = S.rules_for_profile(cfg.sharding_profile)
+
+    def jit_for(params_t, tokens_t):
+        p_sh = jax.tree.map(
+            lambda axes, leaf: NamedSharding(
+                mesh, S.param_spec(axes, leaf.shape, mesh)),
+            pspecs, params_t, is_leaf=_is_axes)
+        tok_axes = ("batch",) + (None,) * (len(tokens_t.shape) - 1)
+        t_sh = NamedSharding(mesh, S.spec_for(tok_axes, tokens_t.shape,
+                                              mesh, rules))
+        return jax.jit(step, in_shardings=(p_sh, t_sh),
+                       out_shardings=None)
+
+    return step, jit_for

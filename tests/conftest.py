@@ -1,0 +1,36 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the single real CPU device; only launch/dryrun.py forces 512 host devices."""
+import numpy as np
+import pytest
+
+from repro.core import io as gio
+
+
+@pytest.fixture(scope="session")
+def small_uniform_graph():
+    return gio.uniform_graph(300, 2500, seed=2, weighted=True)
+
+
+@pytest.fixture(scope="session")
+def small_undirected_graph():
+    return gio.uniform_graph(300, 600, seed=3, directed=False)
+
+
+@pytest.fixture(scope="session")
+def lognormal_graph():
+    return gio.lognormal_graph(400, mu=1.2, sigma=1.0, seed=7, weighted=True)
+
+
+def nx_digraph(g):
+    """PropertyGraph -> networkx.DiGraph with min-folded parallel weights."""
+    import networkx as nx
+
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.num_vertices))
+    w = g.edge_props.get("weight", np.ones(g.num_edges, np.float32))
+    for s, d, ww in zip(g.src, g.dst, w):
+        s, d, ww = int(s), int(d), float(ww)
+        if G.has_edge(s, d):
+            ww = min(ww, G[s][d]["weight"])
+        G.add_edge(s, d, weight=ww)
+    return G

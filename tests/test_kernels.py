@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True
+executes the exact TPU kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# segment_combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("monoid", ["sum", "min", "max"])
+@pytest.mark.parametrize("E,V,D", [(1, 1, 1), (7, 3, 1), (200, 64, 4),
+                                   (777, 133, 5), (1024, 128, 128),
+                                   (513, 257, 3)])
+def test_segment_combine_shapes(monoid, E, V, D):
+    seg = np.sort(RNG.integers(0, V, E)).astype(np.int32)
+    vals = RNG.normal(size=(E, D)).astype(np.float32)
+    out = ops.segment_combine(jnp.asarray(vals), jnp.asarray(seg), V,
+                              monoid=monoid)
+    refo = ops.segment_combine_ref(jnp.asarray(vals), jnp.asarray(seg), V,
+                                   monoid=monoid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("monoid", ["sum", "min", "max"])
+def test_segment_combine_dtypes(dtype, monoid):
+    E, V, D = 300, 50, 3
+    seg = np.sort(RNG.integers(0, V, E)).astype(np.int32)
+    if dtype == jnp.int32:
+        vals = RNG.integers(-1000, 1000, (E, D)).astype(np.int32)
+    else:
+        vals = RNG.normal(size=(E, D)).astype(np.float32)
+    x = jnp.asarray(vals, dtype)
+    out = ops.segment_combine(x, jnp.asarray(seg), V, monoid=monoid)
+    refo = ops.segment_combine_ref(x, jnp.asarray(seg), V, monoid=monoid)
+    assert out.dtype == x.dtype
+    m = (ops.segment_combine_ref(jnp.ones((E, 1), jnp.float32),
+                                 jnp.asarray(seg), V, "sum")[:, 0] > 0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[np.asarray(m)],
+        np.asarray(refo, np.float32)[np.asarray(m)], rtol=tol, atol=tol)
+
+
+def test_segment_combine_1d_and_empty_segments():
+    seg = jnp.asarray([2, 2, 5], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 7.0], jnp.float32)
+    out = ops.segment_combine(vals, seg, 8, monoid="sum")
+    np.testing.assert_allclose(np.asarray(out),
+                               [0, 0, 3.0, 0, 0, 7.0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,S,Dh", [
+    (1, 1, 1, 8, 8, 64),
+    (2, 4, 2, 100, 100, 64),
+    (1, 8, 1, 128, 128, 128),     # MQA (kv=1, recurrentgemma-style)
+    (2, 6, 2, 96, 96, 64),        # non-pow2 heads
+    (1, 2, 2, 64, 192, 64),       # prefill-style T != S (q is a suffix)
+])
+def test_flash_attention_shapes(B, Hq, Hkv, T, S, Dh):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, T, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+    causal = T == S  # cross-length uses full attention in this sweep
+    o = ops.flash_attention(q, k, v, causal=causal)
+    r = ops.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 16, 17, 100, 4096])
+def test_flash_attention_window(window):
+    B, Hq, Hkv, T, Dh = 1, 4, 2, 130, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, T, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, window=window)
+    r = ops.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, Hq, Hkv, T, Dh = 2, 4, 4, 64, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, T, Dh)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.bfloat16)
+    o = ops.flash_attention(q, k, v, causal=True)
+    r = ops.mha_ref(q, k, v, causal=True)
+    assert o.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=5e-2,
+                               atol=5e-2)
+
+
+def test_flash_attention_block_sweep():
+    """Block shapes must not change results (VMEM tiling is semantics-free)."""
+    B, Hq, Hkv, T, Dh = 1, 2, 1, 192, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, T, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, Dh)), jnp.float32)
+    r = ops.mha_ref(q, k, v, causal=True)
+    for bq, bk in [(16, 16), (32, 64), (64, 32), (128, 128)]:
+        o = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-5,
+                                   atol=2e-5, err_msg=f"blocks {bq}x{bk}")

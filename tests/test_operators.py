@@ -1,0 +1,108 @@
+"""Native-operator correctness vs independent oracles (paper Fig. 8a algos)."""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import io as gio
+
+from conftest import nx_digraph
+
+ENGINES = ["pregel", "gas", "pushpull", "callback"]
+
+
+def pagerank_oracle(g, num_iters, damping=0.85):
+    """Power iteration with Pregel semantics (no dangling redistribution)."""
+    V = g.num_vertices
+    r = np.full(V, 1.0 / V, np.float64)
+    outdeg = np.maximum(g.out_degree.astype(np.float64), 1.0)
+    for _ in range(num_iters - 1):
+        contrib = r / outdeg
+        nxt = np.zeros(V, np.float64)
+        np.add.at(nxt, g.dst, contrib[g.src])
+        r = (1.0 - damping) / V + damping * nxt
+    return r
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sssp_matches_dijkstra(small_uniform_graph, engine):
+    import networkx as nx
+
+    g = small_uniform_graph
+    u = repro.UniGPS()
+    d, info = u.sssp(g, root=0, engine=engine)
+    G = nx_digraph(g)
+    nxd = nx.single_source_dijkstra_path_length(G, 0)
+    ref = np.full(g.num_vertices, np.inf)
+    for k, v in nxd.items():
+        ref[k] = v
+    assert np.all(np.isfinite(d) == np.isfinite(ref))
+    m = np.isfinite(ref)
+    np.testing.assert_allclose(d[m], ref[m], rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pagerank_matches_power_iteration(small_uniform_graph, engine):
+    g = small_uniform_graph
+    u = repro.UniGPS()
+    r, info = u.pagerank(g, num_iters=30, engine=engine)
+    ref = pagerank_oracle(g, 30)
+    np.testing.assert_allclose(r, ref, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cc_matches_networkx(small_undirected_graph, engine):
+    import networkx as nx
+
+    g = small_undirected_graph
+    u = repro.UniGPS()
+    lab, info = u.connected_components(g, engine=engine)
+    G = nx.Graph()
+    G.add_nodes_from(range(g.num_vertices))
+    G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    comps = list(nx.connected_components(G))
+    # one label per component, labels distinct across components
+    seen = set()
+    for c in comps:
+        labs = {int(lab[v]) for v in c}
+        assert len(labs) == 1
+        l = labs.pop()
+        assert l not in seen
+        seen.add(l)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bfs_matches_networkx(small_uniform_graph, engine):
+    import networkx as nx
+
+    g = small_uniform_graph
+    u = repro.UniGPS()
+    depth, info = u.bfs(g, root=0, engine=engine)
+    G = nx_digraph(g)
+    ref = nx.single_source_shortest_path_length(G, 0)
+    for v in range(g.num_vertices):
+        assert depth[v] == ref.get(v, -1)
+
+
+def test_degrees(small_uniform_graph):
+    g = small_uniform_graph
+    u = repro.UniGPS()
+    (outd, ind), _ = u.degrees(g)
+    np.testing.assert_array_equal(outd, g.out_degree)
+    np.testing.assert_array_equal(ind, g.in_degree)
+
+
+def test_sssp_on_skewed_graph(lognormal_graph):
+    """Power-law degree graphs (the paper's SNAP-like regime)."""
+    import networkx as nx
+
+    g = lognormal_graph
+    u = repro.UniGPS()
+    d, _ = u.sssp(g, root=0, engine="pushpull")
+    G = nx_digraph(g)
+    nxd = nx.single_source_dijkstra_path_length(G, 0)
+    ref = np.full(g.num_vertices, np.inf)
+    for k, v in nxd.items():
+        ref[k] = v
+    m = np.isfinite(ref)
+    assert np.all(np.isfinite(d) == m)
+    np.testing.assert_allclose(d[m], ref[m], rtol=1e-5, atol=1e-4)

@@ -1,0 +1,53 @@
+"""GPipe pipeline module: staged execution == sequential execution.
+Multi-stage runs need fresh interpreters (device count locks at init)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from repro.distributed.pipeline import make_pipelined_fn
+
+S = 4          # stages
+L_PER = 2      # layers per stage
+D = 16
+rng = np.random.default_rng(0)
+Ws = jnp.asarray(rng.normal(size=(S, L_PER, D, D)).astype(np.float32) * 0.3)
+
+def stage_fn(w_stage, x):
+    for i in range(L_PER):
+        x = jnp.tanh(x @ w_stage[i])
+    return x
+
+mesh = Mesh(np.asarray(jax.devices()[:S]), ("pipe",))
+piped = make_pipelined_fn(stage_fn, mesh, "pipe", num_microbatches=4)
+
+x = jnp.asarray(rng.normal(size=(8, D)).astype(np.float32))
+y_pipe = piped(Ws, x)
+
+y_seq = x
+for s in range(S):
+    y_seq = stage_fn(Ws[s], y_seq)
+
+err = float(jnp.abs(y_pipe - y_seq).max())
+print("RESULT:" + json.dumps({"err": err}))
+"""
+
+
+def test_pipeline_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads([l for l in r.stdout.splitlines()
+                      if l.startswith("RESULT:")][0][7:])
+    assert out["err"] < 1e-5

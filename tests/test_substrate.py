@@ -1,0 +1,196 @@
+"""Substrate tests: optimizer, data pipeline determinism, checkpoint
+round-trip/reshard, gradient compression, sharding rule resolution."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import Prefetcher, SyntheticLMDataset
+from repro.distributed import compression as C
+from repro.distributed import sharding as S
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         linear_warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray(2.0)}
+    target = {"w": jnp.asarray([1.0, 1.0]), "b": jnp.asarray(0.0)}
+    state = adamw_init(params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, lr=5e-2,
+                                     weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+    assert int(state.step) == 300
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), 20.0)
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    lr = linear_warmup_cosine(1e-3, 10, 100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.int32(10))), 1e-3, rtol=1e-5)
+    assert float(lr(jnp.int32(100))) < float(lr(jnp.int32(50)))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_dataset_deterministic_per_step():
+    d1 = SyntheticLMDataset(1000, 32, 4, seed=7)
+    d2 = SyntheticLMDataset(1000, 32, 4, seed=7)
+    np.testing.assert_array_equal(d1.batch(5), d2.batch(5))
+    assert not np.array_equal(d1.batch(5), d1.batch(6))
+    b = d1.batch(0)
+    assert b.shape == (4, 33) and b.min() >= 0 and b.max() < 1000
+
+
+def test_prefetcher_order_and_restart():
+    d = SyntheticLMDataset(100, 8, 2, seed=1)
+    pf = Prefetcher(d, start_step=3)
+    s, b = pf.next()
+    assert s == 3
+    np.testing.assert_array_equal(b, d.batch(3))
+    s2, _ = pf.next()
+    assert s2 == 4
+    pf.close()
+
+
+def test_host_sharded_batches_disjoint():
+    g = SyntheticLMDataset(100, 8, 4, seed=2, num_hosts=2, host_id=0)
+    h = SyntheticLMDataset(100, 8, 4, seed=2, num_hosts=2, host_id=1)
+    assert g.batch(0).shape == (2, 9)
+    assert not np.array_equal(g.batch(0), h.batch(0))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": (jnp.int32(3), [jnp.ones(4)])}
+    for s in (10, 20, 30):
+        mgr.save(s, tree, {"tag": "t"})
+    assert mgr.all_steps() == [20, 30]  # keep=2 pruned step 10
+    restored = mgr.restore(jax.tree.map(np.zeros_like, tree))
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["opt"][0] == 3
+    assert mgr.metadata()["step"] == 30
+
+
+def test_checkpoint_namedtuple_roundtrip(tmp_path):
+    from repro.train.step import TrainState
+    from repro.optim.adamw import AdamWState
+    p = {"w": jnp.ones((2, 2))}
+    st = TrainState(params=p, opt=AdamWState(jnp.int32(5),
+                                             {"w": jnp.zeros((2, 2))},
+                                             {"w": jnp.zeros((2, 2))}),
+                    step=jnp.int32(5))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, st)
+    back = mgr.restore(jax.tree.map(np.zeros_like, st))
+    assert isinstance(back, TrainState)
+    assert int(back.step) == 5
+    np.testing.assert_array_equal(back.params["w"], np.ones((2, 2)))
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, {"x": jnp.ones(3)})
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_checkpoint_reshard_on_load(tmp_path):
+    """A checkpoint restores under a *different* sharding (elastic)."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"w": jnp.arange(8.0)}
+    mgr.save(1, tree)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = mgr.restore({"w": np.zeros(8)}, shardings={"w": sh})
+    assert out["w"].sharding == sh
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+
+def test_compressed_psum_unbiased_over_time():
+    """Error feedback: accumulated compressed updates converge to the true
+    mean even though each step quantizes to int8."""
+    import functools
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    g_true = {"w": jnp.asarray(np.linspace(-1, 1, 64), jnp.float32)}
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_vma=False)
+    def step(g, e):
+        return C.compressed_psum(g, e, "data")
+
+    err = C.init_error_state(g_true)
+    acc = jnp.zeros_like(g_true["w"])
+    for _ in range(50):
+        mean, err = step(g_true, err)
+        acc = acc + mean["w"]
+    np.testing.assert_allclose(np.asarray(acc) / 50,
+                               np.asarray(g_true["w"]), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def _mesh2d(d=2, m=2):
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((d, m), object)
+    return FakeMesh()
+
+
+def test_divisibility_fallback():
+    mesh = _mesh2d(2, 2)
+    # divisible -> sharded
+    spec = S.param_spec(("vocab", "embed"), (100, 64), mesh)
+    assert spec == jax.sharding.PartitionSpec("model", "data")
+    # odd vocab -> falls back to replicated on that dim
+    spec = S.param_spec(("vocab", "embed"), (49155, 64), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, "data")
+    # same mesh axis never used twice in one spec
+    spec = S.act_spec(("seq", "act_heads"), (16, 16), mesh)
+    assert tuple(spec) .count("model") <= 1
+
+
+def test_batch_rule_prefers_pod_data():
+    class FakeMesh3:
+        axis_names = ("pod", "data", "model")
+        devices = np.empty((2, 2, 2), object)
+    spec = S.act_spec(("batch", None), (8, 3), FakeMesh3())
+    assert spec[0] == ("pod", "data")
+    # batch=1 (long_500k) falls back to replicated
+    spec = S.act_spec(("batch", None), (1, 3), FakeMesh3())
+    assert spec[0] is None

@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+
+  * monoid laws the paper imposes on merge_message (§III-C)
+  * segment_combine == loop-based per-vertex merge for random graphs
+  * graph construction invariants (dst-sorted canonical order, CSR pointers,
+    permutation consistency)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as gmod
+from repro.core import records, vcprog
+from repro.core.operators import CCProgram, PageRankProgram, SSSPProgram
+
+
+# ---------------------------------------------------------------------------
+# Monoid laws for the shipped operator programs
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(min_value=-2.0**90, max_value=2.0**90, width=32,
+                       allow_nan=False, allow_infinity=False,
+                       allow_subnormal=False)
+
+
+@given(a=finite_f32, b=finite_f32, c=finite_f32)
+@settings(max_examples=50, deadline=None)
+def test_sssp_monoid_laws(a, b, c):
+    p = SSSPProgram(root=0)
+    ma, mb, mc = ({"distance": jnp.float32(x)} for x in (a, b, c))
+    e = p.empty_message()
+    comm1 = p.merge_message(ma, mb)["distance"]
+    comm2 = p.merge_message(mb, ma)["distance"]
+    assert float(comm1) == float(comm2)
+    ass1 = p.merge_message(ma, p.merge_message(mb, mc))["distance"]
+    ass2 = p.merge_message(p.merge_message(ma, mb), mc)["distance"]
+    assert float(ass1) == float(ass2)
+    ident = p.merge_message(ma, e)["distance"]
+    assert float(ident) == float(jnp.float32(a))
+
+
+@given(a=st.integers(0, 2**31 - 2), b=st.integers(0, 2**31 - 2))
+@settings(max_examples=50, deadline=None)
+def test_cc_monoid_laws(a, b):
+    p = CCProgram()
+    ma = {"label": jnp.int32(a)}
+    mb = {"label": jnp.int32(b)}
+    e = p.empty_message()
+    assert int(p.merge_message(ma, mb)["label"]) == int(
+        p.merge_message(mb, ma)["label"]) == min(a, b)
+    assert int(p.merge_message(ma, e)["label"]) == a
+
+
+# ---------------------------------------------------------------------------
+# segment_combine == reference per-vertex merge loop
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_edges(draw):
+    V = draw(st.integers(2, 24))
+    E = draw(st.integers(1, 80))
+    src = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+    dst = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+    vals = draw(st.lists(st.floats(min_value=-100, max_value=100, width=32,
+                                   allow_nan=False), min_size=E, max_size=E))
+    valid = draw(st.lists(st.booleans(), min_size=E, max_size=E))
+    return V, np.array(src, np.int32), np.array(dst, np.int32), \
+        np.array(vals, np.float32), np.array(valid, bool)
+
+
+@given(data=random_edges(), monoid=st.sampled_from(["sum", "min", "max",
+                                                    "general"]))
+@settings(max_examples=40, deadline=None)
+def test_segment_combine_matches_loop(data, monoid):
+    V, src, dst, vals, valid = data
+    order = np.argsort(dst, kind="stable")
+    dst_s, vals_s, valid_s = dst[order], vals[order], valid[order]
+
+    class P(vcprog.VCProgram):
+        pass
+
+    P.monoid = monoid
+    if monoid == "sum":
+        P.merge_message = lambda self, a, b: {"x": a["x"] + b["x"]}
+        P.empty_message = lambda self: {"x": jnp.float32(0.0)}
+        fold = lambda xs: np.float32(sum(xs, np.float32(0.0)))
+    elif monoid == "min":
+        P.merge_message = lambda self, a, b: {"x": jnp.minimum(a["x"], b["x"])}
+        P.empty_message = lambda self: {"x": jnp.float32(3.4e38)}
+        fold = lambda xs: np.float32(min(xs, default=np.float32(3.4e38)))
+    elif monoid == "max":
+        P.merge_message = lambda self, a, b: {"x": jnp.maximum(a["x"], b["x"])}
+        P.empty_message = lambda self: {"x": jnp.float32(-3.4e38)}
+        fold = lambda xs: np.float32(max(xs, default=np.float32(-3.4e38)))
+    else:  # general: use sum via the associative_scan path
+        P.merge_message = lambda self, a, b: {"x": a["x"] + b["x"]}
+        P.empty_message = lambda self: {"x": jnp.float32(0.0)}
+        fold = lambda xs: np.float32(sum(xs, np.float32(0.0)))
+
+    p = P()
+    inbox, has_msg = vcprog.segment_combine(
+        p, {"x": jnp.asarray(vals_s)}, jnp.asarray(dst_s),
+        jnp.asarray(valid_s), V, p.empty_message())
+    inbox = np.asarray(inbox["x"])
+    has_msg = np.asarray(has_msg)
+
+    for v in range(V):
+        xs = [np.float32(x) for x, d, ok in zip(vals_s, dst_s, valid_s)
+              if d == v and ok]
+        expect = fold(xs)
+        np.testing.assert_allclose(inbox[v], expect, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"vertex {v} monoid {monoid}")
+        assert bool(has_msg[v]) == (len(xs) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Graph construction invariants
+# ---------------------------------------------------------------------------
+
+@given(data=random_edges())
+@settings(max_examples=30, deadline=None)
+def test_graph_invariants(data):
+    V, src, dst, vals, _ = data
+    g = gmod.from_edges(src, dst, V, edge_props={"w": vals})
+    # canonical order is dst-sorted
+    assert np.all(np.diff(g.dst) >= 0)
+    # CSR pointers match dst counts
+    counts = np.bincount(g.dst, minlength=V)
+    np.testing.assert_array_equal(np.diff(g.in_indptr), counts)
+    # csc_perm produces src-sorted view with aligned props
+    s2, d2, ep2 = g.src_sorted()
+    assert np.all(np.diff(s2) >= 0)
+    # the permuted (src,dst,w) multiset matches the canonical one
+    a = sorted(zip(g.src.tolist(), g.dst.tolist(), g.edge_props["w"].tolist()))
+    b = sorted(zip(s2.tolist(), d2.tolist(), ep2["w"].tolist()))
+    assert a == b
+    # degrees
+    np.testing.assert_array_equal(g.out_degree, np.bincount(g.src, minlength=V))
+    np.testing.assert_array_equal(g.in_degree, counts)
+
+
+@given(st.integers(2, 30), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_partition_covers_all_edges(V, P):
+    rng = np.random.default_rng(V * 31 + P)
+    E = max(1, V * 2)
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = rng.integers(0, V, E).astype(np.int32)
+    g = gmod.from_edges(src, dst, V)
+    part = gmod.partition_graph(g, P)
+    # every edge appears exactly once across buckets
+    tot = int(part.edge_mask.sum())
+    assert tot == g.num_edges
+    # dst-local ids within range
+    assert np.all(part.edge_dst_local[part.edge_mask] >= 0)
+    assert np.all(part.edge_dst_local[part.edge_mask] < part.v_per_part)
+    # edge_prop_idx is a permutation of valid edges
+    idx = part.edge_prop_idx[part.edge_mask]
+    assert sorted(idx.tolist()) == list(range(g.num_edges))
