@@ -1,6 +1,13 @@
-"""Kernel micro-bench: Pallas segment-combine (interpret mode on CPU — the
-numbers validate plumbing, not TPU perf; TPU perf comes from the roofline)
-vs the jnp segment ops and the one-hot matmul it replaces."""
+"""Message-plane kernel bench: the fused gather–emit–combine single pass
+vs the three-pass baseline it replaces, on the PageRank-shaped workload
+(E=2^17, payload D∈{1,8}), plus the blocked segment-combine kernel.
+
+The one-pass/three-pass comparison times the *dataflow* on the current
+backend: three separately-materialized device calls (gather src props,
+evaluate emit, segment-combine — three full E-sized HBM round trips, the
+seed's per-iteration shape) against the single fused pass the engines now
+run. Pallas rows on CPU execute in interpret mode — they validate the
+exact TPU code path, not TPU performance."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,26 +17,139 @@ from repro.kernels import ops
 from .common import row, timeit
 
 
-def main(E=20000, V=2048, D=8):
+def _pagerank_workload(E, V, D, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    rank = rng.random((V, D)).astype(np.float32)
+    deg = np.maximum(np.bincount(src, minlength=V), 1).astype(np.float32)
+    return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(rank),
+            jnp.asarray(deg))
+
+
+def bench_fused_vs_threepass(E, V, D):
+    """PageRank message plane: contrib = rank[src]/deg[src], sum at dst."""
+    src, dst, rank, deg = _pagerank_workload(E, V, D)
+
+    # three-pass baseline (the seed's per-iteration shape): every stage
+    # materializes its E-sized output, and the combine's has_msg metadata
+    # is re-derived as its own pass
+    gather = jax.jit(lambda r, d, s: (jnp.take(r, s, axis=0),
+                                      jnp.take(d, s, axis=0)))
+    emit = jax.jit(lambda rs, ds: rs / ds[:, None])
+    combine = jax.jit(lambda m, seg: jax.ops.segment_sum(
+        m, seg, num_segments=V, indices_are_sorted=True))
+    has_msg = jax.jit(lambda seg: jax.ops.segment_max(
+        jnp.ones_like(seg), seg, num_segments=V,
+        indices_are_sorted=True) > 0)
+
+    def threepass():
+        rs, ds = gather(rank, deg, src)
+        jax.block_until_ready((rs, ds))
+        m = emit(rs, ds)
+        jax.block_until_ready(m)
+        return jax.block_until_ready((combine(m, dst), has_msg(dst)))
+
+    # fused single pass: one compiled traversal, no E-sized HBM round trips
+    @jax.jit
+    def onepass(r, d, s, seg):
+        inbox = jax.ops.segment_sum(jnp.take(r, s, axis=0)
+                                    / jnp.take(d, s, axis=0)[:, None],
+                                    seg, num_segments=V,
+                                    indices_are_sorted=True)
+        hm = jax.ops.segment_max(jnp.ones_like(seg), seg, num_segments=V,
+                                 indices_are_sorted=True) > 0
+        return inbox, hm
+
+    ref, _ = threepass()
+    out, _ = jax.block_until_ready(onepass(rank, deg, src, dst))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+    # genuinely interleaved min-of-5 rounds (threepass/onepass alternate
+    # within each round): host timing on a shared CPU is noisy and this
+    # pair gates CI — interleaving exposes both sides to the same load,
+    # and the min is the least-loaded estimate
+    one = lambda: jax.block_until_ready(onepass(rank, deg, src, dst))
+    t3s, t1s = [], []
+    for _ in range(5):
+        t3s.append(timeit(threepass, iters=15))
+        t1s.append(timeit(one, iters=15))
+    t3, t1 = min(t3s), min(t1s)
+    speedup = t3 / max(t1, 1e-12)
+    row(f"kernel.threepass.D{D}", t3, f"E={E};V={V};3 materialized passes")
+    row(f"kernel.fused_gec.D{D}", t1,
+        f"E={E};V={V};speedup={speedup:.2f}x;backend={jax.default_backend()}")
+    return speedup
+
+
+def bench_fused_pallas(E, V, monoid):
+    """The actual fused Pallas kernel (interpret on CPU = correctness-path
+    timing) on a scalar-leaf PageRank/SSSP-shaped program."""
+    src, dst, rank, deg = _pagerank_workload(E, V, 1)
+    vprops = {"rank": rank[:, 0], "deg": deg}
+    active = jnp.ones((V,), bool)
+
+    if monoid == "sum":
+        def emit(s, d, sp, ep):
+            return jnp.bool_(True), {"rank": sp["rank"] / sp["deg"]}
+    else:
+        def emit(s, d, sp, ep):
+            return sp["rank"] < 0.9, {"rank": sp["rank"] + 1.0}
+
+    def run():
+        inbox, hm = ops.gather_emit_combine(emit, monoid, src, dst, vprops,
+                                            {}, active, V)
+        return jax.block_until_ready((inbox, hm))
+
+    t = timeit(run, iters=1, warmup=1)
+    row(f"kernel.fused_gec.{monoid}.pallas_interpret", t,
+        f"E={E};V={V};correctness-path timing")
+
+
+def main(quick: bool = False, E: int | None = None, V: int | None = None):
+    E = E or (1 << 13 if quick else 1 << 17)
+    V = V or max(E // 8, 64)
+
+    speedups = [bench_fused_vs_threepass(E, V, D) for D in (1, 8)]
+    gmean = float(np.prod(speedups)) ** (1 / len(speedups))
+    # summary only — NOT a row(): a fake 0-us timing would pollute the
+    # machine-readable trajectory (per-D speedups live in the rows above)
+    print(f"# kernel.fused_gec geomean_speedup={gmean:.2f}x", flush=True)
+    if gmean <= 1.0:
+        raise AssertionError(
+            f"fused one-pass slower than three-pass baseline ({gmean:.2f}x)")
+
+    # blocked segment-combine kernel: jnp oracle vs interpret-mode Pallas;
+    # min/max now run the segmented-scan path at the full block_e=512
     rng = np.random.default_rng(0)
-    seg = np.sort(rng.integers(0, V, E)).astype(np.int32)
-    vals = rng.normal(size=(E, D)).astype(np.float32)
+    Ek, Vk, Dk = (4000, 512, 8) if quick else (20000, 2048, 8)
+    seg = np.sort(rng.integers(0, Vk, Ek)).astype(np.int32)
+    vals = rng.normal(size=(Ek, Dk)).astype(np.float32)
     segj, valsj = jnp.asarray(seg), jnp.asarray(vals)
 
-    ref = jax.jit(lambda v, s: ops.segment_combine_ref(v, s, V, "sum"))
+    ref = jax.jit(lambda v, s: ops.segment_combine_ref(v, s, Vk, "sum"))
     ref(valsj, segj).block_until_ready()
     t = timeit(lambda: ref(valsj, segj).block_until_ready(), iters=5)
-    row("kernel.segment_sum.jnp_ref", t, f"E={E};D={D}")
+    row("kernel.segment_sum.jnp_ref", t, f"E={Ek};D={Dk}")
 
-    t = timeit(lambda: ops.segment_combine(valsj, segj, V, "sum")
-               .block_until_ready(), iters=2)
-    row("kernel.segment_sum.pallas_interpret", t, "correctness-path timing")
+    for monoid in ("sum", "min", "max"):
+        t = timeit(lambda: ops.segment_combine(valsj, segj, Vk, monoid,
+                                               block_e=512)
+                   .block_until_ready(), iters=1)
+        row(f"kernel.segment_{monoid}.pallas_interpret", t,
+            "block_e=512;correctness-path timing")
 
     # one-hot matmul (what the MXU actually executes on TPU)
-    onehot = jax.jit(lambda v, s: jax.nn.one_hot(s, V, dtype=v.dtype).T @ v)
+    onehot = jax.jit(lambda v, s: jax.nn.one_hot(s, Vk, dtype=v.dtype).T @ v)
     onehot(valsj, segj).block_until_ready()
     t = timeit(lambda: onehot(valsj, segj).block_until_ready(), iters=5)
     row("kernel.segment_sum.onehot_matmul", t, "MXU-shaped formulation")
+
+    bench_fused_pallas(1 << 10 if quick else 1 << 12,
+                       256 if quick else 512, "sum")
+    bench_fused_pallas(1 << 10 if quick else 1 << 12,
+                       256 if quick else 512, "min")
 
 
 if __name__ == "__main__":

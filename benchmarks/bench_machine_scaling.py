@@ -48,10 +48,10 @@ print("RESULT:" + json.dumps(out))
 
 
 def main():
+    from repro.envutil import subprocess_env
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=subprocess_env())
     if r.returncode != 0:
         row("fig8c.error", 0.0, r.stderr[-200:].replace(",", ";"))
         return

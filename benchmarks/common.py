@@ -1,6 +1,10 @@
 """Shared benchmark helpers. All benches print ``name,us_per_call,derived``
-CSV rows so run.py can aggregate."""
+CSV rows so run.py can aggregate; rows are also collected in RESULTS for
+the ``--json`` trajectory output (BENCH_*.json)."""
 import time
+
+#: every row() call lands here; run.py serializes it with --json
+RESULTS = []
 
 
 def timeit(fn, *, warmup=1, iters=3):
@@ -13,4 +17,6 @@ def timeit(fn, *, warmup=1, iters=3):
 
 
 def row(name, seconds, derived=""):
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -29,11 +29,19 @@ DEFAULT_ENGINE = "pushpull"
 
 
 class UniGPS:
-    """Session handle; holds defaults (engine, kernel opt-in)."""
+    """Session handle; holds defaults (engine, kernel mode).
 
-    def __init__(self, engine: str = DEFAULT_ENGINE, use_kernel: bool = False):
+    kernel: "auto" picks the fused Pallas message-plane kernels on TPU and
+    the XLA segment ops on CPU; "on"/"off" force a path. `use_kernel` is
+    the legacy boolean alias and wins when given.
+    """
+
+    def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
+                 use_kernel: bool | None = None):
         self.engine = engine
-        self.use_kernel = use_kernel
+        self.kernel = "on" if use_kernel else kernel
+        if use_kernel is False:
+            self.kernel = "off"
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -65,7 +73,8 @@ class UniGPS:
         eng = engine or self.engine
         vprops, info = run_vcprog(user_program, graph, max_iter=max_iter,
                                   engine=eng,
-                                  use_kernel=kw.get("use_kernel", self.use_kernel))
+                                  kernel=kw.get("kernel", self.kernel),
+                                  use_kernel=kw.get("use_kernel"))
         if output_file:
             host = {k: np.asarray(v) for k, v in vprops.items()}
             gio.save_vertex_table(host, output_file)
@@ -76,7 +85,7 @@ class UniGPS:
                  engine: Optional[str] = None, output_file: Optional[str] = None):
         ranks, info = operators.pagerank(graph, num_iters, damping,
                                          engine=engine or self.engine,
-                                         use_kernel=self.use_kernel)
+                                         kernel=self.kernel)
         if output_file:
             gio.save_vertex_table({"rank": ranks}, output_file)
         return ranks, info
@@ -85,7 +94,7 @@ class UniGPS:
              engine: Optional[str] = None, output_file: Optional[str] = None):
         dist, info = operators.sssp(graph, root, max_iter,
                                     engine=engine or self.engine,
-                                    use_kernel=self.use_kernel)
+                                    kernel=self.kernel)
         if output_file:
             gio.save_vertex_table({"distance": dist}, output_file)
         return dist, info
@@ -95,7 +104,7 @@ class UniGPS:
                              output_file: Optional[str] = None):
         labels, info = operators.connected_components(
             graph, max_iter, engine=engine or self.engine,
-            use_kernel=self.use_kernel)
+            kernel=self.kernel)
         if output_file:
             gio.save_vertex_table({"label": labels}, output_file)
         return labels, info
@@ -104,7 +113,8 @@ class UniGPS:
             engine: Optional[str] = None):
         return operators.bfs(graph, root, max_iter,
                              engine=engine or self.engine,
-                             use_kernel=self.use_kernel)
+                             kernel=self.kernel)
 
     def degrees(self, graph, engine: Optional[str] = None):
-        return operators.degrees(graph, engine=engine or self.engine)
+        return operators.degrees(graph, engine=engine or self.engine,
+                                 kernel=self.kernel)

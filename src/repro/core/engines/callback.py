@@ -50,14 +50,17 @@ class CallbackEngine:
 
     # Phase 3 + Phase 1 on the host ----------------------------------------
     def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
-                         use_kernel):
+                         kernel_on):
         V = gdev["num_vertices"]
 
         def host(vp, act, src, dst, eprops):
             g = {"src": jnp.asarray(src), "dst": jnp.asarray(dst),
                  "eprops": eprops, "num_vertices": V}
+            # rebuild the empty record host-side: the traced `empty` closure
+            # is a jit-scope tracer and must not leak into eager execution
+            empty_h = jax.tree.map(jnp.asarray, program.empty_message())
             inbox, has_msg = pull_emit_and_combine(
-                g, program, vp, jnp.asarray(act), empty, use_kernel=False)
+                g, program, vp, jnp.asarray(act), empty_h, kernel_on=False)
             return jax.tree.map(np.asarray, (inbox, has_msg))
 
         inbox_shape = _as_shapes(records.tree_tile(empty, V))

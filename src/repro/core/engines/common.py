@@ -13,13 +13,22 @@ from ..graph import PropertyGraph
 
 
 def prepare_device_graph(g: PropertyGraph) -> Dict[str, Any]:
-    """Host→device conversion of the canonical + src-sorted edge layouts."""
+    """Host→device conversion of the canonical + src-sorted edge layouts.
+
+    Also precomputes the static segment metadata of the dst-sorted order
+    (CSC row pointers are already on the graph as `in_indptr`): per-vertex
+    last-in-edge index and has-in-edge mask. These are loop constants the
+    combine phase previously re-derived with `searchsorted`/`segment_sum`
+    inside every `lax.while_loop` iteration.
+    """
     src_s, dst_s, eprops_s = g.src_sorted()
     inv_csc = np.empty_like(g.csc_perm)
     inv_csc[g.csc_perm] = np.arange(g.csc_perm.shape[0])
+    E = int(g.num_edges)
+    last_edge = np.clip(g.in_indptr[1:] - 1, 0, max(E - 1, 0))
     return {
         "num_vertices": int(g.num_vertices),
-        "num_edges": int(g.num_edges),
+        "num_edges": E,
         "src": jnp.asarray(g.src),
         "dst": jnp.asarray(g.dst),
         "eprops": jax.tree.map(jnp.asarray, g.edge_props),
@@ -31,10 +40,15 @@ def prepare_device_graph(g: PropertyGraph) -> Dict[str, Any]:
         "out_degree": jnp.asarray(g.out_degree),
         "in_degree": jnp.asarray(g.in_degree),
         "vprops_in": jax.tree.map(jnp.asarray, g.vertex_props),
+        # static segment structure of the canonical order, derived from the
+        # CSC row pointers (g.in_indptr stays host-side on the graph)
+        "seg_meta": vcprog.SegmentMeta(
+            last_edge=jnp.asarray(last_edge.astype(np.int32)),
+            has_edge=jnp.asarray(g.in_degree > 0)),
     }
 
 
-def _run_compiled(program, gdev, max_iter: int, engine, use_kernel: bool):
+def _run_compiled(program, gdev, max_iter: int, engine, kernel_on: bool):
     V = gdev["num_vertices"]
     empty = jax.tree.map(jnp.asarray, program.empty_message())
 
@@ -56,7 +70,7 @@ def _run_compiled(program, gdev, max_iter: int, engine, use_kernel: bool):
             vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                                   process, it)
         inbox, has_msg, extra = engine.emit_and_combine(
-            gdev, program, vprops, active, extra, empty, use_kernel)
+            gdev, program, vprops, active, extra, empty, kernel_on)
         return vprops, active, inbox, has_msg, extra
 
     state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
@@ -67,7 +81,7 @@ def _run_compiled(program, gdev, max_iter: int, engine, use_kernel: bool):
 
 @functools.lru_cache(maxsize=64)
 def _jitted_runner(engine_name: str, program_key, max_iter: int,
-                   use_kernel: bool, V: int, E: int):
+                   kernel_on: bool, V: int, E: int):
     from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
     engine = ENGINES[engine_name]
     program = program_key.program
@@ -76,7 +90,7 @@ def _jitted_runner(engine_name: str, program_key, max_iter: int,
         gdev = dict(gdev_arrays)
         gdev["num_vertices"] = V
         gdev["num_edges"] = E
-        return _run_compiled(program, gdev, max_iter, engine, use_kernel)
+        return _run_compiled(program, gdev, max_iter, engine, kernel_on)
 
     return jax.jit(run)
 
@@ -104,9 +118,14 @@ class _ProgramKey:
 
 
 def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
-               engine: str = "pushpull", use_kernel: bool = False,
+               engine: str = "pushpull", kernel: str | bool = "auto",
+               use_kernel: bool | None = None,
                gdev: Dict[str, Any] | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
+
+    kernel: "auto" (default) picks the fused/segment Pallas kernels on TPU
+    and the XLA segment ops on CPU; "on"/"off" force a path. `use_kernel`
+    is the legacy boolean alias and wins when given.
 
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
@@ -116,10 +135,12 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
         return distributed.run_vcprog_distributed(program, graph, max_iter)
     if gdev is None:
         gdev = prepare_device_graph(graph)
+    kernel_on = vcprog.resolve_kernel_mode(
+        use_kernel if use_kernel is not None else kernel)
     arrays = {k: v for k, v in gdev.items()
               if k not in ("num_vertices", "num_edges")}
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
-                            bool(use_kernel), gdev["num_vertices"],
+                            kernel_on, gdev["num_vertices"],
                             gdev["num_edges"])
     vprops, iters, num_active = runner(arrays)
     return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}

@@ -40,6 +40,21 @@ AXIS = "graph"
 # Host-side: partition -> device arrays (leading dim P, sharded over AXIS)
 # ---------------------------------------------------------------------------
 
+def _bucket_segment_meta(edge_dst_local, edge_mask, v_pp: int):
+    """Static per-bucket segment structure ([P, B, v_pp] last valid slot +
+    has-edge mask) — computed once host-side so no iteration re-derives it
+    with segment reductions inside the compiled loop."""
+    Pn, B, L = edge_dst_local.shape
+    last = np.full((Pn * B, max(v_pp, 1)), -1, np.int64)
+    rows, slots = np.nonzero(edge_mask.reshape(Pn * B, L))
+    np.maximum.at(last, (rows, edge_dst_local.reshape(Pn * B, L)[rows, slots]),
+                  slots)
+    has = last >= 0
+    last = np.clip(last, 0, max(L - 1, 0))
+    shape = (Pn, B, max(v_pp, 1))
+    return last.reshape(shape).astype(np.int32), has.reshape(shape)
+
+
 def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
     part = partition_graph(g, num_parts)
     Pn, v_pp = part.num_parts, part.v_per_part
@@ -55,6 +70,8 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
     eprops = {k: np.asarray(v)[part.edge_prop_idx]
               for k, v in g.edge_props.items()}
     src_local = part.edge_src % v_pp if v_pp else part.edge_src
+    bucket_last, bucket_has = _bucket_segment_meta(part.edge_dst_local,
+                                                   part.edge_mask, v_pp)
 
     # The [P(dst part), B(src-part bucket), L] layout transposes into the
     # push engine's [P(src part), B(dst-part bucket), L] view for free —
@@ -70,6 +87,9 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
         "edge_dst_global": (part.edge_dst_local
                             + part.v_start[:, None, None]).astype(np.int32),
         "edge_mask": part.edge_mask,
+        # [P, B, v_pp] static segment structure of each bucket's dst runs
+        "bucket_last_edge": bucket_last,
+        "bucket_has_edge": bucket_has,
         "eprops": eprops,          # [P, B, L, ...]
         "out_degree": pad_v(g.out_degree),
         "vprops_in": {k: pad_v(v) for k, v in g.vertex_props.items()},
@@ -81,15 +101,34 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
 # Device-side iteration (runs inside shard_map; all args are LOCAL slices)
 # ---------------------------------------------------------------------------
 
-def _bucket_combine(program, empty, inbox, has_msg, msgs, valid, dst_local,
+def _merge_partial(program, inbox, has_msg, part, ph):
+    """Monoid-merge a partial inbox (part, ph) into the running (inbox,
+    has_msg) — the shared fold body of the bucket loop and the push
+    schedule's all_to_all partial exchange."""
+    merged = jax.vmap(program.merge_message)(inbox, part)
+    inbox = records.tree_where(ph & has_msg, merged,
+                               records.tree_where(ph, part, inbox))
+    return inbox, has_msg | ph
+
+
+def _fold_partials(program):
+    """lax.scan body folding [P, v_pp] partial inboxes with the monoid."""
+
+    def fold(carry, x):
+        inbox, has_msg = carry
+        part, ph = x
+        return _merge_partial(program, inbox, has_msg, part, ph), None
+
+    return fold
+
+
+def _bucket_combine(program, empty, inbox, has_msg, msgs, valid, bucket,
                     v_pp):
     """Merge one bucket's emissions into the local inbox (monoid merge)."""
     b_inbox, b_has = vcprog.segment_combine(
-        program, msgs, dst_local, valid, v_pp, empty)
-    merged = jax.vmap(program.merge_message)(inbox, b_inbox)
-    inbox = records.tree_where(b_has & has_msg, merged,
-                               records.tree_where(b_has, b_inbox, inbox))
-    return inbox, has_msg | b_has
+        program, msgs, bucket["dst_local"], valid, v_pp, empty,
+        meta=bucket["seg_meta"])
+    return _merge_partial(program, inbox, has_msg, b_inbox, b_has)
 
 
 def _emit_bucket(program, src_props_part, active_part, bucket):
@@ -112,7 +151,6 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
     [B=P, L, ...] for this device's dst range. Returns updated local state
     + global num_active.
     """
-    empty = None  # bound lazily inside (needs jnp)
 
     def local_step(it, vprops, active, inbox, has_msg, edges):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
@@ -128,7 +166,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
         has0 = jnp.zeros((v_pp,), bool)
 
         def bucket_at(b):
-            return {
+            bk = {
                 "src_local": edges["edge_src_local"][b],
                 "src_global": edges["edge_src_global"][b],
                 "dst_global": edges["edge_dst_global"][b],
@@ -136,6 +174,19 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 "mask": edges["edge_mask"][b],
                 "eprops": jax.tree.map(lambda a: a[b], edges["eprops"]),
             }
+            if "bucket_last_edge" in edges:  # precomputed (host-side)
+                bk["seg_meta"] = vcprog.SegmentMeta(
+                    last_edge=edges["bucket_last_edge"][b],
+                    has_edge=edges["bucket_has_edge"][b])
+            else:
+                # compat fallback for hand-built edges dicts (every
+                # in-repo producer — build_sharded_graph and the dry-run
+                # templates — precomputes the metadata; this mask-aware
+                # in-trace derivation keeps external local_step callers
+                # working, at the old per-iteration cost)
+                bk["seg_meta"] = vcprog.make_segment_meta(
+                    bk["dst_local"], v_pp, valid=bk["mask"])
+            return bk
 
         if skip_buckets:
             # cost-calibration variant: everything EXCEPT the bucket loop
@@ -171,17 +222,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     partials)
                 exh = jax.lax.all_to_all(phas, AXIS, split_axis=0,
                                          concat_axis=0)
-
-                def fold0(carry, x):
-                    ib, hm = carry
-                    part, ph = x
-                    merged = jax.vmap(program.merge_message)(ib, part)
-                    ib = records.tree_where(
-                        ph & hm, merged, records.tree_where(ph, part, ib))
-                    return (ib, hm | ph), None
-
-                (inbox, has_msg), _ = jax.lax.scan(fold0, (inbox0, has0),
-                                                   (ex, exh))
+                (inbox, has_msg), _ = jax.lax.scan(
+                    _fold_partials(program), (inbox0, has0), (ex, exh))
         elif schedule == "allgather":
             all_vp = jax.lax.all_gather(vprops, AXIS)       # [P, v_pp, ...]
             all_act = jax.lax.all_gather(active, AXIS)
@@ -192,8 +234,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 msgs, valid = _emit_bucket(
                     program, records.tree_row(all_vp, b), all_act[b], bk)
                 inbox, has_msg = _bucket_combine(
-                    program, empty, inbox, has_msg, msgs, valid,
-                    bk["dst_local"], v_pp)
+                    program, empty, inbox, has_msg, msgs, valid, bk, v_pp)
                 return (inbox, has_msg), None
 
             if unroll_buckets:
@@ -216,8 +257,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 bk = bucket_at(b)
                 msgs, valid = _emit_bucket(program, vp_rot, act_rot, bk)
                 inbox, has_msg = _bucket_combine(
-                    program, empty, inbox, has_msg, msgs, valid,
-                    bk["dst_local"], v_pp)
+                    program, empty, inbox, has_msg, msgs, valid, bk, v_pp)
                 # rotate towards the next neighbour (overlaps with compute)
                 vp_rot = jax.tree.map(
                     lambda a: jax.lax.ppermute(a, AXIS, perm), vp_rot)
@@ -245,7 +285,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 bk = bucket_at(b)
                 msgs, valid = _emit_bucket(program, vprops, active, bk)
                 one, oneh = vcprog.segment_combine(
-                    program, msgs, bk["dst_local"], valid, v_pp, empty)
+                    program, msgs, bk["dst_local"], valid, v_pp, empty,
+                    meta=bk["seg_meta"])
                 return carry, (one, oneh)
 
             _, (partials, phas) = jax.lax.scan(
@@ -257,18 +298,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 partials)
             exh = jax.lax.all_to_all(phas, AXIS, split_axis=0,
                                      concat_axis=0, tiled=False)
-
-            def fold(carry, x):
-                inbox, has_msg = carry
-                part, ph = x
-                merged = jax.vmap(program.merge_message)(inbox, part)
-                inbox = records.tree_where(
-                    ph & has_msg, merged,
-                    records.tree_where(ph, part, inbox))
-                return (inbox, has_msg | ph), None
-
-            (inbox, has_msg), _ = jax.lax.scan(fold, (inbox0, has0),
-                                               (ex, exh))
+            (inbox, has_msg), _ = jax.lax.scan(_fold_partials(program),
+                                               (inbox0, has0), (ex, exh))
         else:
             raise ValueError(schedule)
 
@@ -319,7 +350,8 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
         ex = lambda t: jax.tree.map(lambda a: a[None], t)
         return ex(vprops), ex(active)
 
-    smapped = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    smapped = shard_map(
         local_loop, mesh=mesh,
         in_specs=(vspec, vspec, vspec, vspec, espec),
         out_specs=(vspec, vspec),
@@ -344,9 +376,11 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     sg = build_sharded_graph(graph, Pn)
     v_pp = sg["v_per_part"]
     if schedule == "push":
-        # transpose to the src-part-major view (src ids become local)
+        # transpose to the src-part-major view (src ids become local);
+        # per-bucket content (and its segment metadata) is unchanged
         for k in ("edge_src_local", "edge_src_global", "edge_dst_global",
-                  "edge_dst_local", "edge_mask"):
+                  "edge_dst_local", "edge_mask", "bucket_last_edge",
+                  "bucket_has_edge"):
             sg[k] = np.swapaxes(sg[k], 0, 1)
         sg["eprops"] = {k: np.swapaxes(v, 0, 1)
                         for k, v in sg["eprops"].items()}
@@ -364,6 +398,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         "edge_dst_global": jnp.asarray(sg["edge_dst_global"]),
         "edge_dst_local": jnp.asarray(sg["edge_dst_local"]),
         "edge_mask": jnp.asarray(sg["edge_mask"]),
+        "bucket_last_edge": jnp.asarray(sg["bucket_last_edge"]),
+        "bucket_has_edge": jnp.asarray(sg["bucket_has_edge"]),
         "eprops": jax.tree.map(jnp.asarray, sg["eprops"]),
     }
     vprops, active = runner(vprops0, active0,

@@ -26,7 +26,7 @@ class GASEngine:
         return (store, valid)
 
     def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
-                         use_kernel):
+                         kernel_on):
         # SCATTER: evaluate emit for every edge (canonical order), store e.msg
         src, dst = gdev["src"], gdev["dst"]
         src_prop = records.tree_gather(vprops, src)
@@ -39,5 +39,5 @@ class GASEngine:
         # GATHER + SUM: read e.msg over in-edges, combine with the monoid
         inbox, has_msg = vcprog.segment_combine(
             program, store, dst, valid, gdev["num_vertices"], empty,
-            use_kernel)
+            kernel_on, meta=gdev.get("seg_meta"))
         return inbox, has_msg, (store, valid)

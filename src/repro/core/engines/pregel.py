@@ -20,7 +20,7 @@ class PregelEngine:
         return ()
 
     def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
-                         use_kernel):
+                         kernel_on):
         src_s, dst_s = gdev["src_s"], gdev["dst_s"]
         src_prop = records.tree_gather(vprops, src_s)
         is_emit, msgs = jax.vmap(program.emit_message)(
@@ -34,5 +34,5 @@ class PregelEngine:
 
         inbox, has_msg = vcprog.segment_combine(
             program, msgs_c, gdev["dst"], valid_c, gdev["num_vertices"],
-            empty, use_kernel)
+            empty, kernel_on, meta=gdev.get("seg_meta"))
         return inbox, has_msg, extra

@@ -20,15 +20,25 @@ from .. import records, vcprog
 from .common import register
 
 
-def pull_emit_and_combine(gdev, program, vprops, active, empty, use_kernel):
-    """Dense pull: evaluate emit on in-edge order; combine in place."""
+def pull_emit_and_combine(gdev, program, vprops, active, empty, kernel_on):
+    """Dense pull: evaluate emit on in-edge order; combine in place.
+
+    With the kernel on and a fusable program, the three E-passes
+    (gather / emit / combine) collapse into ONE `pallas_call` that streams
+    dst-sorted edge blocks through VMEM (`kernels/fused_gather_emit.py`).
+    """
+    if kernel_on and vcprog.fused_applicable(program, vprops, gdev["eprops"],
+                                             gdev["dst"].shape[0],
+                                             gdev["num_vertices"]):
+        return vcprog.fused_pull_combine(program, gdev, vprops, active, empty)
     src, dst = gdev["src"], gdev["dst"]
     src_prop = records.tree_gather(vprops, src)
     is_emit, msgs = jax.vmap(program.emit_message)(
         src, dst, src_prop, gdev["eprops"])
     valid = is_emit.astype(bool) & active[src]
     return vcprog.segment_combine(program, msgs, dst, valid,
-                                  gdev["num_vertices"], empty, use_kernel)
+                                  gdev["num_vertices"], empty, kernel_on,
+                                  meta=gdev.get("seg_meta"))
 
 
 @register("pushpull")
@@ -39,7 +49,7 @@ class PushPullEngine:
         return ()
 
     def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
-                         use_kernel):
+                         kernel_on):
         from .pregel import PregelEngine  # reuse the push dataflow
 
         active_out_edges = jnp.sum(jnp.where(active, gdev["out_degree"], 0))
@@ -47,12 +57,12 @@ class PushPullEngine:
 
         def push(_):
             inbox, has_msg, _ = PregelEngine().emit_and_combine(
-                gdev, program, vprops, active, (), empty, use_kernel)
+                gdev, program, vprops, active, (), empty, kernel_on)
             return inbox, has_msg
 
         def pull(_):
             return pull_emit_and_combine(gdev, program, vprops, active,
-                                         empty, use_kernel)
+                                         empty, kernel_on)
 
         inbox, has_msg = jax.lax.cond(use_push, push, pull, operand=None)
         return inbox, has_msg, extra

@@ -64,10 +64,11 @@ class PageRankProgram(vcprog.VCProgram):
 
 
 def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
-             engine: str = "pushpull", use_kernel: bool = False):
+             engine: str = "pushpull", kernel: str = "auto",
+             use_kernel: bool | None = None):
     prog = PageRankProgram(graph.num_vertices, num_iters, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
-                              use_kernel=use_kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     return np.asarray(vprops["rank"]), info
 
 
@@ -105,10 +106,11 @@ class SSSPProgram(vcprog.VCProgram):
 
 
 def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
-         engine: str = "pushpull", use_kernel: bool = False):
+         engine: str = "pushpull", kernel: str = "auto",
+         use_kernel: bool | None = None):
     prog = SSSPProgram(root)
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
-                              use_kernel=use_kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     dist = np.asarray(vprops["distance"])
     return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
 
@@ -140,10 +142,11 @@ class CCProgram(vcprog.VCProgram):
 
 
 def connected_components(graph: PropertyGraph, max_iter: int = 200,
-                         engine: str = "pushpull", use_kernel: bool = False):
+                         engine: str = "pushpull", kernel: str = "auto",
+                         use_kernel: bool | None = None):
     prog = CCProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
-                              use_kernel=use_kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     return np.asarray(vprops["label"]), info
 
 
@@ -180,10 +183,11 @@ class BFSProgram(vcprog.VCProgram):
 
 
 def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
-        engine: str = "pushpull", use_kernel: bool = False):
+        engine: str = "pushpull", kernel: str = "auto",
+        use_kernel: bool | None = None):
     prog = BFSProgram(root)
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
-                              use_kernel=use_kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     depth = np.asarray(vprops["depth"]).astype(np.int64)
     return np.where(depth >= 2**31 - 1, -1, depth), info
 
@@ -216,10 +220,11 @@ class PersonalizedPageRankProgram(PageRankProgram):
 
 def personalized_pagerank(graph: PropertyGraph, source: int,
                           num_iters: int = 20, damping: float = 0.85,
-                          engine: str = "pushpull"):
+                          engine: str = "pushpull", kernel: str = "auto"):
     prog = PersonalizedPageRankProgram(graph.num_vertices, num_iters,
                                        source, damping)
-    vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine)
+    vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
+                              kernel=kernel)
     return np.asarray(vprops["rank"]), info
 
 
@@ -249,8 +254,10 @@ class DegreeProgram(vcprog.VCProgram):
         return jnp.bool_(True), {"one": jnp.int32(1)}
 
 
-def degrees(graph: PropertyGraph, engine: str = "pushpull"):
+def degrees(graph: PropertyGraph, engine: str = "pushpull",
+            kernel: str = "auto"):
     prog = DegreeProgram()
-    vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine)
+    vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine,
+                              kernel=kernel)
     return (np.asarray(vprops["out_degree"]),
             np.asarray(vprops["in_degree"])), info

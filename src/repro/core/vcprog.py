@@ -15,7 +15,7 @@ Laws the paper imposes (checked by hypothesis tests):
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,52 @@ from . import records
 
 Record = Any  # pytree of scalars
 RecordBatch = Any  # pytree of arrays with a leading axis
+
+
+# ---------------------------------------------------------------------------
+# Static segment metadata (dst-sorted canonical order)
+# ---------------------------------------------------------------------------
+
+class SegmentMeta(NamedTuple):
+    """Precomputed per-vertex structure of the dst-sorted edge array.
+
+    The edge endpoints are loop constants, so this never changes across
+    iterations — computing it host-side (or once outside `lax.while_loop`)
+    removes two `searchsorted` calls and a `segment_sum` from every
+    iteration of the Algorithm-1 loop.
+
+      last_edge: [V] int32 — index of v's last in-edge in the dst-sorted
+                 array, clipped to [0, E-1] (arbitrary for edgeless v).
+      has_edge:  [V] bool  — v has at least one in-edge.
+    """
+
+    last_edge: jnp.ndarray
+    has_edge: jnp.ndarray
+
+
+def make_segment_meta(dst: jnp.ndarray, num_segments: int,
+                      valid: Optional[jnp.ndarray] = None) -> SegmentMeta:
+    """Traced fallback for callers without host-side precompute.
+
+    `valid` restricts the structure to mask-True edges (padded edge
+    buckets in the distributed engine carry trailing invalid slots).
+    """
+    E = dst.shape[0]
+    vids = jnp.arange(num_segments, dtype=dst.dtype)
+    if valid is None:
+        last = jnp.searchsorted(dst, vids, side="right") - 1
+        first = jnp.searchsorted(dst, vids, side="left")
+        has = last >= first
+    else:
+        cnt = jax.ops.segment_sum(valid.astype(jnp.int32), dst,
+                                  num_segments=num_segments)
+        has = cnt > 0
+        eidx = jnp.arange(E, dtype=jnp.int32)
+        last = jax.ops.segment_max(jnp.where(valid, eidx, -1), dst,
+                                   num_segments=num_segments)
+    return SegmentMeta(last_edge=jnp.clip(last, 0, max(E - 1, 0))
+                       .astype(jnp.int32),
+                       has_edge=has)
 
 
 class VCProgram:
@@ -63,9 +109,18 @@ class VCProgram:
 # Message combination under the user monoid
 # ---------------------------------------------------------------------------
 
+def _has_msg(valid: jnp.ndarray, dst: jnp.ndarray,
+             num_segments: int) -> jnp.ndarray:
+    """has_msg[v] = some valid emission targets v. The ONE dynamic segment
+    reduction per combine — everything else structural comes from meta."""
+    return (jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                num_segments=num_segments,
+                                indices_are_sorted=True) > 0)
+
+
 def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
-                     valid: jnp.ndarray, num_segments: int,
-                     empty: Record) -> Tuple[RecordBatch, jnp.ndarray]:
+                     valid: jnp.ndarray, num_segments: int, empty: Record,
+                     meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
     """Generic segment-combine via a flagged associative scan.
 
     Edges must be dst-sorted. Works for ANY associative+commutative
@@ -87,26 +142,16 @@ def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
 
     _, scanned = jax.lax.associative_scan(comb, (seg_start, msgs))
 
-    # inbox[v] = scanned value at the last in-edge of v (if any)
-    # find per-vertex last-edge index from the sorted dst array
-    idx = jnp.searchsorted(dst, jnp.arange(num_segments, dtype=dst.dtype),
-                           side="right") - 1
-    has_edge = idx >= jnp.searchsorted(dst, jnp.arange(num_segments, dtype=dst.dtype),
-                                       side="left")
-    idx = jnp.clip(idx, 0, E - 1)
-    inbox = records.tree_gather(scanned, idx)
+    # inbox[v] = scanned value at the last in-edge of v (precomputed)
+    inbox = records.tree_gather(scanned, meta.last_edge)
     empty_v = records.tree_tile(empty, num_segments)
-    inbox = records.tree_where(has_edge, inbox, empty_v)
-
-    has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
-                                   num_segments=num_segments,
-                                   indices_are_sorted=True) > 0)
-    return inbox, has_msg
+    inbox = records.tree_where(meta.has_edge, inbox, empty_v)
+    return inbox, _has_msg(valid, dst, num_segments)
 
 
 def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
-                   valid: jnp.ndarray, num_segments: int,
-                   empty: Record) -> Tuple[RecordBatch, jnp.ndarray]:
+                   valid: jnp.ndarray, num_segments: int, empty: Record,
+                   meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
     """Fast path for named elementwise monoids (sum/min/max on every field)."""
     op = {"sum": jax.ops.segment_sum,
           "min": jax.ops.segment_min,
@@ -119,30 +164,31 @@ def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
         out = op(x, dst, num_segments=num_segments, indices_are_sorted=True)
         if program.monoid in ("min", "max"):
             # segments with no edges return +/-inf-ish init; clamp to identity
-            has = jax.ops.segment_sum(jnp.ones_like(dst), dst,
-                                      num_segments=num_segments,
-                                      indices_are_sorted=True) > 0
-            has = has.reshape(has.shape + (1,) * (out.ndim - 1))
+            has = meta.has_edge.reshape(
+                meta.has_edge.shape + (1,) * (out.ndim - 1))
             out = jnp.where(has, out, jnp.broadcast_to(e, out.shape).astype(out.dtype))
         return out.astype(x.dtype)
 
     empty_v = jax.tree.map(jnp.asarray, empty)
     inbox = jax.tree.map(leaf, msgs, empty_v)
-    has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
-                                   num_segments=num_segments,
-                                   indices_are_sorted=True) > 0)
-    return inbox, has_msg
+    return inbox, _has_msg(valid, dst, num_segments)
 
 
 def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
-                    use_kernel: bool = False):
+                    kernel_on: bool = False,
+                    meta: Optional[SegmentMeta] = None):
     """Combine per-edge messages into per-vertex inboxes (dst-sorted edges).
 
-    use_kernel=True routes named monoids through the Pallas segment kernel
-    (MXU one-hot matmul for sum, masked VPU reduce for min/max).
+    kernel_on=True routes named monoids through the Pallas segment kernel
+    (MXU one-hot matmul for sum, segmented-scan + pick matmul for min/max).
+    `meta` is the precomputed static segment structure; pass it whenever the
+    call sits inside a compiled loop so no structural reductions recompute
+    per iteration (a traced fallback is derived here otherwise).
     """
+    if meta is None:
+        meta = make_segment_meta(dst, num_segments)
     if program.monoid in ("sum", "min", "max"):
-        if use_kernel:
+        if kernel_on:
             from repro.kernels import ops as kops
             E = dst.shape[0]
             empty_b = records.tree_tile(empty, E)
@@ -152,17 +198,63 @@ def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
                                                monoid=program.monoid),
                 msgs_m)
             if program.monoid in ("min", "max"):
-                has = jax.ops.segment_sum(jnp.ones_like(dst), dst,
-                                          num_segments=num_segments,
-                                          indices_are_sorted=True) > 0
                 empty_v = records.tree_tile(empty, num_segments)
-                inbox = records.tree_where(has, inbox, empty_v)
-            has_msg = (jax.ops.segment_max(valid.astype(jnp.int32), dst,
-                                           num_segments=num_segments,
-                                           indices_are_sorted=True) > 0)
-            return inbox, has_msg
-        return _segment_named(program, msgs, dst, valid, num_segments, empty)
-    return _segment_general(program, msgs, dst, valid, num_segments, empty)
+                inbox = records.tree_where(meta.has_edge, inbox, empty_v)
+            return inbox, _has_msg(valid, dst, num_segments)
+        return _segment_named(program, msgs, dst, valid, num_segments, empty,
+                              meta)
+    return _segment_general(program, msgs, dst, valid, num_segments, empty,
+                            meta)
+
+
+# ---------------------------------------------------------------------------
+# Fused message plane (Phase 3 + Phase 1 in one kernel pass)
+# ---------------------------------------------------------------------------
+
+def resolve_kernel_mode(kernel: str | bool | None) -> bool:
+    """Resolve the tri-state kernel knob to a concrete on/off.
+
+    "auto" picks the Pallas kernels on TPU and the XLA segment ops on CPU
+    (where the kernels would run in interpret mode — a correctness path,
+    not a fast path). Booleans are accepted as a legacy alias.
+    """
+    if kernel is None:
+        kernel = "auto"
+    if isinstance(kernel, bool):
+        return kernel
+    if kernel == "auto":
+        return jax.default_backend() == "tpu"
+    if kernel in ("on", "off"):
+        return kernel == "on"
+    raise ValueError(f"kernel must be 'auto'|'on'|'off', got {kernel!r}")
+
+
+def fused_applicable(program: VCProgram, vprops, eprops, num_edges: int,
+                     num_vertices: int) -> bool:
+    """Static check: can this program's message plane run fused?
+
+    Needs a named monoid and scalar record leaves (the framework's common
+    case); anything else falls back to the three-pass path. Delegates to
+    the kernel's own `fusable` predicate so the gate and the kernel's
+    schema validation can never drift apart.
+    """
+    from repro.kernels.fused_gather_emit import fusable
+    return fusable(program.emit_message, program.monoid, vprops, eprops,
+                   num_edges, num_vertices)
+
+
+def fused_pull_combine(program: VCProgram, gdev, vprops, active,
+                       empty: Record):
+    """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
+    and fold into per-vertex inboxes inside a single Pallas kernel — no
+    E-sized message materialization in HBM."""
+    from repro.kernels import ops as kops
+    inbox, has_msg = kops.gather_emit_combine(
+        program.emit_message, program.monoid, gdev["src"], gdev["dst"],
+        vprops, gdev["eprops"], active, gdev["num_vertices"])
+    # normalize no-message vertices to the user's exact empty record
+    empty_v = records.tree_tile(empty, gdev["num_vertices"])
+    return records.tree_where(has_msg, inbox, empty_v), has_msg
 
 
 # ---------------------------------------------------------------------------

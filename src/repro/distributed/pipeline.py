@@ -68,8 +68,10 @@ def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, axis_name: str = "pipe",
     mesh's `axis_name`. params are sharded stage-major on their leading dim."""
     S = mesh.shape[axis_name]
 
+    from repro.distributed.sharding import shard_map
+
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),
         check_vma=False)

@@ -1,0 +1,21 @@
+"""Host-environment helpers shared by tests and benchmarks."""
+from __future__ import annotations
+
+import os
+
+#: env vars that pick the JAX backend; fresh-interpreter subprocesses MUST
+#: inherit them — without JAX_PLATFORMS=cpu a libtpu-carrying image probes
+#: the (absent) TPU for ~7 minutes before falling back to CPU.
+BACKEND_ENV_VARS = ("JAX_PLATFORMS", "JAX_PLATFORM_NAME",
+                    "TPU_SKIP_MDS_QUERY")
+
+
+def subprocess_env(**extra: str) -> dict:
+    """Minimal env for subprocess tests/benches that need a fresh
+    interpreter (XLA device count locks at backend init)."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    for k in BACKEND_ENV_VARS:
+        if k in os.environ:
+            env[k] = os.environ[k]
+    env.update(extra)
+    return env

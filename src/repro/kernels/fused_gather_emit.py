@@ -1,0 +1,233 @@
+"""Fused gather–emit–combine Pallas kernel — the message plane in ONE pass.
+
+The unfused pull dataflow makes three full E-sized HBM passes per
+iteration:
+
+    src_prop = tree_gather(vprops, src)          # pass 1: gather
+    is_emit, msgs = vmap(emit_message)(...)      # pass 2: emit
+    inbox = segment_combine(msgs, dst, ...)      # pass 3: combine
+
+This kernel streams dst-sorted edge blocks once: for each [BE] block it
+gathers the needed src rows from the VMEM-resident vertex properties,
+evaluates the user's (traceable) `emit_message` on the VPU, and folds the
+messages straight into the per-vertex inbox accumulator — messages never
+round-trip through HBM.
+
+Layout contract (the framework's canonical order):
+  * `dst` is sorted ascending; each (vertex-block × edge-block) grid cell
+    is skipped via `@pl.when` unless the block's dst range overlaps.
+  * vertex-property leaves are [V] scalars-per-vertex (records are pytrees
+    of scalars); message leaves are [E] after vmap. Callers with vector
+    leaves fall back to the unfused path.
+  * padded edges carry the sentinel dst == V_pad, so they match no one-hot
+    column and can never contribute.
+
+Combine: sum uses a one-hot matvec on the MXU; min/max use a 2-D masked
+select [BE, BV] + reduce (the payload per leaf is scalar, so no 3-D
+intermediate exists and the full block_e=512 applies). Integer payloads
+accumulate in int32 (exact for sentinel ids like 2^31-1), floats in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .segment_reduce import _CompilerParams, _ceil_to
+
+_F32_IDENT = {"sum": 0.0, "min": 3.4e38, "max": -3.4e38}
+
+
+def _ident_for(dtype, monoid: str):
+    if jnp.issubdtype(dtype, jnp.integer):
+        # the payload dtype's own bounds (not int32's): the identity must
+        # survive the flush cast back to narrow int outputs
+        info = jnp.iinfo(dtype)
+        return {"sum": 0, "min": int(info.max),
+                "max": int(info.min)}[monoid], jnp.int32
+    return _F32_IDENT[monoid], jnp.float32
+
+
+def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
+            idents, acc_dtypes, block_v, n_e, num_edges, block_e):
+    seg_ref, src_ref, active_ref = refs[0], refs[1], refs[2]
+    vp_refs = refs[3:3 + n_vp]
+    ep_refs = refs[3 + n_vp:3 + n_vp + n_ep]
+    out_refs = refs[3 + n_vp + n_ep:3 + n_vp + n_ep + n_msg]
+    hm_out = refs[3 + n_vp + n_ep + n_msg]
+    acc_refs = refs[4 + n_vp + n_ep + n_msg:4 + n_vp + n_ep + 2 * n_msg]
+    hm_acc = refs[4 + n_vp + n_ep + 2 * n_msg]
+
+    iv = pl.program_id(0)
+    ie = pl.program_id(1)
+
+    @pl.when(ie == 0)
+    def _init():
+        for a, ident in zip(acc_refs, idents):
+            a[...] = jnp.full_like(a, ident)
+        hm_acc[...] = jnp.zeros_like(hm_acc)
+
+    seg = seg_ref[...]  # [BE] int32 dst ids, sorted (pads = sentinel)
+    v_lo = iv * block_v
+    overlap = (seg[-1] >= v_lo) & (seg[0] < v_lo + block_v)
+
+    @pl.when(overlap)
+    def _compute():
+        src = src_ref[...]  # [BE] int32 (pads = 0, masked via sentinel dst)
+        be = seg.shape[0]
+
+        # gather src rows from the VMEM-resident vertex property leaves
+        sp_leaves = [jnp.take(r[...], src, axis=0) for r in vp_refs]
+        act = jnp.take(active_ref[...], src, axis=0) > 0  # [BE]
+        ep_leaves = [r[...] for r in ep_refs]
+
+        src_prop = jax.tree.unflatten(vp_def, sp_leaves)
+        edge_prop = jax.tree.unflatten(ep_def, ep_leaves)
+        is_emit, msg = jax.vmap(emit_fn)(src, seg, src_prop, edge_prop)
+        # padded rows run emit on zero-filled eprops and can produce
+        # non-finite garbage; they must be invalid BEFORE the sum-path
+        # `where(valid, m, 0)`, or inf*0 in the one-hot dot NaN-poisons
+        # the whole vertex block (the sentinel seg only guards min/max)
+        pos = (jax.lax.broadcasted_iota(jnp.int32, (be, 1), 0)[:, 0]
+               + ie * block_e)
+        valid = is_emit.astype(bool) & act & (pos < num_edges)  # [BE]
+
+        seg_ids = jax.lax.broadcasted_iota(jnp.int32, (be, block_v), 1) + v_lo
+        onehot = (seg[:, None] == seg_ids)  # [BE, BV]
+
+        msg_leaves = jax.tree.leaves(msg)
+        for leaf, acc, ident, adt in zip(msg_leaves, acc_refs, idents,
+                                         acc_dtypes):
+            m = leaf.astype(adt)  # [BE]
+            if monoid == "sum":
+                m = jnp.where(valid, m, jnp.asarray(0, adt))
+                acc[...] += jax.lax.dot_general(
+                    m[None, :], onehot.astype(adt),
+                    dimension_numbers=(((1,), (0,)), ((), ())),
+                    preferred_element_type=adt)  # [1, BV]
+            else:
+                hit = onehot & valid[:, None]  # [BE, BV]
+                sel = jnp.where(hit, m[:, None], jnp.asarray(ident, adt))
+                red = (jnp.min(sel, axis=0) if monoid == "min"
+                       else jnp.max(sel, axis=0))[None, :]  # [1, BV]
+                op = jnp.minimum if monoid == "min" else jnp.maximum
+                acc[...] = op(acc[...], red)
+
+        got = jnp.any(onehot & valid[:, None], axis=0)[None, :]  # [1, BV]
+        hm_acc[...] = jnp.maximum(hm_acc[...], got.astype(jnp.int32))
+
+    @pl.when(ie == n_e - 1)
+    def _flush():
+        for o, a in zip(out_refs, acc_refs):
+            o[...] = a[0].astype(o.dtype)
+        hm_out[...] = hm_acc[0]
+
+
+def _emit_schema(emit_fn, num_edges: int, vprops, eprops):
+    """Abstract-trace the vmapped emit: (is_emit_sds, msg_sds pytree)."""
+    E = int(num_edges)
+    return jax.eval_shape(
+        jax.vmap(emit_fn), jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct((E,) + a.shape[1:],
+                                                    a.dtype), vprops),
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                     eprops))
+
+
+def _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops) -> bool:
+    E, V = int(num_edges), int(num_vertices)
+    return (all(s.shape == (E,) for s in jax.tree.leaves(emit_sds[1]))
+            and all(a.shape == (V,) for a in jax.tree.leaves(vprops))
+            and all(a.shape == (E,) for a in jax.tree.leaves(eprops)))
+
+
+def fusable(emit_fn, monoid: str, vprops, eprops, num_edges: int,
+            num_vertices: int) -> bool:
+    """THE applicability predicate for the fused kernel — the same schema
+    check gather_emit_combine enforces, so a True here can never turn
+    into a trace-time ValueError there."""
+    if monoid not in ("sum", "min", "max"):
+        return False
+    try:
+        emit_sds = _emit_schema(emit_fn, num_edges, vprops, eprops)
+    except Exception:
+        return False
+    return _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops)
+
+
+def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
+                        active, num_vertices: int, *, block_v: int = 128,
+                        block_e: int = 512, interpret=None):
+    """Single-pass message plane over canonical (dst-sorted) edges.
+
+    emit_fn(src, dst, src_prop, edge_prop) -> (is_emit, msg) is the user's
+    scalar Phase-3 function (traced into the kernel body — no host
+    boundary). Returns (inbox record batch [V], has_msg [V] bool).
+    """
+    if monoid not in ("sum", "min", "max"):
+        raise ValueError(f"fused kernel needs a named monoid, got {monoid!r}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    E = int(src.shape[0])
+    V = int(num_vertices)
+    vp_leaves, vp_def = jax.tree.flatten(vprops)
+    ep_leaves, ep_def = jax.tree.flatten(eprops)
+
+    # message schema from an abstract trace of the vmapped emit
+    emit_sds = _emit_schema(emit_fn, E, vprops, eprops)
+    msg_sds = jax.tree.leaves(emit_sds[1])
+    if not _schema_ok(emit_sds, E, V, vprops, eprops):
+        raise ValueError("fused kernel needs scalar record leaves")
+
+    bv = min(block_v, _ceil_to(V, 8))
+    be = min(block_e, _ceil_to(E, 8))
+    E_pad = pl.cdiv(E, be) * be
+    V_pad = pl.cdiv(V, bv) * bv
+
+    idents, acc_dtypes = zip(*(_ident_for(s.dtype, monoid) for s in msg_sds))
+
+    pad_e = lambda a, fill: jnp.pad(a, (0, E_pad - a.shape[0]),
+                                    constant_values=fill)
+    pad_v = lambda a, fill: jnp.pad(a, (0, V_pad - a.shape[0]),
+                                    constant_values=fill)
+    seg_p = pad_e(dst.astype(jnp.int32), jnp.int32(V_pad))  # sentinel
+    src_p = pad_e(src.astype(jnp.int32), 0)
+    act_p = pad_v(active.astype(jnp.int32), 0)
+    vp_p = [pad_v(l, 0) for l in vp_leaves]
+    ep_p = [pad_e(l, 0) for l in ep_leaves]
+
+    grid = (V_pad // bv, E_pad // be)
+    e_spec = pl.BlockSpec((be,), lambda iv, ie: (ie,))
+    full_v = pl.BlockSpec((V_pad,), lambda iv, ie: (0,))
+    out_spec = pl.BlockSpec((bv,), lambda iv, ie: (iv,))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel, emit_fn=emit_fn, monoid=monoid, n_vp=len(vp_p),
+            n_ep=len(ep_p), n_msg=len(msg_sds), vp_def=vp_def, ep_def=ep_def,
+            idents=idents, acc_dtypes=acc_dtypes, block_v=bv, n_e=grid[1],
+            num_edges=E, block_e=be),
+        grid=grid,
+        in_specs=[e_spec, e_spec, full_v] + [full_v] * len(vp_p)
+                 + [e_spec] * len(ep_p),
+        out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
+        out_shape=tuple([jax.ShapeDtypeStruct((V_pad,), s.dtype)
+                         for s in msg_sds]
+                        + [jax.ShapeDtypeStruct((V_pad,), jnp.int32)]),
+        scratch_shapes=[pltpu.VMEM((1, bv), adt) for adt in acc_dtypes]
+                       + [pltpu.VMEM((1, bv), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=bool(interpret),
+        name=f"gather_emit_{monoid}",
+    )(seg_p, src_p, act_p, *vp_p, *ep_p)
+
+    msg_out, hm = outs[:-1], outs[-1]
+    inbox = jax.tree.unflatten(jax.tree.structure(emit_sds[1]),
+                               [o[:V] for o in msg_out])
+    return inbox, hm[:V] > 0

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_kernel
+from .fused_gather_emit import gather_emit_combine as _gather_emit_combine
 from .segment_reduce import segment_combine_kernel
 
 
@@ -32,6 +33,18 @@ def segment_combine(vals, seg_ids, num_segments: int, monoid: str = "sum",
     return out[:, 0] if squeeze else out
 
 
+def gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops, active,
+                        num_vertices: int, interpret=None, **block_kw):
+    """Fused single-pass gather(src props) -> emit -> segment-combine.
+
+    The one-kernel form of the pull-mode message plane; see
+    fused_gather_emit.py for the layout contract."""
+    return _gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops,
+                                active, num_vertices,
+                                interpret=_auto_interpret(interpret),
+                                **block_kw)
+
+
 def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
                     sm_scale: float | None = None, interpret=None,
                     **block_kw):
@@ -44,4 +57,5 @@ def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
 
 # re-export oracles for convenience
 segment_combine_ref = ref.segment_combine_ref
+gather_emit_combine_ref = ref.gather_emit_combine_ref
 mha_ref = ref.mha_ref

@@ -27,6 +27,35 @@ def segment_combine_ref(vals, seg_ids, num_segments: int, monoid: str = "sum"):
     return out.astype(vals.dtype)
 
 
+def gather_emit_combine_ref(emit_fn, monoid, src, dst, vprops, eprops,
+                            active, num_vertices: int):
+    """Three-pass oracle for the fused gather–emit–combine kernel:
+    gather src props [E-pass], vmap emit [E-pass], segment-combine
+    [E-pass]. Semantics-identical; materializes every intermediate."""
+    src_prop = jax.tree.map(lambda a: jnp.take(a, src, axis=0), vprops)
+    is_emit, msgs = jax.vmap(emit_fn)(src, dst, src_prop, eprops)
+    valid = is_emit.astype(bool) & jnp.take(active, src, axis=0)
+    has_msg = jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                  num_segments=num_vertices,
+                                  indices_are_sorted=True) > 0
+
+    def leaf(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            info = jnp.iinfo(x.dtype)
+            ident = {"sum": 0, "min": int(info.max),
+                     "max": int(info.min)}[monoid]
+        else:
+            ident = _IDENT[monoid]
+        xm = jnp.where(valid, x, jnp.asarray(ident, x.dtype))
+        op = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+              "max": jax.ops.segment_max}[monoid]
+        out = op(xm, dst, num_segments=num_vertices, indices_are_sorted=True)
+        return jnp.where(has_msg, out, jnp.asarray(ident, x.dtype)) \
+            .astype(x.dtype)
+
+    return jax.tree.map(leaf, msgs), has_msg
+
+
 def mha_ref(q, k, v, causal: bool = True, window: int | None = None,
             sm_scale: float | None = None):
     """Reference GQA attention. q [B,Hq,T,Dh], k/v [B,Hkv,S,Dh]."""

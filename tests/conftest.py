@@ -1,14 +1,33 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
-the single real CPU device; only launch/dryrun.py forces 512 host devices."""
+the single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+Markers: `slow` tags the heavy distributed/model/subprocess tests; the
+default CI lane runs `-m "not slow"` (see .github/workflows/ci.yml)."""
 import numpy as np
 import pytest
 
 from repro.core import io as gio
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavy distributed/model tests (CI runs -m 'not slow')")
+
+
+# single canonical implementation (tests + benches share it)
+from repro.envutil import subprocess_env  # noqa: E402, F401
+
+
 @pytest.fixture(scope="session")
 def small_uniform_graph():
     return gio.uniform_graph(300, 2500, seed=2, weighted=True)
+
+
+@pytest.fixture(scope="session")
+def kernel_graph():
+    """Tiny graph for interpret-mode Pallas sweeps (compile cost ~ grid
+    cells, so keep V under one vertex block and E under one edge block)."""
+    return gio.uniform_graph(80, 400, seed=5, weighted=True)
 
 
 @pytest.fixture(scope="session")

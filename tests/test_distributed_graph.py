@@ -25,6 +25,54 @@ def test_distributed_matches_local_1dev(small_uniform_graph, schedule):
     np.testing.assert_allclose(vp["rank"], ref, rtol=1e-6, atol=1e-9)
 
 
+def test_bucket_meta_fallback_matches_precomputed(small_uniform_graph):
+    """local_step must accept a hand-built edges dict WITHOUT the
+    precomputed bucket metadata (compat fallback derives it in-trace)
+    and produce the same result."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engines.distributed import (AXIS, make_distributed_step)
+    from repro.core.operators import PageRankProgram
+    from jax.sharding import Mesh
+
+    g = small_uniform_graph
+    sg = build_sharded_graph(g, 1)
+    v_pp = sg["v_per_part"]
+    prog = PageRankProgram(g.num_vertices, 5)
+    step = make_distributed_step(prog, v_pp, 1, schedule="allgather")
+    mesh = Mesh(np.asarray(jax.devices()[:1]), (AXIS,))
+
+    def run(with_meta):
+        edges = {k: jnp.asarray(sg[k][0]) for k in
+                 ("edge_src_local", "edge_src_global", "edge_dst_global",
+                  "edge_dst_local", "edge_mask")}
+        edges["eprops"] = jax.tree.map(lambda a: jnp.asarray(a[0]),
+                                       sg["eprops"])
+        if with_meta:
+            edges["bucket_last_edge"] = jnp.asarray(sg["bucket_last_edge"][0])
+            edges["bucket_has_edge"] = jnp.asarray(sg["bucket_has_edge"][0])
+        vprops = jax.vmap(prog.init_vertex)(
+            jnp.arange(v_pp, dtype=jnp.int32),
+            jnp.asarray(sg["out_degree"][0]),
+            jax.tree.map(lambda a: jnp.asarray(a[0]), sg["vprops_in"]))
+        empty = jax.tree.map(jnp.asarray, prog.empty_message())
+        inbox = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (v_pp,) + x.shape), empty)
+        from repro.distributed.sharding import shard_map
+        from jax.sharding import PartitionSpec as P
+        sm = shard_map(
+            lambda vp, ib: step(jnp.int32(2), vp,
+                                jnp.ones((v_pp,), bool), ib,
+                                jnp.zeros((v_pp,), bool), edges)[:2],
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+            check_vma=False)
+        vp2, act = jax.jit(sm)(vprops, inbox)
+        return np.asarray(vp2["rank"])
+
+    np.testing.assert_array_equal(run(True), run(False))
+
+
 def test_sharded_graph_structure(small_uniform_graph):
     g = small_uniform_graph
     sg = build_sharded_graph(g, 4)
@@ -69,11 +117,13 @@ print("RESULT:" + json.dumps(out))
 """
 
 
+@pytest.mark.slow
 def test_distributed_8dev_subprocess():
+    from conftest import subprocess_env
+
     r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=subprocess_env())
     assert r.returncode == 0, r.stderr[-3000:]
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
     out = json.loads(line[len("RESULT:"):])

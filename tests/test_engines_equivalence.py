@@ -86,10 +86,46 @@ def test_operator_engine_equivalence(lognormal_graph):
 
 
 def test_kernel_path_equivalence(small_uniform_graph):
-    """use_kernel=True (Pallas segment-combine) must not change results."""
+    """use_kernel=True (legacy alias for kernel='on') must not change
+    results on the fused pushpull path."""
     g = small_uniform_graph
-    u = repro.UniGPS()
+    u = repro.UniGPS(kernel="off")
     r0, _ = u.pagerank(g, num_iters=10, engine="pushpull")
     uk = repro.UniGPS(use_kernel=True)
     r1, _ = uk.pagerank(g, num_iters=10, engine="pushpull")
     np.testing.assert_allclose(r0, r1, rtol=1e-6, atol=1e-9)
+
+
+KERNEL_ENGINES = ["pushpull", "pregel", "gas"]
+
+
+@pytest.mark.parametrize("engine", KERNEL_ENGINES)
+def test_kernel_on_off_all_native_operators(kernel_graph, engine):
+    """kernel='on' (fused gather–emit–combine on the pull path, Pallas
+    segment-combine elsewhere; interpret mode on CPU) must be
+    numerically indistinguishable from kernel='off' for every native
+    operator on every single-device engine."""
+    from repro.core import operators as O
+
+    g = kernel_graph
+    runs = {
+        "pagerank": lambda k: O.pagerank(g, num_iters=6, engine=engine,
+                                         kernel=k)[0],
+        "sssp": lambda k: O.sssp(g, root=0, max_iter=20, engine=engine,
+                                 kernel=k)[0],
+        "cc": lambda k: O.connected_components(g, max_iter=30, engine=engine,
+                                               kernel=k)[0],
+        "bfs": lambda k: O.bfs(g, root=0, max_iter=20, engine=engine,
+                               kernel=k)[0],
+        "ppr": lambda k: O.personalized_pagerank(g, source=1, num_iters=6,
+                                                 engine=engine, kernel=k)[0],
+        "degrees": lambda k: np.concatenate(
+            O.degrees(g, engine=engine, kernel=k)[0]),
+    }
+    for name, fn in runs.items():
+        off, on = fn("off"), fn("on")
+        np.testing.assert_allclose(
+            np.nan_to_num(np.asarray(off, np.float64), posinf=1e30),
+            np.nan_to_num(np.asarray(on, np.float64), posinf=1e30),
+            rtol=1e-6, atol=1e-9,
+            err_msg=f"kernel on/off diverge: {name} on {engine}")

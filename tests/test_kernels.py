@@ -58,6 +58,118 @@ def test_segment_combine_1d_and_empty_segments():
                                [0, 0, 3.0, 0, 0, 7.0, 0, 0])
 
 
+@pytest.mark.parametrize("monoid", ["min", "max"])
+def test_segment_combine_minmax_full_block_e(monoid):
+    """min/max must run the segmented-scan path at the FULL block_e=512
+    (the old 3-D mask intermediate capped them at 64 edges/block)."""
+    E, V, D = 1600, 96, 4  # several 512-edge blocks, segments span blocks
+    seg = np.sort(RNG.integers(0, V, E)).astype(np.int32)
+    vals = RNG.normal(size=(E, D)).astype(np.float32)
+    out = ops.segment_combine(jnp.asarray(vals), jnp.asarray(seg), V,
+                              monoid=monoid, block_e=512)
+    refo = ops.segment_combine_ref(jnp.asarray(vals), jnp.asarray(seg), V,
+                                   monoid=monoid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused gather–emit–combine
+# ---------------------------------------------------------------------------
+
+def _random_graph_arrays(E, V, seed=3):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    active = rng.random(V) < 0.7
+    return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(active)
+
+
+@pytest.mark.parametrize("monoid", ["sum", "min"])
+@pytest.mark.parametrize("E,V", [(5, 3), (700, 90), (2500, 300)])
+def test_fused_gather_emit_combine(monoid, E, V):
+    """Fused single pass == three-pass oracle, incl. filtered emissions."""
+    src, dst, active = _random_graph_arrays(E, V)
+    rng = np.random.default_rng(V)
+    vprops = {"x": jnp.asarray(rng.random(V), jnp.float32),
+              "deg": jnp.asarray(rng.integers(1, 9, V), jnp.float32)}
+    eprops = {"w": jnp.asarray(rng.random(E), jnp.float32)}
+
+    def emit(s, d, sp, ep):
+        return sp["x"] < 0.8, {"v": sp["x"] / sp["deg"] + ep["w"]}
+
+    out, hm = ops.gather_emit_combine(emit, monoid, src, dst, vprops,
+                                      eprops, active, V)
+    refo, rhm = ops.gather_emit_combine_ref(emit, monoid, src, dst, vprops,
+                                            eprops, active, V)
+    np.testing.assert_allclose(np.asarray(out["v"]), np.asarray(refo["v"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(rhm))
+
+
+def test_fused_padded_edges_cannot_poison_sum():
+    """E not a multiple of block_e: padded rows run emit on zero-filled
+    eprops (here: a division -> inf) and must stay invalid — a regression
+    guard against inf*0 NaN-poisoning the one-hot accumulate."""
+    E, V = 700, 90  # pads to 1024 edge rows
+    src, dst, _ = _random_graph_arrays(E, V, seed=2)
+    rng = np.random.default_rng(2)
+    vprops = {"x": jnp.asarray(rng.random(V), jnp.float32)}
+    eprops = {"w": jnp.asarray(rng.random(E).astype(np.float32) + 0.5)}
+    active = jnp.ones((V,), bool)
+
+    def emit(s, d, sp, ep):
+        return jnp.bool_(True), {"v": sp["x"] / ep["w"]}
+
+    out, hm = ops.gather_emit_combine(emit, "sum", src, dst, vprops, eprops,
+                                      active, V)
+    refo, _ = ops.gather_emit_combine_ref(emit, "sum", src, dst, vprops,
+                                          eprops, active, V)
+    assert np.isfinite(np.asarray(out["v"])).all()
+    np.testing.assert_allclose(np.asarray(out["v"]), np.asarray(refo["v"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segment_combine_narrow_int_empty_segments():
+    """Empty segments of sub-32-bit int payloads must flush the payload
+    dtype's own identity (int32's would wrap on the cast back)."""
+    seg = jnp.asarray([2, 2, 5], jnp.int32)
+    vals = jnp.asarray([[1], [2], [7]], jnp.int8)
+    out = ops.segment_combine(vals, seg, 8, monoid="min")
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                  [127, 127, 1, 127, 127, 7, 127, 127])
+
+
+@pytest.mark.parametrize("monoid", ["sum", "min", "max"])
+def test_fused_multifield_and_integer_payloads(monoid):
+    """Multi-field message records with mixed f32/int payloads; the int
+    field must stay exact (int32 accumulation, incl. 2^31-1 sentinels)."""
+    E, V = 900, 120
+    src, dst, active = _random_graph_arrays(E, V, seed=9)
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, V, V).astype(np.int32)
+    labels[::11] = 2**31 - 1  # CC-style sentinel
+    vprops = {"label": jnp.asarray(labels),
+              "score": jnp.asarray(rng.random(V), jnp.float32)}
+
+    def emit(s, d, sp, ep):
+        return jnp.bool_(True), {"label": sp["label"],
+                                 "score": sp["score"] * 2.0}
+
+    out, hm = ops.gather_emit_combine(emit, monoid, src, dst, vprops, {},
+                                      active, V)
+    refo, rhm = ops.gather_emit_combine_ref(emit, monoid, src, dst, vprops,
+                                            {}, active, V)
+    assert out["label"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out["label"]),
+                                  np.asarray(refo["label"]))
+    np.testing.assert_allclose(np.asarray(out["score"]),
+                               np.asarray(refo["score"]), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(rhm))
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

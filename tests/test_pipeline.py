@@ -5,6 +5,9 @@ import subprocess
 import sys
 
 import numpy as np
+import pytest
+
+from conftest import subprocess_env
 
 
 _SCRIPT = r"""
@@ -42,11 +45,11 @@ print("RESULT:" + json.dumps({"err": err}))
 """
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=subprocess_env())
     assert r.returncode == 0, r.stderr[-3000:]
     out = json.loads([l for l in r.stdout.splitlines()
                       if l.startswith("RESULT:")][0][7:])

@@ -144,10 +144,12 @@ def test_compressed_psum_unbiased_over_time():
     import functools
     from jax.sharding import Mesh, PartitionSpec as P
 
+    from repro.distributed.sharding import shard_map
+
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
     g_true = {"w": jnp.asarray(np.linspace(-1, 1, 64), jnp.float32)}
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(), P()),
                        out_specs=(P(), P()), check_vma=False)
     def step(g, e):
         return C.compressed_psum(g, e, "data")

@@ -8,7 +8,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# hypothesis is an OPTIONAL dev dependency (see docs/perf.md "Running the
+# tests"); without it this module must skip, not break collection.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import graph as gmod
 from repro.core import records, vcprog
