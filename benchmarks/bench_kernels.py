@@ -107,6 +107,73 @@ def bench_fused_pallas(E, V, monoid):
         f"E={E};V={V};correctness-path timing")
 
 
+def bench_fused_prefetch(E, V):
+    """Scalar-prefetch fused variant (two window slabs DMA'd per edge
+    block) vs the resident-vprops variant, on a banded graph where the
+    windows genuinely shrink the VMEM set (interpret mode on CPU)."""
+    from repro.core.graph_device import compute_prefetch_windows
+
+    rng = np.random.default_rng(11)
+    dst = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    src = np.clip(dst + rng.integers(-32, 33, E), 0, V - 1).astype(np.int32)
+    blocks, window = compute_prefetch_windows(src, V)
+    vprops = {"rank": jnp.asarray(rng.random(V), jnp.float32)}
+    active = jnp.ones((V,), bool)
+    srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+
+    def emit(s, d, sp, ep):
+        return jnp.bool_(True), {"rank": sp["rank"]}
+
+    def run_resident():
+        return jax.block_until_ready(ops.gather_emit_combine(
+            emit, "sum", srcj, dstj, vprops, {}, active, V))
+
+    def run_prefetch():
+        return jax.block_until_ready(ops.gather_emit_combine(
+            emit, "sum", srcj, dstj, vprops, {}, active, V,
+            prefetch=(jnp.asarray(blocks), window, 512)))
+
+    t_res = timeit(run_resident, iters=1, warmup=1)
+    t_pf = timeit(run_prefetch, iters=1, warmup=1)
+    row("kernel.fused_gec.prefetch.pallas_interpret", t_pf,
+        f"E={E};V={V};window={window};resident_us={t_res*1e6:.1f};"
+        "correctness-path timing")
+
+
+def bench_fused_engines(quick: bool):
+    """The fused message plane reached from NON-pushpull engines: time one
+    whole PageRank run per (engine, kernel) through the unified
+    message_plane dispatcher. On CPU the kernel-on rows run the Pallas
+    pass in interpret mode (correctness-path timing); on TPU the same
+    rows measure the real fused kernel."""
+    from repro.core import io as gio
+    from repro.core import operators as O
+    from repro.core.engines.distributed import run_vcprog_distributed
+    from repro.core.operators import PageRankProgram
+
+    V, E = (256, 2048) if quick else (512, 4096)
+    g = gio.uniform_graph(V, E, seed=13)
+    iters = 3
+    for eng in ("pregel", "gas"):
+        ts = {}
+        for kernel in ("off", "on"):
+            fn = lambda: O.pagerank(g, num_iters=iters, engine=eng,
+                                    kernel=kernel)
+            ts[kernel] = timeit(fn, iters=1, warmup=1)
+        row(f"kernel.fused_gec.engine.{eng}", ts["on"],
+            f"V={V};E={E};iters={iters};unfused_us={ts['off']*1e6:.1f};"
+            f"backend={jax.default_backend()}")
+    ts = {}
+    for kernel in ("off", "on"):
+        fn = lambda: run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, iters), g, max_iter=iters,
+            schedule="ring", kernel=kernel)
+        ts[kernel] = timeit(fn, iters=1, warmup=1)
+    row("kernel.fused_gec.engine.distributed_ring", ts["on"],
+        f"V={V};E={E};iters={iters};unfused_us={ts['off']*1e6:.1f};"
+        f"backend={jax.default_backend()}")
+
+
 def main(quick: bool = False, E: int | None = None, V: int | None = None):
     E = E or (1 << 13 if quick else 1 << 17)
     V = V or max(E // 8, 64)
@@ -150,6 +217,10 @@ def main(quick: bool = False, E: int | None = None, V: int | None = None):
                        256 if quick else 512, "sum")
     bench_fused_pallas(1 << 10 if quick else 1 << 12,
                        256 if quick else 512, "min")
+    # fixed size: smaller scales degenerate to window=0 (resident
+    # fallback) and would record a row that never exercises the windows
+    bench_fused_prefetch(1 << 12, 2048)
+    bench_fused_engines(quick)
 
 
 if __name__ == "__main__":

@@ -66,15 +66,24 @@ class UniGPS:
     def save_vertex_table(self, vprops: Dict[str, np.ndarray], path: str) -> None:
         gio.save_vertex_table(vprops, path)
 
+    def _kernel_kw(self, kw: dict) -> dict:
+        """Uniform per-call kernel override handling: every operator (and
+        `vcprog`) accepts the same `kernel=`/`use_kernel=` keywords that
+        `run_vcprog` does, defaulting to the session-level knob. Unknown
+        keywords are rejected here rather than silently dropped."""
+        out = {"kernel": kw.pop("kernel", self.kernel),
+               "use_kernel": kw.pop("use_kernel", None)}
+        if kw:
+            raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
+        return out
+
     # -- VCProg API (paper Fig. 3 `unigps.vcprog(...)`) ---------------------
     def vcprog(self, graph: PropertyGraph, user_program: VCProgram,
                max_iter: int = 100, engine: Optional[str] = None,
                output_file: Optional[str] = None, **kw):
         eng = engine or self.engine
         vprops, info = run_vcprog(user_program, graph, max_iter=max_iter,
-                                  engine=eng,
-                                  kernel=kw.get("kernel", self.kernel),
-                                  use_kernel=kw.get("use_kernel"))
+                                  engine=eng, **self._kernel_kw(kw))
         if output_file:
             host = {k: np.asarray(v) for k, v in vprops.items()}
             gio.save_vertex_table(host, output_file)
@@ -82,39 +91,41 @@ class UniGPS:
 
     # -- native operator API -------------------------------------------------
     def pagerank(self, graph, num_iters: int = 20, damping: float = 0.85,
-                 engine: Optional[str] = None, output_file: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 output_file: Optional[str] = None, **kw):
         ranks, info = operators.pagerank(graph, num_iters, damping,
                                          engine=engine or self.engine,
-                                         kernel=self.kernel)
+                                         **self._kernel_kw(kw))
         if output_file:
             gio.save_vertex_table({"rank": ranks}, output_file)
         return ranks, info
 
     def sssp(self, graph, root: int = 0, max_iter: int = 100,
-             engine: Optional[str] = None, output_file: Optional[str] = None):
+             engine: Optional[str] = None, output_file: Optional[str] = None,
+             **kw):
         dist, info = operators.sssp(graph, root, max_iter,
                                     engine=engine or self.engine,
-                                    kernel=self.kernel)
+                                    **self._kernel_kw(kw))
         if output_file:
             gio.save_vertex_table({"distance": dist}, output_file)
         return dist, info
 
     def connected_components(self, graph, max_iter: int = 200,
                              engine: Optional[str] = None,
-                             output_file: Optional[str] = None):
+                             output_file: Optional[str] = None, **kw):
         labels, info = operators.connected_components(
             graph, max_iter, engine=engine or self.engine,
-            kernel=self.kernel)
+            **self._kernel_kw(kw))
         if output_file:
             gio.save_vertex_table({"label": labels}, output_file)
         return labels, info
 
     def bfs(self, graph, root: int = 0, max_iter: int = 100,
-            engine: Optional[str] = None):
+            engine: Optional[str] = None, **kw):
         return operators.bfs(graph, root, max_iter,
                              engine=engine or self.engine,
-                             kernel=self.kernel)
+                             **self._kernel_kw(kw))
 
-    def degrees(self, graph, engine: Optional[str] = None):
+    def degrees(self, graph, engine: Optional[str] = None, **kw):
         return operators.degrees(graph, engine=engine or self.engine,
-                                 kernel=self.kernel)
+                                 **self._kernel_kw(kw))

@@ -17,5 +17,11 @@ dataflow — the JAX analogue of the paper's Giraph/GraphX/Gemini backends:
 
 "Write once, run anywhere": any VCProgram runs on every engine unmodified,
 and tests assert bit-identical results.
+
+Every engine is a thin schedule over `core/message_plane.py`: it hands
+the plane an `EdgeLayout` view of the `DeviceGraph` (canonical,
+src-sorted, or a distributed bucket) and the plane picks the execution
+path (fused Pallas pass — resident or scalar-prefetch —, blocked segment
+kernel, XLA segment ops, associative scan) in one place.
 """
 from .common import ENGINES, prepare_device_graph, run_vcprog  # noqa: F401

@@ -9,19 +9,26 @@ operands, (b) host-side eager execution of the UDF batch, (c) host→device
 transfer of results — the cost structure of the paper's IPC mechanism
 (batched per phase rather than per call; see DESIGN.md §2).
 
+The whole canonical EdgeLayout — endpoints, edge properties AND the
+precomputed SegmentMeta — rides through the `pure_callback` operand list
+(EdgeLayout is a registered pytree), so the host-side combine reuses the
+static segment structure instead of re-deriving it with `searchsorted`
+every iteration, exactly like the compiled engines.
+
 The paper's *zero-copy* optimization corresponds to the other engines,
 where the UDFs are traced into XLA and the boundary disappears entirely.
 `benchmarks/bench_ipc.py` reproduces Fig. 8d with this pair.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import records, vcprog
+from .. import message_plane, records
 from .common import register
-from .pushpull import pull_emit_and_combine
 
 
 def _as_shapes(tree):
@@ -30,11 +37,11 @@ def _as_shapes(tree):
 
 @register("callback")
 class CallbackEngine:
-    def init_extra(self, gdev, program):
+    def init_extra(self, graph, program, vprops0, kernel_on):
         return ()
 
     # Phase 2 on the host --------------------------------------------------
-    def compute_phase(self, gdev, program, vprops, inbox, process_mask, it):
+    def compute_phase(self, graph, program, vprops, inbox, process_mask, it):
         def host(vp, ib, mask, it_):
             new_props, is_active = jax.vmap(
                 program.vertex_compute, in_axes=(0, 0, None))(vp, ib, int(it_))
@@ -49,23 +56,25 @@ class CallbackEngine:
         return vprops, active
 
     # Phase 3 + Phase 1 on the host ----------------------------------------
-    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+    def emit_and_combine(self, graph, program, vprops, active, extra, empty,
                          kernel_on):
-        V = gdev["num_vertices"]
+        V = graph.num_vertices
+        # strip the nested canonical alias so the operand list stays flat
+        layout = dataclasses.replace(graph.canonical, canonical=None,
+                                     prefetch_blocks=None, prefetch_window=0)
 
-        def host(vp, act, src, dst, eprops):
-            g = {"src": jnp.asarray(src), "dst": jnp.asarray(dst),
-                 "eprops": eprops, "num_vertices": V}
+        def host(vp, act, lo):
+            lo = jax.tree.map(jnp.asarray, lo)
+            vp = jax.tree.map(jnp.asarray, vp)
             # rebuild the empty record host-side: the traced `empty` closure
             # is a jit-scope tracer and must not leak into eager execution
             empty_h = jax.tree.map(jnp.asarray, program.empty_message())
-            inbox, has_msg = pull_emit_and_combine(
-                g, program, vp, jnp.asarray(act), empty_h, kernel_on=False)
+            inbox, has_msg = message_plane.emit_and_combine(
+                program, lo, vp, jnp.asarray(act), empty_h, kernel_on=False)
             return jax.tree.map(np.asarray, (inbox, has_msg))
 
         inbox_shape = _as_shapes(records.tree_tile(empty, V))
         out_shapes = (inbox_shape, jax.ShapeDtypeStruct((V,), jnp.bool_))
         inbox, has_msg = jax.pure_callback(
-            host, out_shapes, vprops, active, gdev["src"], gdev["dst"],
-            gdev["eprops"])
+            host, out_shapes, vprops, active, layout)
         return inbox, has_msg, extra

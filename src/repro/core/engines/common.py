@@ -1,4 +1,10 @@
-"""Engine-agnostic driver: device graph prep + Algorithm-1 loop runner."""
+"""Engine-agnostic driver: device graph prep + Algorithm-1 loop runner.
+
+Engines are thin *schedule descriptions*: each one picks which
+:class:`~repro.core.graph_device.EdgeLayout` of the
+:class:`~repro.core.graph_device.DeviceGraph` to hand the message plane
+(and where its operands live), and `core/message_plane.py` does the rest.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,71 +12,41 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .. import records, vcprog
+from .. import message_plane, records, vcprog
 from ..graph import PropertyGraph
+from ..graph_device import DeviceGraph, build_device_graph
 
 
-def prepare_device_graph(g: PropertyGraph) -> Dict[str, Any]:
-    """Host→device conversion of the canonical + src-sorted edge layouts.
-
-    Also precomputes the static segment metadata of the dst-sorted order
-    (CSC row pointers are already on the graph as `in_indptr`): per-vertex
-    last-in-edge index and has-in-edge mask. These are loop constants the
-    combine phase previously re-derived with `searchsorted`/`segment_sum`
-    inside every `lax.while_loop` iteration.
-    """
-    src_s, dst_s, eprops_s = g.src_sorted()
-    inv_csc = np.empty_like(g.csc_perm)
-    inv_csc[g.csc_perm] = np.arange(g.csc_perm.shape[0])
-    E = int(g.num_edges)
-    last_edge = np.clip(g.in_indptr[1:] - 1, 0, max(E - 1, 0))
-    return {
-        "num_vertices": int(g.num_vertices),
-        "num_edges": E,
-        "src": jnp.asarray(g.src),
-        "dst": jnp.asarray(g.dst),
-        "eprops": jax.tree.map(jnp.asarray, g.edge_props),
-        "src_s": jnp.asarray(src_s),
-        "dst_s": jnp.asarray(dst_s),
-        "eprops_s": jax.tree.map(jnp.asarray, eprops_s),
-        # canonical -> src-sorted position (scatter emissions back to dst order)
-        "inv_csc": jnp.asarray(inv_csc),
-        "out_degree": jnp.asarray(g.out_degree),
-        "in_degree": jnp.asarray(g.in_degree),
-        "vprops_in": jax.tree.map(jnp.asarray, g.vertex_props),
-        # static segment structure of the canonical order, derived from the
-        # CSC row pointers (g.in_indptr stays host-side on the graph)
-        "seg_meta": vcprog.SegmentMeta(
-            last_edge=jnp.asarray(last_edge.astype(np.int32)),
-            has_edge=jnp.asarray(g.in_degree > 0)),
-    }
+def prepare_device_graph(g: PropertyGraph) -> DeviceGraph:
+    """Host→device conversion; see graph_device.build_device_graph."""
+    return build_device_graph(g)
 
 
-def _run_compiled(program, gdev, max_iter: int, engine, kernel_on: bool):
-    V = gdev["num_vertices"]
+def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
+                  kernel_on: bool):
+    V = graph.num_vertices
     empty = jax.tree.map(jnp.asarray, program.empty_message())
 
-    vprops0 = vcprog.init_vertices(program, gdev["vprops_in"],
-                                   gdev["out_degree"], V)
+    vprops0 = vcprog.init_vertices(program, graph.vprops_in,
+                                   graph.out_degree, V)
     inbox0 = records.tree_tile(empty, V)
     active0 = jnp.ones((V,), bool)
     has_msg0 = jnp.zeros((V,), bool)
-    extra0 = engine.init_extra(gdev, program)
+    extra0 = engine.init_extra(graph, program, vprops0, kernel_on)
 
     compute_override = getattr(engine, "compute_phase", None)
 
     def step(it, vprops, active, inbox, has_msg, extra):
         process = active | has_msg
         if compute_override is not None:
-            vprops, active = compute_override(gdev, program, vprops, inbox,
+            vprops, active = compute_override(graph, program, vprops, inbox,
                                               process, it)
         else:
             vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                                   process, it)
         inbox, has_msg, extra = engine.emit_and_combine(
-            gdev, program, vprops, active, extra, empty, kernel_on)
+            graph, program, vprops, active, extra, empty, kernel_on)
         return vprops, active, inbox, has_msg, extra
 
     state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
@@ -81,17 +57,16 @@ def _run_compiled(program, gdev, max_iter: int, engine, kernel_on: bool):
 
 @functools.lru_cache(maxsize=64)
 def _jitted_runner(engine_name: str, program_key, max_iter: int,
-                   kernel_on: bool, V: int, E: int):
+                   kernel_on: bool):
     from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
     engine = ENGINES[engine_name]
     program = program_key.program
 
-    def run(gdev_arrays):
-        gdev = dict(gdev_arrays)
-        gdev["num_vertices"] = V
-        gdev["num_edges"] = E
-        return _run_compiled(program, gdev, max_iter, engine, kernel_on)
+    def run(graph: DeviceGraph):
+        return _run_compiled(program, graph, max_iter, engine, kernel_on)
 
+    # DeviceGraph's static fields (num_vertices/num_edges/...) live in the
+    # pytree structure, so jax.jit keys its own cache on graph shape.
     return jax.jit(run)
 
 
@@ -120,7 +95,7 @@ class _ProgramKey:
 def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
                use_kernel: bool | None = None,
-               gdev: Dict[str, Any] | None = None):
+               gdev: DeviceGraph | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
     kernel: "auto" (default) picks the fused/segment Pallas kernels on TPU
@@ -132,17 +107,15 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     """
     if engine == "distributed":
         from . import distributed
-        return distributed.run_vcprog_distributed(program, graph, max_iter)
+        return distributed.run_vcprog_distributed(
+            program, graph, max_iter, kernel=kernel, use_kernel=use_kernel)
     if gdev is None:
         gdev = prepare_device_graph(graph)
-    kernel_on = vcprog.resolve_kernel_mode(
+    kernel_on = message_plane.resolve_kernel_mode(
         use_kernel if use_kernel is not None else kernel)
-    arrays = {k: v for k, v in gdev.items()
-              if k not in ("num_vertices", "num_edges")}
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
-                            kernel_on, gdev["num_vertices"],
-                            gdev["num_edges"])
-    vprops, iters, num_active = runner(arrays)
+                            kernel_on)
+    vprops, iters, num_active = runner(gdev)
     return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}
 
 

@@ -16,22 +16,28 @@ schedules for reading remote source properties:
              (§VI "organize RPC invocations in a pipeline manner").
              Memory O(V/P), wire bytes identical, latency hidden.
 
+Every bucket is an :class:`~repro.core.graph_device.EdgeLayout` (local
+gather/combine indices, global emit ids, valid-slot mask, precomputed
+per-bucket SegmentMeta), so each bucket's emit→combine goes through
+`core/message_plane.py` exactly like the single-device engines — with
+`kernel_on` the per-bucket plane runs as ONE fused Pallas pass.
+
 Semantics are identical to the single-device engines (tests assert
 equality); the user program is the same VCProgram object — cross-platform
 execution in the paper's sense, where the "platform" here is the mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .. import records, vcprog
+from .. import message_plane, records, vcprog
 from ..graph import PropertyGraph, partition_graph
+from ..graph_device import bucket_layout
 
 AXIS = "graph"
 
@@ -70,7 +76,13 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
     eprops = {k: np.asarray(v)[part.edge_prop_idx]
               for k, v in g.edge_props.items()}
     src_local = part.edge_src % v_pp if v_pp else part.edge_src
-    bucket_last, bucket_has = _bucket_segment_meta(part.edge_dst_local,
+    # padded slots carry the sentinel dst == v_pp: each bucket's dst run
+    # stays ascending THROUGH its padding, which both the segment ops
+    # (indices_are_sorted) and the fused kernel's block-overlap skip rely
+    # on; out-of-range ids are dropped by every combine path
+    dst_local = np.where(part.edge_mask, part.edge_dst_local,
+                         np.int64(v_pp))
+    bucket_last, bucket_has = _bucket_segment_meta(dst_local,
                                                    part.edge_mask, v_pp)
 
     # The [P(dst part), B(src-part bucket), L] layout transposes into the
@@ -82,9 +94,9 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
         "num_vertices": g.num_vertices,
         # [P, B=P, L] edge structure: dst part -> (src-owner bucket, slot)
         "edge_src_local": src_local.astype(np.int32),
-        "edge_dst_local": part.edge_dst_local.astype(np.int32),
+        "edge_dst_local": dst_local.astype(np.int32),
         "edge_src_global": part.edge_src.astype(np.int32),
-        "edge_dst_global": (part.edge_dst_local
+        "edge_dst_global": (dst_local
                             + part.v_start[:, None, None]).astype(np.int32),
         "edge_mask": part.edge_mask,
         # [P, B, v_pp] static segment structure of each bucket's dst runs
@@ -122,29 +134,11 @@ def _fold_partials(program):
     return fold
 
 
-def _bucket_combine(program, empty, inbox, has_msg, msgs, valid, bucket,
-                    v_pp):
-    """Merge one bucket's emissions into the local inbox (monoid merge)."""
-    b_inbox, b_has = vcprog.segment_combine(
-        program, msgs, bucket["dst_local"], valid, v_pp, empty,
-        meta=bucket["seg_meta"])
-    return _merge_partial(program, inbox, has_msg, b_inbox, b_has)
-
-
-def _emit_bucket(program, src_props_part, active_part, bucket):
-    """Evaluate emissions for one src-owner bucket of local in-edges."""
-    src_p = records.tree_gather(src_props_part, bucket["src_local"])
-    is_emit, msgs = jax.vmap(program.emit_message)(
-        bucket["src_global"], bucket["dst_global"], src_p, bucket["eprops"])
-    valid = (is_emit.astype(bool) & bucket["mask"]
-             & active_part[bucket["src_local"]])
-    return msgs, valid
-
-
 def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                           num_parts: int, schedule: str = "ring",
                           unroll_buckets: bool = False,
-                          skip_buckets: bool = False):
+                          skip_buckets: bool = False,
+                          kernel_on: bool = False):
     """One Algorithm-1 iteration as a shard_map-able local function.
 
     Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
@@ -166,16 +160,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
         has0 = jnp.zeros((v_pp,), bool)
 
         def bucket_at(b):
-            bk = {
-                "src_local": edges["edge_src_local"][b],
-                "src_global": edges["edge_src_global"][b],
-                "dst_global": edges["edge_dst_global"][b],
-                "dst_local": edges["edge_dst_local"][b],
-                "mask": edges["edge_mask"][b],
-                "eprops": jax.tree.map(lambda a: a[b], edges["eprops"]),
-            }
             if "bucket_last_edge" in edges:  # precomputed (host-side)
-                bk["seg_meta"] = vcprog.SegmentMeta(
+                meta = vcprog.SegmentMeta(
                     last_edge=edges["bucket_last_edge"][b],
                     has_edge=edges["bucket_has_edge"][b])
             else:
@@ -184,9 +170,23 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 # templates — precomputes the metadata; this mask-aware
                 # in-trace derivation keeps external local_step callers
                 # working, at the old per-iteration cost)
-                bk["seg_meta"] = vcprog.make_segment_meta(
-                    bk["dst_local"], v_pp, valid=bk["mask"])
-            return bk
+                meta = vcprog.make_segment_meta(
+                    edges["edge_dst_local"][b], v_pp,
+                    valid=edges["edge_mask"][b])
+            return bucket_layout(
+                src_local=edges["edge_src_local"][b],
+                src_global=edges["edge_src_global"][b],
+                dst_local=edges["edge_dst_local"][b],
+                dst_global=edges["edge_dst_global"][b],
+                eprops=jax.tree.map(lambda a: a[b], edges["eprops"]),
+                mask=edges["edge_mask"][b],
+                seg_meta=meta, v_per_part=v_pp)
+
+        def bucket_plane(bk, src_props_part, active_part):
+            """One bucket's whole message plane (fused when kernel_on)."""
+            return message_plane.emit_and_combine(
+                program, bk, src_props_part, active_part, empty,
+                kernel_on=kernel_on)
 
         if skip_buckets:
             # cost-calibration variant: everything EXCEPT the bucket loop
@@ -230,12 +230,10 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
 
             def body(carry, b):
                 inbox, has_msg = carry
-                bk = bucket_at(b)
-                msgs, valid = _emit_bucket(
-                    program, records.tree_row(all_vp, b), all_act[b], bk)
-                inbox, has_msg = _bucket_combine(
-                    program, empty, inbox, has_msg, msgs, valid, bk, v_pp)
-                return (inbox, has_msg), None
+                b_inbox, b_has = bucket_plane(
+                    bucket_at(b), records.tree_row(all_vp, b), all_act[b])
+                return _merge_partial(program, inbox, has_msg, b_inbox,
+                                      b_has), None
 
             if unroll_buckets:
                 # python loop: every bucket appears in the HLO, so the
@@ -254,10 +252,9 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             def body(carry, r):
                 inbox, has_msg, vp_rot, act_rot = carry
                 b = (my - r) % num_parts        # whose props we hold now
-                bk = bucket_at(b)
-                msgs, valid = _emit_bucket(program, vp_rot, act_rot, bk)
-                inbox, has_msg = _bucket_combine(
-                    program, empty, inbox, has_msg, msgs, valid, bk, v_pp)
+                b_inbox, b_has = bucket_plane(bucket_at(b), vp_rot, act_rot)
+                inbox, has_msg = _merge_partial(program, inbox, has_msg,
+                                                b_inbox, b_has)
                 # rotate towards the next neighbour (overlaps with compute)
                 vp_rot = jax.tree.map(
                     lambda a: jax.lax.ppermute(a, AXIS, perm), vp_rot)
@@ -281,12 +278,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             # one collective launch instead of P permute steps.
             # edges here are the transposed (src-part major) view.
             def part_body(carry, b):
-                inbox_b, has_b = carry
-                bk = bucket_at(b)
-                msgs, valid = _emit_bucket(program, vprops, active, bk)
-                one, oneh = vcprog.segment_combine(
-                    program, msgs, bk["dst_local"], valid, v_pp, empty,
-                    meta=bk["seg_meta"])
+                one, oneh = bucket_plane(bucket_at(b), vprops, active)
                 return carry, (one, oneh)
 
             _, (partials, phas) = jax.lax.scan(
@@ -312,9 +304,11 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
 
 def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
                             num_parts: int, mesh: Mesh, max_iter: int,
-                            schedule: str = "ring"):
+                            schedule: str = "ring",
+                            kernel_on: bool = False):
     """jit(shard_map(full Algorithm-1 loop)) over mesh axis AXIS."""
-    local_step = make_distributed_step(program, v_pp, num_parts, schedule)
+    local_step = make_distributed_step(program, v_pp, num_parts, schedule,
+                                       kernel_on=kernel_on)
 
     vspec = P(AXIS)
     espec = P(AXIS)
@@ -366,12 +360,16 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
 def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            max_iter: int, mesh: Optional[Mesh] = None,
                            num_parts: Optional[int] = None,
-                           schedule: str = "ring"):
+                           schedule: str = "ring",
+                           kernel: str | bool = "auto",
+                           use_kernel: bool | None = None):
     if mesh is None:
         dev = np.asarray(jax.devices())
         mesh = Mesh(dev.reshape(-1), (AXIS,))
     Pn = num_parts or mesh.devices.size
     assert Pn == mesh.devices.size, "one part per device"
+    kernel_on = message_plane.resolve_kernel_mode(
+        use_kernel if use_kernel is not None else kernel)
 
     sg = build_sharded_graph(graph, Pn)
     v_pp = sg["v_per_part"]
@@ -387,7 +385,7 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         sg["edge_src_local"] = sg["edge_src_global"] % v_pp
 
     runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
-                                     schedule)
+                                     schedule, kernel_on=kernel_on)
 
     # initial vertex props: the input props (init_vertex runs on device)
     vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
@@ -409,4 +407,5 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     host = jax.tree.map(
         lambda a: np.asarray(a).reshape((Pn * v_pp,) + a.shape[2:])[:V],
         vprops)
-    return host, {"schedule": schedule, "num_parts": Pn}
+    return host, {"schedule": schedule, "num_parts": Pn,
+                  "kernel_on": kernel_on}

@@ -2,42 +2,51 @@
 
 SCATTER writes a message onto every out-edge's storage (`e.msg`); the next
 GATHER phase reads the per-edge store over in-edges and SUMs it with the
-user monoid. We materialize the E-sized edge-message store explicitly and
-carry it through the loop state — the GAS memory profile — then gather-
-combine from the store. Inactive sources store the empty message, exactly
-like Fig. 4b's `e.msg <- VP.emptyMessage()` default.
+user monoid. With the kernel off we materialize the E-sized edge-message
+store explicitly and carry it through the loop state — the GAS memory
+profile — then gather-combine from the store (inactive sources store the
+empty message, exactly like Fig. 4b's `e.msg <- VP.emptyMessage()`
+default). With the kernel on, the message plane fuses scatter+gather into
+one kernel pass and the store never exists in HBM — the fused plane
+collapsing GAS's materialization is precisely the paper's zero-copy
+argument applied to the edge store.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .. import records, vcprog
+from .. import message_plane, records
 from .common import register
 
 
 @register("gas")
 class GASEngine:
-    def init_extra(self, gdev, program):
+    def init_extra(self, graph, program, vprops0, kernel_on):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
-        E = gdev["num_edges"]
-        store = records.tree_tile(empty, E)  # e.msg, canonical order
-        valid = jnp.zeros((E,), bool)
+        if kernel_on and message_plane.fused_applicable(program,
+                                                       graph.canonical,
+                                                       vprops0):
+            return ()  # fused plane: the store never materializes
+        store = records.tree_tile(empty, graph.num_edges)  # e.msg, canonical
+        valid = jnp.zeros((graph.num_edges,), bool)
         return (store, valid)
 
-    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+    def emit_and_combine(self, graph, program, vprops, active, extra, empty,
                          kernel_on):
-        # SCATTER: evaluate emit for every edge (canonical order), store e.msg
-        src, dst = gdev["src"], gdev["dst"]
-        src_prop = records.tree_gather(vprops, src)
-        is_emit, msgs = jax.vmap(program.emit_message)(
-            src, dst, src_prop, gdev["eprops"])
-        valid = is_emit.astype(bool) & active[src]
-        empty_b = records.tree_tile(empty, gdev["num_edges"])
-        store = records.tree_where(valid, msgs, empty_b)
+        layout = graph.canonical
+        if kernel_on and message_plane.fused_applicable(program, layout,
+                                                        vprops):
+            inbox, has_msg = message_plane.emit_and_combine(
+                program, layout, vprops, active, empty, kernel_on=True)
+            return inbox, has_msg, extra
 
-        # GATHER + SUM: read e.msg over in-edges, combine with the monoid
-        inbox, has_msg = vcprog.segment_combine(
-            program, store, dst, valid, gdev["num_vertices"], empty,
-            kernel_on, meta=gdev.get("seg_meta"))
+        # SCATTER: evaluate emit for every edge (canonical order), store
+        # e.msg; GATHER + SUM: combine the store with the monoid
+        msgs, valid = message_plane.emit_messages(program, layout, vprops,
+                                                  active)
+        empty_b = records.tree_tile(empty, graph.num_edges)
+        store = records.tree_where(valid, msgs, empty_b)
+        inbox, has_msg = message_plane.combine(program, layout, store, valid,
+                                               empty, kernel_on)
         return inbox, has_msg, (store, valid)

@@ -1,38 +1,27 @@
 """Pregel-style push engine (paper Fig. 4a).
 
-A Pregel vertex iterates its *out-edges* and SEND_MESSAGEs to targets. We
-evaluate emissions on the src-sorted (out-edge) layout — the order a Pregel
-worker would — then scatter (permute) the messages into the canonical
-dst-sorted order and segment-combine them into per-vertex inboxes.
+A Pregel vertex iterates its *out-edges* and SEND_MESSAGEs to targets, so
+this engine hands the message plane the **src-sorted** (out-edge) layout —
+the order a Pregel worker would evaluate emissions in. The plane permutes
+the messages into canonical dst order and segment-combines them; with the
+kernel on it instead runs the whole plane as one fused pass over the
+layout's canonical alias (emit is a pure per-edge function, so evaluation
+order is semantics-free).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .. import records, vcprog
+from .. import message_plane
 from .common import register
 
 
 @register("pregel")
 class PregelEngine:
-    def init_extra(self, gdev, program):
+    def init_extra(self, graph, program, vprops0, kernel_on):
         return ()
 
-    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+    def emit_and_combine(self, graph, program, vprops, active, extra, empty,
                          kernel_on):
-        src_s, dst_s = gdev["src_s"], gdev["dst_s"]
-        src_prop = records.tree_gather(vprops, src_s)
-        is_emit, msgs = jax.vmap(program.emit_message)(
-            src_s, dst_s, src_prop, gdev["eprops_s"])
-        is_emit = is_emit.astype(bool) & active[src_s]
-
-        # permute emissions from out-edge order to canonical dst order
-        inv = gdev["inv_csc"]
-        msgs_c = records.tree_gather(msgs, inv)
-        valid_c = is_emit[inv]
-
-        inbox, has_msg = vcprog.segment_combine(
-            program, msgs_c, gdev["dst"], valid_c, gdev["num_vertices"],
-            empty, kernel_on, meta=gdev.get("seg_meta"))
+        inbox, has_msg = message_plane.emit_and_combine(
+            program, graph.src_sorted, vprops, active, empty,
+            kernel_on=kernel_on)
         return inbox, has_msg, extra

@@ -3,11 +3,14 @@
 Gemini switches between a sparse *push* mode (iterate out-edges of the
 active frontier) and a dense *pull* mode (iterate in-edges of every vertex)
 based on frontier density. The dense/sparse duality survives on TPU as a
-schedule choice under `lax.cond`:
+schedule choice under `lax.cond` over WHICH EdgeLayout the message plane
+receives:
 
-  sparse/push: the Pregel dataflow (out-edge order + permute + combine)
-  dense/pull : emissions evaluated directly on the in-edge (canonical)
-               layout — "DENSESIGNAL(v, inEdgeIterator)" — no permute.
+  sparse/push: the src-sorted (out-edge) layout — the Pregel dataflow
+               (emit in out-edge order, permute, combine)
+  dense/pull : the canonical (in-edge) layout —
+               "DENSESIGNAL(v, inEdgeIterator)" — no permute; fused-kernel
+               eligible.
 
 Heuristic (Gemini): push when `sum(out_degree[active]) < |E| / alpha`.
 """
@@ -16,53 +19,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import records, vcprog
+from .. import message_plane
 from .common import register
-
-
-def pull_emit_and_combine(gdev, program, vprops, active, empty, kernel_on):
-    """Dense pull: evaluate emit on in-edge order; combine in place.
-
-    With the kernel on and a fusable program, the three E-passes
-    (gather / emit / combine) collapse into ONE `pallas_call` that streams
-    dst-sorted edge blocks through VMEM (`kernels/fused_gather_emit.py`).
-    """
-    if kernel_on and vcprog.fused_applicable(program, vprops, gdev["eprops"],
-                                             gdev["dst"].shape[0],
-                                             gdev["num_vertices"]):
-        return vcprog.fused_pull_combine(program, gdev, vprops, active, empty)
-    src, dst = gdev["src"], gdev["dst"]
-    src_prop = records.tree_gather(vprops, src)
-    is_emit, msgs = jax.vmap(program.emit_message)(
-        src, dst, src_prop, gdev["eprops"])
-    valid = is_emit.astype(bool) & active[src]
-    return vcprog.segment_combine(program, msgs, dst, valid,
-                                  gdev["num_vertices"], empty, kernel_on,
-                                  meta=gdev.get("seg_meta"))
 
 
 @register("pushpull")
 class PushPullEngine:
     alpha: float = 20.0
 
-    def init_extra(self, gdev, program):
+    def init_extra(self, graph, program, vprops0, kernel_on):
         return ()
 
-    def emit_and_combine(self, gdev, program, vprops, active, extra, empty,
+    def emit_and_combine(self, graph, program, vprops, active, extra, empty,
                          kernel_on):
-        from .pregel import PregelEngine  # reuse the push dataflow
-
-        active_out_edges = jnp.sum(jnp.where(active, gdev["out_degree"], 0))
-        use_push = active_out_edges < (gdev["num_edges"] / self.alpha)
+        active_out_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
+        use_push = active_out_edges < (graph.num_edges / self.alpha)
 
         def push(_):
-            inbox, has_msg, _ = PregelEngine().emit_and_combine(
-                gdev, program, vprops, active, (), empty, kernel_on)
-            return inbox, has_msg
+            return message_plane.emit_and_combine(
+                program, graph.src_sorted, vprops, active, empty,
+                kernel_on=kernel_on)
 
         def pull(_):
-            return pull_emit_and_combine(gdev, program, vprops, active,
-                                         empty, kernel_on)
+            return message_plane.emit_and_combine(
+                program, graph.canonical, vprops, active, empty,
+                kernel_on=kernel_on)
 
         inbox, has_msg = jax.lax.cond(use_push, push, pull, operand=None)
         return inbox, has_msg, extra

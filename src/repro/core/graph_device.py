@@ -1,0 +1,223 @@
+"""Typed device-graph pytrees — the shared vocabulary of the message plane.
+
+Every engine used to thread its own stringly-typed dict of edge arrays
+(``gdev["src_s"]`` here, ``edges["edge_src_local"]`` there), which meant
+the fused gather–emit–combine kernel was reachable from exactly one call
+site. This module replaces those dicts with two registered dataclasses:
+
+  :class:`EdgeLayout`   one *view* of an edge set — endpoints, edge
+                        properties, the permutation linking it to the
+                        combine (dst-sorted) order, precomputed
+                        :class:`~repro.core.vcprog.SegmentMeta`, and an
+                        optional valid-slot mask (distributed buckets are
+                        padded). ``core/message_plane.py`` dispatches on
+                        these fields alone, so any engine that can
+                        describe its schedule as an EdgeLayout gets every
+                        fast path for free.
+
+  :class:`DeviceGraph`  the device-resident graph: both single-device
+                        layouts (canonical dst-sorted + src-sorted) plus
+                        degrees and input vertex properties.
+
+Both are pytrees (``jax.tree_util.register_dataclass``): they pass
+through ``jax.jit``, ``shard_map``, ``lax.cond`` branches and
+``jax.pure_callback`` operand lists unchanged, with the shape-like fields
+(`num_segments`, `num_edges`, …) as static aux data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import vcprog
+from .graph import PropertyGraph
+
+#: edge-block size the scalar-prefetch fused kernel is specialized for;
+#: prefetch window metadata is precomputed host-side against this value.
+PREFETCH_BLOCK_E = 512
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeLayout:
+    """One view of an edge set, as the message plane consumes it.
+
+    Data fields (traced):
+      src:        [E] indices into the vertex-property batch (gather axis).
+                  For distributed buckets these are *local* slot indices.
+      dst:        [E] combine segment ids in [0, num_segments); for padded
+                  layouts, invalid slots carry the sentinel id
+                  ``num_segments`` so the array stays ascending.
+      eprops:     edge-property record batch, leading dim E.
+      perm:       optional [E'] gather permutation mapping this layout's
+                  emission order into the combine (dst-sorted) order —
+                  ``None`` when the layout already IS combine-ordered.
+                  When set, ``canonical`` must hold the combine-ordered
+                  alias (its dst/seg_meta drive the segment reduction).
+      seg_meta:   precomputed static SegmentMeta of `dst` (combine-ordered
+                  layouts only).
+      valid_mask: optional [E] bool — False rows are padding and can never
+                  emit (distributed buckets).
+      src_ids / dst_ids: optional [E] *global* endpoint ids handed to the
+                  user's ``emit_message`` when they differ from src/dst
+                  (distributed buckets emit with global ids but combine on
+                  local ones). ``None`` means src/dst are the ids.
+      canonical:  optional combine-ordered alias of the same edge set —
+                  lets the dispatcher run the fused kernel for a permuted
+                  (e.g. src-sorted) view.
+      prefetch_blocks: optional [ceil(E/PREFETCH_BLOCK_E)] int32 window
+                  block index per edge block (scalar-prefetch variant).
+
+    Static fields (aux data, part of the jit cache key):
+      num_segments:    combine fan-in (V, or v_per_part for buckets).
+      num_edges:       edge SLOT count — the leading dim of src/dst/
+                  eprops. Pre-padded layouts count their padding here;
+                  ``valid_mask`` is what distinguishes real edges.
+      prefetch_window: src-window row count for the scalar-prefetch fused
+                  kernel; 0 = no prefetch metadata.
+    """
+
+    src: Any
+    dst: Any
+    eprops: Any
+    perm: Any = None
+    seg_meta: Optional[vcprog.SegmentMeta] = None
+    valid_mask: Any = None
+    src_ids: Any = None
+    dst_ids: Any = None
+    canonical: Optional["EdgeLayout"] = None
+    prefetch_blocks: Any = None
+    num_segments: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
+    num_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
+    prefetch_window: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
+
+    @property
+    def emit_src_ids(self):
+        return self.src if self.src_ids is None else self.src_ids
+
+    @property
+    def emit_dst_ids(self):
+        return self.dst if self.dst_ids is None else self.dst_ids
+
+    @property
+    def combine_view(self) -> "EdgeLayout":
+        """The combine-ordered (dst-sorted) alias of this edge set."""
+        return self if self.perm is None else self.canonical
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Device-resident property graph: both single-device edge layouts
+    plus the vertex-level arrays every engine needs."""
+
+    canonical: EdgeLayout      # dst-sorted ("CSR over in-edges")
+    src_sorted: EdgeLayout     # out-edge order, perm -> canonical
+    out_degree: Any
+    in_degree: Any
+    vprops_in: Dict[str, Any]
+    num_vertices: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
+    num_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+
+def compute_prefetch_windows(src: np.ndarray, num_vertices: int,
+                             block_e: int = PREFETCH_BLOCK_E):
+    """Host-side window metadata for the scalar-prefetch fused kernel.
+
+    For each block of `block_e` edges, the kernel DMAs TWO adjacent
+    `window`-row src slabs (indices ``block_idx[e]`` and
+    ``block_idx[e] + 1``) instead of keeping the whole [V] vertex
+    property resident in VMEM. With `window` = next power of two >= the
+    widest block's src span, the slab pair [q·W, (q+2)·W) with
+    q = src_min // W always covers [src_min, src_max] — no start-
+    quantization penalty, arbitrary block index maps stay legal.
+
+    Returns (block_idx [n_blocks] int32, window int). window == 0 means
+    no useful metadata (empty edge set, or the window would be at least
+    half the vertex range — the resident variant wins there).
+    """
+    src = np.asarray(src)
+    E = int(src.shape[0])
+    if E == 0 or num_vertices == 0:
+        return np.zeros((1,), np.int32), 0
+    n_blocks = -(-E // block_e)
+    pad = n_blocks * block_e - E
+    # pad with the last real src id so padding never widens a window
+    src_p = np.concatenate([src, np.full(pad, src[-1], src.dtype)])
+    blocks = src_p.reshape(n_blocks, block_e)
+    lo = blocks.min(axis=1).astype(np.int64)
+    hi = blocks.max(axis=1).astype(np.int64)
+
+    span = int((hi - lo).max()) + 1
+    w = 8
+    while w < span:
+        w *= 2
+    if 2 * w >= num_vertices:
+        return np.zeros((1,), np.int32), 0  # slab pair >= resident set
+    return (lo // w).astype(np.int32), int(w)
+
+
+def build_device_graph(g: PropertyGraph) -> DeviceGraph:
+    """Host→device conversion of the canonical + src-sorted edge layouts.
+
+    Precomputes everything structural that is a loop constant: the
+    dst-sorted SegmentMeta (from the CSC row pointers already on the
+    graph), the canonical→src-sorted permutation, and the scalar-prefetch
+    window table of the canonical order.
+    """
+    src_s, dst_s, eprops_s = g.src_sorted()
+    inv_csc = np.empty_like(g.csc_perm)
+    inv_csc[g.csc_perm] = np.arange(g.csc_perm.shape[0])
+    V, E = int(g.num_vertices), int(g.num_edges)
+    last_edge = np.clip(g.in_indptr[1:] - 1, 0, max(E - 1, 0))
+    meta = vcprog.SegmentMeta(
+        last_edge=jnp.asarray(last_edge.astype(np.int32)),
+        has_edge=jnp.asarray(g.in_degree > 0))
+    pf_blocks, pf_window = compute_prefetch_windows(g.src, V)
+
+    canonical = EdgeLayout(
+        src=jnp.asarray(g.src),
+        dst=jnp.asarray(g.dst),
+        eprops=jax.tree.map(jnp.asarray, g.edge_props),
+        seg_meta=meta,
+        prefetch_blocks=jnp.asarray(pf_blocks),
+        num_segments=V, num_edges=E, prefetch_window=pf_window)
+    src_sorted = EdgeLayout(
+        src=jnp.asarray(src_s),
+        dst=jnp.asarray(dst_s),
+        eprops=jax.tree.map(jnp.asarray, eprops_s),
+        # canonical -> src-sorted position: gathering emissions with this
+        # permutation scatters them back into combine (dst) order
+        perm=jnp.asarray(inv_csc),
+        canonical=canonical,
+        num_segments=V, num_edges=E)
+    return DeviceGraph(
+        canonical=canonical,
+        src_sorted=src_sorted,
+        out_degree=jnp.asarray(g.out_degree),
+        in_degree=jnp.asarray(g.in_degree),
+        vprops_in=jax.tree.map(jnp.asarray, g.vertex_props),
+        num_vertices=V, num_edges=E)
+
+
+def bucket_layout(src_local, src_global, dst_local, dst_global, eprops,
+                  mask, seg_meta, v_per_part: int) -> EdgeLayout:
+    """EdgeLayout over ONE distributed src-owner bucket of local in-edges.
+
+    The bucket is combine-ordered already (dst-local ascending with
+    sentinel pads), padded to the common slot count L, and emits with
+    global endpoint ids.
+    """
+    return EdgeLayout(
+        src=src_local, dst=dst_local, eprops=eprops,
+        valid_mask=mask, seg_meta=seg_meta,
+        src_ids=src_global, dst_ids=dst_global,
+        num_segments=int(v_per_part),
+        num_edges=int(dst_local.shape[0]))

@@ -1,0 +1,280 @@
+"""The message plane: ONE dispatcher for Phase 3 (emit) + Phase 1 (merge).
+
+Every engine is a schedule over the same dataflow — evaluate the user's
+``emit_message`` along an edge layout, then fold the messages into
+per-vertex inboxes under the user's monoid. This module is the single
+place that dataflow is implemented and dispatched:
+
+    emit_and_combine(program, layout, vprops, active, empty,
+                     kernel_on=..., mode=...)
+
+``layout`` is an :class:`~repro.core.graph_device.EdgeLayout`; the
+dispatcher reads its fields (perm? valid_mask? prefetch table? canonical
+alias?) and the program's monoid to pick between
+
+  * the fused gather–emit–combine Pallas kernel (one pass, messages never
+    touch HBM) — resident or scalar-prefetch variant,
+  * the blocked Pallas segment-combine kernel over materialized messages,
+  * XLA segment ops (named monoids) or a flagged associative scan
+    (general monoids),
+
+with permute-then-combine inserted automatically for emission orders that
+are not combine-ordered (pregel's src-sorted view). Because every engine
+routes through this entry point, a fast path added here is immediately
+reachable from pregel, GAS, pushpull, callback and each distributed
+bucket — the GraphX lesson applied to our Pallas specializations.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import records
+from .graph_device import EdgeLayout
+from .vcprog import Record, RecordBatch, SegmentMeta, VCProgram, \
+    make_segment_meta
+
+_MODES = ("auto", "fused", "unfused")
+
+
+# ---------------------------------------------------------------------------
+# Kernel knob
+# ---------------------------------------------------------------------------
+
+def resolve_kernel_mode(kernel) -> bool:
+    """Resolve the tri-state kernel knob to a concrete on/off.
+
+    "auto" picks the Pallas kernels on TPU and the XLA segment ops on CPU
+    (where the kernels would run in interpret mode — a correctness path,
+    not a fast path). Booleans are accepted as a legacy alias.
+    """
+    if kernel is None:
+        kernel = "auto"
+    if isinstance(kernel, bool):
+        return kernel
+    if kernel == "auto":
+        return jax.default_backend() == "tpu"
+    if kernel in ("on", "off"):
+        return kernel == "on"
+    raise ValueError(f"kernel must be 'auto'|'on'|'off', got {kernel!r}")
+
+
+# ---------------------------------------------------------------------------
+# Segment combination under the user monoid (combine-ordered messages)
+# ---------------------------------------------------------------------------
+
+def _has_msg(valid: jnp.ndarray, dst: jnp.ndarray,
+             num_segments: int) -> jnp.ndarray:
+    """has_msg[v] = some valid emission targets v. The ONE dynamic segment
+    reduction per combine — everything else structural comes from meta."""
+    return (jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                                num_segments=num_segments,
+                                indices_are_sorted=True) > 0)
+
+
+def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
+                     valid: jnp.ndarray, num_segments: int, empty: Record,
+                     meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Generic segment-combine via a flagged associative scan.
+
+    Edges must be dst-sorted. Works for ANY associative+commutative
+    merge_message — the TPU-native replacement for scatter-combine.
+    """
+    E = dst.shape[0]
+    # identity-mask invalid emissions so they cannot contribute
+    empty_b = records.tree_tile(empty, E)
+    msgs = records.tree_where(valid, msgs, empty_b)
+
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), dst[1:] != dst[:-1]])
+
+    def comb(left, right):
+        fl, vl = left
+        fr, vr = right
+        merged = jax.vmap(program.merge_message)(vl, vr)
+        v = records.tree_where(fr, vr, merged)
+        return (fl | fr, v)
+
+    _, scanned = jax.lax.associative_scan(comb, (seg_start, msgs))
+
+    # inbox[v] = scanned value at the last in-edge of v (precomputed)
+    inbox = records.tree_gather(scanned, meta.last_edge)
+    empty_v = records.tree_tile(empty, num_segments)
+    inbox = records.tree_where(meta.has_edge, inbox, empty_v)
+    return inbox, _has_msg(valid, dst, num_segments)
+
+
+def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
+                   valid: jnp.ndarray, num_segments: int, empty: Record,
+                   meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Fast path for named elementwise monoids (sum/min/max on every field)."""
+    op = {"sum": jax.ops.segment_sum,
+          "min": jax.ops.segment_min,
+          "max": jax.ops.segment_max}[program.monoid]
+    E = dst.shape[0]
+    empty_b = records.tree_tile(empty, E)
+    msgs = records.tree_where(valid, msgs, empty_b)
+
+    def leaf(x, e):
+        out = op(x, dst, num_segments=num_segments, indices_are_sorted=True)
+        if program.monoid in ("min", "max"):
+            # segments with no edges return +/-inf-ish init; clamp to identity
+            has = meta.has_edge.reshape(
+                meta.has_edge.shape + (1,) * (out.ndim - 1))
+            out = jnp.where(has, out, jnp.broadcast_to(e, out.shape).astype(out.dtype))
+        return out.astype(x.dtype)
+
+    empty_v = jax.tree.map(jnp.asarray, empty)
+    inbox = jax.tree.map(leaf, msgs, empty_v)
+    return inbox, _has_msg(valid, dst, num_segments)
+
+
+def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
+                    kernel_on: bool = False,
+                    meta: Optional[SegmentMeta] = None):
+    """Combine per-edge messages into per-vertex inboxes (dst-sorted edges).
+
+    kernel_on=True routes named monoids through the Pallas segment kernel
+    (MXU one-hot matmul for sum, segmented-scan + pick matmul for min/max).
+    `meta` is the precomputed static segment structure; pass it whenever the
+    call sits inside a compiled loop so no structural reductions recompute
+    per iteration (a traced fallback is derived here otherwise).
+    """
+    if meta is None:
+        meta = make_segment_meta(dst, num_segments)
+    if program.monoid in ("sum", "min", "max"):
+        if kernel_on:
+            from repro.kernels import ops as kops
+            E = dst.shape[0]
+            empty_b = records.tree_tile(empty, E)
+            msgs_m = records.tree_where(valid, msgs, empty_b)
+            inbox = jax.tree.map(
+                lambda x: kops.segment_combine(x, dst, num_segments,
+                                               monoid=program.monoid),
+                msgs_m)
+            if program.monoid in ("min", "max"):
+                empty_v = records.tree_tile(empty, num_segments)
+                inbox = records.tree_where(meta.has_edge, inbox, empty_v)
+            return inbox, _has_msg(valid, dst, num_segments)
+        return _segment_named(program, msgs, dst, valid, num_segments, empty,
+                              meta)
+    return _segment_general(program, msgs, dst, valid, num_segments, empty,
+                            meta)
+
+
+# ---------------------------------------------------------------------------
+# Layout-level dataflow pieces (what engines compose)
+# ---------------------------------------------------------------------------
+
+def emit_messages(program: VCProgram, layout: EdgeLayout, vprops, active
+                  ) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Phase 3 on the layout's own edge order: gather src props, vmap the
+    user's emit, veto inactive sources and padded slots.
+
+    Returns (msgs, valid) in LAYOUT order (not necessarily combine order).
+    """
+    src_prop = records.tree_gather(vprops, layout.src)
+    is_emit, msgs = jax.vmap(program.emit_message)(
+        layout.emit_src_ids, layout.emit_dst_ids, src_prop, layout.eprops)
+    valid = is_emit.astype(bool) & jnp.take(active, layout.src, axis=0)
+    if layout.valid_mask is not None:
+        valid = valid & layout.valid_mask
+    return msgs, valid
+
+
+def combine(program: VCProgram, layout: EdgeLayout, msgs, valid, empty,
+            kernel_on: bool = False) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Phase 1: fold layout-ordered messages into per-vertex inboxes.
+
+    Permutes into the combine (dst-sorted) order first when the layout is
+    an emission-order view (``perm`` set), then segment-combines with the
+    precomputed metadata of the combine-ordered alias.
+    """
+    cv = layout.combine_view
+    if layout.perm is not None:
+        if cv is None:
+            raise ValueError(
+                "EdgeLayout with perm set needs its combine-ordered alias "
+                "in .canonical (see graph_device.EdgeLayout)")
+        msgs = records.tree_gather(msgs, layout.perm)
+        valid = jnp.take(valid, layout.perm, axis=0)
+    meta = cv.seg_meta
+    if meta is None:
+        meta = make_segment_meta(cv.dst, cv.num_segments,
+                                 valid=cv.valid_mask)
+    return segment_combine(program, msgs, cv.dst, valid, cv.num_segments,
+                           empty, kernel_on, meta=meta)
+
+
+def fused_applicable(program: VCProgram, layout: EdgeLayout, vprops) -> bool:
+    """Static check: can this (program, layout) pair run as ONE fused
+    kernel pass? Needs a named monoid, scalar record leaves, and a
+    combine-ordered view of the edge set (the layout itself or its
+    canonical alias). Delegates to the kernel's own `fusable` predicate so
+    the gate and the kernel's schema validation can never drift apart."""
+    cv = layout.combine_view
+    if cv is None:
+        return False
+    from repro.kernels.fused_gather_emit import fusable
+    return fusable(program.emit_message, program.monoid, vprops, cv.eprops,
+                   cv.num_edges, cv.num_segments)
+
+
+def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
+                        active, empty: Record):
+    """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
+    and fold into per-vertex inboxes inside a single Pallas kernel — no
+    E-sized message materialization in HBM. `layout` must be the
+    combine-ordered view."""
+    from repro.kernels import ops as kops
+    from .graph_device import PREFETCH_BLOCK_E
+
+    prefetch = None
+    if layout.prefetch_window and layout.prefetch_blocks is not None:
+        prefetch = (layout.prefetch_blocks, layout.prefetch_window,
+                    PREFETCH_BLOCK_E)
+    inbox, has_msg = kops.gather_emit_combine(
+        program.emit_message, program.monoid, layout.src, layout.dst,
+        vprops, layout.eprops, active, layout.num_segments,
+        valid=layout.valid_mask,
+        src_ids=layout.src_ids, dst_ids=layout.dst_ids,
+        prefetch=prefetch)
+    # normalize no-message vertices to the user's exact empty record
+    empty_v = records.tree_tile(empty, layout.num_segments)
+    return records.tree_where(has_msg, inbox, empty_v), has_msg
+
+
+# ---------------------------------------------------------------------------
+# THE entry point
+# ---------------------------------------------------------------------------
+
+def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
+                     empty: Record, *, kernel_on: bool = False,
+                     mode: str = "auto"
+                     ) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Run the whole message plane (Phase 3 + Phase 1) for one iteration.
+
+    Dispatch (static — every branch resolves at trace time):
+      mode="auto"     fuse into one kernel pass when `kernel_on` and the
+                      (program, layout) pair qualifies; otherwise the
+                      three-pass emit→[permute]→combine dataflow, with
+                      the blocked Pallas segment kernel when `kernel_on`.
+      mode="fused"    require the fused pass (raises if not applicable).
+      mode="unfused"  never fuse (still honors `kernel_on` for the
+                      blocked segment-combine kernel).
+
+    Returns (inbox [num_segments] record batch, has_msg [num_segments]).
+    """
+    if mode not in _MODES:
+        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    want_fused = mode == "fused" or (mode == "auto" and kernel_on)
+    if want_fused and fused_applicable(program, layout, vprops):
+        return _fused_emit_combine(program, layout.combine_view, vprops,
+                                   active, empty)
+    if mode == "fused":
+        raise ValueError(
+            "mode='fused' but the program/layout pair is not fusable "
+            "(needs a named monoid and scalar record leaves)")
+    msgs, valid = emit_messages(program, layout, vprops, active)
+    return combine(program, layout, msgs, valid, empty, kernel_on)

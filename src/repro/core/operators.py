@@ -220,11 +220,12 @@ class PersonalizedPageRankProgram(PageRankProgram):
 
 def personalized_pagerank(graph: PropertyGraph, source: int,
                           num_iters: int = 20, damping: float = 0.85,
-                          engine: str = "pushpull", kernel: str = "auto"):
+                          engine: str = "pushpull", kernel: str = "auto",
+                          use_kernel: bool | None = None):
     prog = PersonalizedPageRankProgram(graph.num_vertices, num_iters,
                                        source, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
-                              kernel=kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     return np.asarray(vprops["rank"]), info
 
 
@@ -255,9 +256,9 @@ class DegreeProgram(vcprog.VCProgram):
 
 
 def degrees(graph: PropertyGraph, engine: str = "pushpull",
-            kernel: str = "auto"):
+            kernel: str = "auto", use_kernel: bool | None = None):
     prog = DegreeProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine,
-                              kernel=kernel)
+                              kernel=kernel, use_kernel=use_kernel)
     return (np.asarray(vprops["out_degree"]),
             np.asarray(vprops["in_degree"])), info

@@ -14,7 +14,6 @@ Laws the paper imposes (checked by hypothesis tests):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -106,155 +105,30 @@ class VCProgram:
 
 
 # ---------------------------------------------------------------------------
-# Message combination under the user monoid
+# Message combination — compatibility delegates
 # ---------------------------------------------------------------------------
-
-def _has_msg(valid: jnp.ndarray, dst: jnp.ndarray,
-             num_segments: int) -> jnp.ndarray:
-    """has_msg[v] = some valid emission targets v. The ONE dynamic segment
-    reduction per combine — everything else structural comes from meta."""
-    return (jax.ops.segment_max(valid.astype(jnp.int32), dst,
-                                num_segments=num_segments,
-                                indices_are_sorted=True) > 0)
-
-
-def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
-                     valid: jnp.ndarray, num_segments: int, empty: Record,
-                     meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
-    """Generic segment-combine via a flagged associative scan.
-
-    Edges must be dst-sorted. Works for ANY associative+commutative
-    merge_message — the TPU-native replacement for scatter-combine.
-    """
-    E = dst.shape[0]
-    # identity-mask invalid emissions so they cannot contribute
-    empty_b = records.tree_tile(empty, E)
-    msgs = records.tree_where(valid, msgs, empty_b)
-
-    seg_start = jnp.concatenate([jnp.ones((1,), bool), dst[1:] != dst[:-1]])
-
-    def comb(left, right):
-        fl, vl = left
-        fr, vr = right
-        merged = jax.vmap(program.merge_message)(vl, vr)
-        v = records.tree_where(fr, vr, merged)
-        return (fl | fr, v)
-
-    _, scanned = jax.lax.associative_scan(comb, (seg_start, msgs))
-
-    # inbox[v] = scanned value at the last in-edge of v (precomputed)
-    inbox = records.tree_gather(scanned, meta.last_edge)
-    empty_v = records.tree_tile(empty, num_segments)
-    inbox = records.tree_where(meta.has_edge, inbox, empty_v)
-    return inbox, _has_msg(valid, dst, num_segments)
-
-
-def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
-                   valid: jnp.ndarray, num_segments: int, empty: Record,
-                   meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
-    """Fast path for named elementwise monoids (sum/min/max on every field)."""
-    op = {"sum": jax.ops.segment_sum,
-          "min": jax.ops.segment_min,
-          "max": jax.ops.segment_max}[program.monoid]
-    E = dst.shape[0]
-    empty_b = records.tree_tile(empty, E)
-    msgs = records.tree_where(valid, msgs, empty_b)
-
-    def leaf(x, e):
-        out = op(x, dst, num_segments=num_segments, indices_are_sorted=True)
-        if program.monoid in ("min", "max"):
-            # segments with no edges return +/-inf-ish init; clamp to identity
-            has = meta.has_edge.reshape(
-                meta.has_edge.shape + (1,) * (out.ndim - 1))
-            out = jnp.where(has, out, jnp.broadcast_to(e, out.shape).astype(out.dtype))
-        return out.astype(x.dtype)
-
-    empty_v = jax.tree.map(jnp.asarray, empty)
-    inbox = jax.tree.map(leaf, msgs, empty_v)
-    return inbox, _has_msg(valid, dst, num_segments)
-
+# The implementation (and every dispatch decision: fused kernel vs blocked
+# segment kernel vs XLA segment ops vs associative scan) lives in
+# core/message_plane.py, the single module all engines route through.
+# These wrappers keep the historical `vcprog.segment_combine` /
+# `vcprog.resolve_kernel_mode` call sites working.
 
 def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
                     kernel_on: bool = False,
                     meta: Optional[SegmentMeta] = None):
-    """Combine per-edge messages into per-vertex inboxes (dst-sorted edges).
+    """Combine per-edge messages into per-vertex inboxes (dst-sorted
+    edges). Delegates to :mod:`repro.core.message_plane`."""
+    from . import message_plane
+    return message_plane.segment_combine(program, msgs, dst, valid,
+                                         num_segments, empty, kernel_on,
+                                         meta=meta)
 
-    kernel_on=True routes named monoids through the Pallas segment kernel
-    (MXU one-hot matmul for sum, segmented-scan + pick matmul for min/max).
-    `meta` is the precomputed static segment structure; pass it whenever the
-    call sits inside a compiled loop so no structural reductions recompute
-    per iteration (a traced fallback is derived here otherwise).
-    """
-    if meta is None:
-        meta = make_segment_meta(dst, num_segments)
-    if program.monoid in ("sum", "min", "max"):
-        if kernel_on:
-            from repro.kernels import ops as kops
-            E = dst.shape[0]
-            empty_b = records.tree_tile(empty, E)
-            msgs_m = records.tree_where(valid, msgs, empty_b)
-            inbox = jax.tree.map(
-                lambda x: kops.segment_combine(x, dst, num_segments,
-                                               monoid=program.monoid),
-                msgs_m)
-            if program.monoid in ("min", "max"):
-                empty_v = records.tree_tile(empty, num_segments)
-                inbox = records.tree_where(meta.has_edge, inbox, empty_v)
-            return inbox, _has_msg(valid, dst, num_segments)
-        return _segment_named(program, msgs, dst, valid, num_segments, empty,
-                              meta)
-    return _segment_general(program, msgs, dst, valid, num_segments, empty,
-                            meta)
-
-
-# ---------------------------------------------------------------------------
-# Fused message plane (Phase 3 + Phase 1 in one kernel pass)
-# ---------------------------------------------------------------------------
 
 def resolve_kernel_mode(kernel: str | bool | None) -> bool:
-    """Resolve the tri-state kernel knob to a concrete on/off.
-
-    "auto" picks the Pallas kernels on TPU and the XLA segment ops on CPU
-    (where the kernels would run in interpret mode — a correctness path,
-    not a fast path). Booleans are accepted as a legacy alias.
-    """
-    if kernel is None:
-        kernel = "auto"
-    if isinstance(kernel, bool):
-        return kernel
-    if kernel == "auto":
-        return jax.default_backend() == "tpu"
-    if kernel in ("on", "off"):
-        return kernel == "on"
-    raise ValueError(f"kernel must be 'auto'|'on'|'off', got {kernel!r}")
-
-
-def fused_applicable(program: VCProgram, vprops, eprops, num_edges: int,
-                     num_vertices: int) -> bool:
-    """Static check: can this program's message plane run fused?
-
-    Needs a named monoid and scalar record leaves (the framework's common
-    case); anything else falls back to the three-pass path. Delegates to
-    the kernel's own `fusable` predicate so the gate and the kernel's
-    schema validation can never drift apart.
-    """
-    from repro.kernels.fused_gather_emit import fusable
-    return fusable(program.emit_message, program.monoid, vprops, eprops,
-                   num_edges, num_vertices)
-
-
-def fused_pull_combine(program: VCProgram, gdev, vprops, active,
-                       empty: Record):
-    """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
-    and fold into per-vertex inboxes inside a single Pallas kernel — no
-    E-sized message materialization in HBM."""
-    from repro.kernels import ops as kops
-    inbox, has_msg = kops.gather_emit_combine(
-        program.emit_message, program.monoid, gdev["src"], gdev["dst"],
-        vprops, gdev["eprops"], active, gdev["num_vertices"])
-    # normalize no-message vertices to the user's exact empty record
-    empty_v = records.tree_tile(empty, gdev["num_vertices"])
-    return records.tree_where(has_msg, inbox, empty_v), has_msg
+    """Resolve the tri-state kernel knob to a concrete on/off (delegates
+    to :mod:`repro.core.message_plane`)."""
+    from . import message_plane
+    return message_plane.resolve_kernel_mode(kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -16,11 +16,26 @@ round-trip through HBM.
 Layout contract (the framework's canonical order):
   * `dst` is sorted ascending; each (vertex-block × edge-block) grid cell
     is skipped via `@pl.when` unless the block's dst range overlaps.
+    Padded edge slots of pre-padded layouts (distributed buckets) must
+    carry a sentinel dst >= num_segments so sortedness survives padding.
   * vertex-property leaves are [V] scalars-per-vertex (records are pytrees
     of scalars); message leaves are [E] after vmap. Callers with vector
     leaves fall back to the unfused path.
-  * padded edges carry the sentinel dst == V_pad, so they match no one-hot
-    column and can never contribute.
+  * `valid` (optional [E] mask) vetoes emissions of padded slots; `src_ids`
+    / `dst_ids` (optional [E]) are the endpoint ids handed to `emit_fn`
+    when they differ from the gather/combine indices (distributed buckets
+    emit with global ids but gather/combine with local ones).
+  * kernel-padded edges carry the sentinel dst == V_pad, so they match no
+    one-hot column and can never contribute.
+
+Two variants share the kernel body:
+  * resident (default): every vertex-property leaf is VMEM-resident [V].
+  * scalar-prefetch (`prefetch=(block_idx, window, block_e)`): a
+    `PrefetchScalarGridSpec` DMAs only one `window`-row src slab per edge
+    block — the slab index comes from a prefetched scalar table computed
+    host-side (`core/graph_device.py::compute_prefetch_windows`). This is
+    the ROADMAP's "DMA only the src rows an edge block needs" variant:
+    VMEM holds O(window) vertex rows instead of O(V).
 
 Combine: sum uses a one-hot matvec on the MXU; min/max use a 2-D masked
 select [BE, BV] + reduce (the payload per leaf is scalar, so no 3-D
@@ -52,14 +67,28 @@ def _ident_for(dtype, monoid: str):
 
 
 def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
-            idents, acc_dtypes, block_v, n_e, num_edges, block_e):
-    seg_ref, src_ref, active_ref = refs[0], refs[1], refs[2]
-    vp_refs = refs[3:3 + n_vp]
-    ep_refs = refs[3 + n_vp:3 + n_vp + n_ep]
-    out_refs = refs[3 + n_vp + n_ep:3 + n_vp + n_ep + n_msg]
-    hm_out = refs[3 + n_vp + n_ep + n_msg]
-    acc_refs = refs[4 + n_vp + n_ep + n_msg:4 + n_vp + n_ep + 2 * n_msg]
-    hm_acc = refs[4 + n_vp + n_ep + 2 * n_msg]
+            idents, acc_dtypes, block_v, n_e, num_edges, block_e,
+            has_valid, has_ids, window):
+    if window:
+        win_ref, refs = refs[0], refs[1:]
+    seg_ref, src_ref = refs[0], refs[1]
+    k = 2
+    if has_valid:
+        valid_ref = refs[k]
+        k += 1
+    if has_ids:
+        sid_ref, did_ref = refs[k], refs[k + 1]
+        k += 2
+    n_slab = 2 if window else 1  # window mode: (lo, hi) slab pair per leaf
+    act_refs = refs[k:k + n_slab]
+    k += n_slab
+    vp_refs = refs[k:k + n_slab * n_vp]
+    ep_refs = refs[k + n_slab * n_vp:k + n_slab * n_vp + n_ep]
+    k += n_slab * n_vp + n_ep
+    out_refs = refs[k:k + n_msg]
+    hm_out = refs[k + n_msg]
+    acc_refs = refs[k + n_msg + 1:k + 2 * n_msg + 1]
+    hm_acc = refs[k + 2 * n_msg + 1]
 
     iv = pl.program_id(0)
     ie = pl.program_id(1)
@@ -79,14 +108,35 @@ def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
         src = src_ref[...]  # [BE] int32 (pads = 0, masked via sentinel dst)
         be = seg.shape[0]
 
-        # gather src rows from the VMEM-resident vertex property leaves
-        sp_leaves = [jnp.take(r[...], src, axis=0) for r in vp_refs]
-        act = jnp.take(active_ref[...], src, axis=0) > 0  # [BE]
+        if window:
+            # gather from the DMA'd slab pair [q·W, (q+2)·W); rows outside
+            # it are pads by construction — clamp, then invalidate
+            base = win_ref[ie] * window
+            idx = src - base
+            in_win = (idx >= 0) & (idx < 2 * window)
+            idx_lo = jnp.clip(idx, 0, window - 1)
+            idx_hi = jnp.clip(idx - window, 0, window - 1)
+            in_lo = idx < window
+
+            def gather(pair):
+                lo = jnp.take(pair[0][...], idx_lo, axis=0)
+                hi = jnp.take(pair[1][...], idx_hi, axis=0)
+                return jnp.where(in_lo, lo, hi)
+
+            sp_leaves = [gather(vp_refs[2 * i:2 * i + 2])
+                         for i in range(n_vp)]
+            act = gather(act_refs) > 0  # [BE]
+        else:
+            in_win = None
+            sp_leaves = [jnp.take(r[...], src, axis=0) for r in vp_refs]
+            act = jnp.take(act_refs[0][...], src, axis=0) > 0  # [BE]
         ep_leaves = [r[...] for r in ep_refs]
 
         src_prop = jax.tree.unflatten(vp_def, sp_leaves)
         edge_prop = jax.tree.unflatten(ep_def, ep_leaves)
-        is_emit, msg = jax.vmap(emit_fn)(src, seg, src_prop, edge_prop)
+        sid = sid_ref[...] if has_ids else src
+        did = did_ref[...] if has_ids else seg
+        is_emit, msg = jax.vmap(emit_fn)(sid, did, src_prop, edge_prop)
         # padded rows run emit on zero-filled eprops and can produce
         # non-finite garbage; they must be invalid BEFORE the sum-path
         # `where(valid, m, 0)`, or inf*0 in the one-hot dot NaN-poisons
@@ -94,6 +144,10 @@ def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
         pos = (jax.lax.broadcasted_iota(jnp.int32, (be, 1), 0)[:, 0]
                + ie * block_e)
         valid = is_emit.astype(bool) & act & (pos < num_edges)  # [BE]
+        if has_valid:
+            valid &= valid_ref[...] > 0
+        if in_win is not None:
+            valid &= in_win
 
         seg_ids = jax.lax.broadcasted_iota(jnp.int32, (be, block_v), 1) + v_lo
         onehot = (seg[:, None] == seg_ids)  # [BE, BV]
@@ -152,6 +206,8 @@ def fusable(emit_fn, monoid: str, vprops, eprops, num_edges: int,
     into a trace-time ValueError there."""
     if monoid not in ("sum", "min", "max"):
         return False
+    if int(num_vertices) == 0:
+        return False
     try:
         emit_sds = _emit_schema(emit_fn, num_edges, vprops, eprops)
     except Exception:
@@ -160,13 +216,20 @@ def fusable(emit_fn, monoid: str, vprops, eprops, num_edges: int,
 
 
 def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
-                        active, num_vertices: int, *, block_v: int = 128,
-                        block_e: int = 512, interpret=None):
-    """Single-pass message plane over canonical (dst-sorted) edges.
+                        active, num_vertices: int, *, valid=None,
+                        src_ids=None, dst_ids=None, prefetch=None,
+                        block_v: int = 128, block_e: int = 512,
+                        interpret=None):
+    """Single-pass message plane over combine-ordered (dst-sorted) edges.
 
     emit_fn(src, dst, src_prop, edge_prop) -> (is_emit, msg) is the user's
     scalar Phase-3 function (traced into the kernel body — no host
     boundary). Returns (inbox record batch [V], has_msg [V] bool).
+
+    valid / src_ids / dst_ids: see the module docstring (pre-padded and
+    globally-addressed layouts). prefetch=(block_idx, window, table_be)
+    selects the scalar-prefetch variant; `block_e` is then forced to the
+    table's block size.
     """
     if monoid not in ("sum", "min", "max"):
         raise ValueError(f"fused kernel needs a named monoid, got {monoid!r}")
@@ -184,48 +247,105 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
     if not _schema_ok(emit_sds, E, V, vprops, eprops):
         raise ValueError("fused kernel needs scalar record leaves")
 
+    window = 0
+    if prefetch is not None:
+        win_idx, window, table_be = prefetch
+        window = int(window)
+        if window <= 0 or 2 * window >= _ceil_to(V, 8):
+            prefetch, window = None, 0  # no smaller than the resident set
+        else:
+            block_e = int(table_be)
+
     bv = min(block_v, _ceil_to(V, 8))
-    be = min(block_e, _ceil_to(E, 8))
-    E_pad = pl.cdiv(E, be) * be
+    be = min(block_e, _ceil_to(E, 8)) if not window else block_e
+    E_pad = max(pl.cdiv(E, be), 1) * be  # E == 0 still needs a flush pass
     V_pad = pl.cdiv(V, bv) * bv
 
     idents, acc_dtypes = zip(*(_ident_for(s.dtype, monoid) for s in msg_sds))
 
     pad_e = lambda a, fill: jnp.pad(a, (0, E_pad - a.shape[0]),
                                     constant_values=fill)
-    pad_v = lambda a, fill: jnp.pad(a, (0, V_pad - a.shape[0]),
-                                    constant_values=fill)
     seg_p = pad_e(dst.astype(jnp.int32), jnp.int32(V_pad))  # sentinel
     src_p = pad_e(src.astype(jnp.int32), 0)
-    act_p = pad_v(active.astype(jnp.int32), 0)
-    vp_p = [pad_v(l, 0) for l in vp_leaves]
     ep_p = [pad_e(l, 0) for l in ep_leaves]
 
-    grid = (V_pad // bv, E_pad // be)
+    n_e = E_pad // be
+    grid = (V_pad // bv, n_e)
     e_spec = pl.BlockSpec((be,), lambda iv, ie: (ie,))
-    full_v = pl.BlockSpec((V_pad,), lambda iv, ie: (0,))
     out_spec = pl.BlockSpec((bv,), lambda iv, ie: (iv,))
+    if window:
+        # vertex rows are windowed: each edge block DMAs the slab PAIR
+        # (win[ie], win[ie]+1) of `window` rows each; pad vertex leaves
+        # with one extra slab so the +1 index map is always in bounds
+        VW_pad = (max(pl.cdiv(V, window), 1) + 1) * window
+        pad_v = lambda a, fill: jnp.pad(a, (0, VW_pad - a.shape[0]),
+                                        constant_values=fill)
+        v_specs = [pl.BlockSpec((window,), lambda iv, ie, win: (win[ie],)),
+                   pl.BlockSpec((window,),
+                                lambda iv, ie, win: (win[ie] + 1,))]
+        e_spec = pl.BlockSpec((be,), lambda iv, ie, win: (ie,))
+        out_spec = pl.BlockSpec((bv,), lambda iv, ie, win: (iv,))
+        win_p = jnp.pad(win_idx.astype(jnp.int32),
+                        (0, n_e - int(win_idx.shape[0])))
+    else:
+        pad_v = lambda a, fill: jnp.pad(a, (0, V_pad - a.shape[0]),
+                                        constant_values=fill)
+        v_specs = [pl.BlockSpec((V_pad,), lambda iv, ie: (0,))]
 
-    outs = pl.pallas_call(
-        functools.partial(
-            _kernel, emit_fn=emit_fn, monoid=monoid, n_vp=len(vp_p),
-            n_ep=len(ep_p), n_msg=len(msg_sds), vp_def=vp_def, ep_def=ep_def,
-            idents=idents, acc_dtypes=acc_dtypes, block_v=bv, n_e=grid[1],
-            num_edges=E, block_e=be),
-        grid=grid,
-        in_specs=[e_spec, e_spec, full_v] + [full_v] * len(vp_p)
-                 + [e_spec] * len(ep_p),
-        out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
-        out_shape=tuple([jax.ShapeDtypeStruct((V_pad,), s.dtype)
-                         for s in msg_sds]
-                        + [jax.ShapeDtypeStruct((V_pad,), jnp.int32)]),
-        scratch_shapes=[pltpu.VMEM((1, bv), adt) for adt in acc_dtypes]
-                       + [pltpu.VMEM((1, bv), jnp.int32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=bool(interpret),
-        name=f"gather_emit_{monoid}",
-    )(seg_p, src_p, act_p, *vp_p, *ep_p)
+    act_p = pad_v(active.astype(jnp.int32), 0)
+    vp_p = [pad_v(l, 0) for l in vp_leaves]
+
+    operands = [seg_p, src_p]
+    in_specs = [e_spec, e_spec]
+    if valid is not None:
+        operands.append(pad_e(valid.astype(jnp.int32), 0))
+        in_specs.append(e_spec)
+    if src_ids is not None or dst_ids is not None:
+        operands += [pad_e((src if src_ids is None else src_ids)
+                           .astype(jnp.int32), 0),
+                     pad_e((dst if dst_ids is None else dst_ids)
+                           .astype(jnp.int32), 0)]
+        in_specs += [e_spec, e_spec]
+    # window mode feeds every vertex-level operand once per slab spec
+    operands += [act_p] * len(v_specs)
+    in_specs += v_specs
+    for l in vp_p:
+        operands += [l] * len(v_specs)
+        in_specs += v_specs
+    operands += ep_p
+    in_specs += [e_spec] * len(ep_p)
+
+    body = functools.partial(
+        _kernel, emit_fn=emit_fn, monoid=monoid, n_vp=len(vp_p),
+        n_ep=len(ep_p), n_msg=len(msg_sds), vp_def=vp_def, ep_def=ep_def,
+        idents=idents, acc_dtypes=acc_dtypes, block_v=bv, n_e=n_e,
+        num_edges=E, block_e=be, has_valid=valid is not None,
+        has_ids=src_ids is not None or dst_ids is not None, window=window)
+    out_shape = tuple([jax.ShapeDtypeStruct((V_pad,), s.dtype)
+                       for s in msg_sds]
+                      + [jax.ShapeDtypeStruct((V_pad,), jnp.int32)])
+    scratch = ([pltpu.VMEM((1, bv), adt) for adt in acc_dtypes]
+               + [pltpu.VMEM((1, bv), jnp.int32)])
+    params = _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+
+    if window:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
+            scratch_shapes=scratch)
+        outs = pl.pallas_call(
+            body, grid_spec=grid_spec, out_shape=out_shape,
+            compiler_params=params, interpret=bool(interpret),
+            name=f"gather_emit_prefetch_{monoid}",
+        )(win_p, *operands)
+    else:
+        outs = pl.pallas_call(
+            body, grid=grid, in_specs=in_specs,
+            out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
+            out_shape=out_shape, scratch_shapes=scratch,
+            compiler_params=params, interpret=bool(interpret),
+            name=f"gather_emit_{monoid}",
+        )(*operands)
 
     msg_out, hm = outs[:-1], outs[-1]
     inbox = jax.tree.unflatten(jax.tree.structure(emit_sds[1]),

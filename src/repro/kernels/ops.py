@@ -34,15 +34,18 @@ def segment_combine(vals, seg_ids, num_segments: int, monoid: str = "sum",
 
 
 def gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops, active,
-                        num_vertices: int, interpret=None, **block_kw):
+                        num_vertices: int, interpret=None, **kw):
     """Fused single-pass gather(src props) -> emit -> segment-combine.
 
     The one-kernel form of the pull-mode message plane; see
-    fused_gather_emit.py for the layout contract."""
+    fused_gather_emit.py for the layout contract. Optional kw: `valid`
+    (pre-padded layouts), `src_ids`/`dst_ids` (global emit ids),
+    `prefetch=(block_idx, window, block_e)` (scalar-prefetch variant),
+    plus block sizes."""
     return _gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops,
                                 active, num_vertices,
                                 interpret=_auto_interpret(interpret),
-                                **block_kw)
+                                **kw)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int | None = None,

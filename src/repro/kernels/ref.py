@@ -28,13 +28,17 @@ def segment_combine_ref(vals, seg_ids, num_segments: int, monoid: str = "sum"):
 
 
 def gather_emit_combine_ref(emit_fn, monoid, src, dst, vprops, eprops,
-                            active, num_vertices: int):
+                            active, num_vertices: int, valid=None,
+                            src_ids=None, dst_ids=None):
     """Three-pass oracle for the fused gather–emit–combine kernel:
     gather src props [E-pass], vmap emit [E-pass], segment-combine
     [E-pass]. Semantics-identical; materializes every intermediate."""
     src_prop = jax.tree.map(lambda a: jnp.take(a, src, axis=0), vprops)
-    is_emit, msgs = jax.vmap(emit_fn)(src, dst, src_prop, eprops)
-    valid = is_emit.astype(bool) & jnp.take(active, src, axis=0)
+    is_emit, msgs = jax.vmap(emit_fn)(
+        src if src_ids is None else src_ids,
+        dst if dst_ids is None else dst_ids, src_prop, eprops)
+    emit_ok = is_emit.astype(bool) & jnp.take(active, src, axis=0)
+    valid = emit_ok if valid is None else emit_ok & valid.astype(bool)
     has_msg = jax.ops.segment_max(valid.astype(jnp.int32), dst,
                                   num_segments=num_vertices,
                                   indices_are_sorted=True) > 0

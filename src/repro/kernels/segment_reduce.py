@@ -144,7 +144,7 @@ def segment_combine_kernel(vals, seg_ids, num_segments: int,
         ident = _IDENT[monoid]
         acc_dtype = jnp.float32
 
-    E_pad = pl.cdiv(E, be) * be
+    E_pad = max(pl.cdiv(E, be), 1) * be  # E == 0 still needs a flush pass
     V_pad = pl.cdiv(num_segments, bv) * bv
     D_pad = pl.cdiv(D, bd) * bd
 

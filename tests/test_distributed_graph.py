@@ -15,14 +15,39 @@ from repro.core.engines.distributed import (build_sharded_graph,
 from repro.core.operators import PageRankProgram, SSSPProgram
 
 
+@pytest.mark.parametrize("kernel", ["off", "on"])
 @pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
-def test_distributed_matches_local_1dev(small_uniform_graph, schedule):
+def test_distributed_matches_local_1dev(small_uniform_graph, schedule,
+                                        kernel):
+    """kernel-on/off × schedule equivalence matrix: every distributed
+    schedule — with the per-bucket message plane running fused
+    (kernel='on' routes each bucket through the fused Pallas pass) or
+    unfused — must match the single-device engine bit-for-bit-ish."""
     g = small_uniform_graph
     u = repro.UniGPS()
-    ref, _ = u.pagerank(g, num_iters=12, engine="pushpull")
+    ref, _ = u.pagerank(g, num_iters=12, engine="pushpull", kernel="off")
     vp, info = run_vcprog_distributed(PageRankProgram(g.num_vertices, 12),
-                                      g, max_iter=12, schedule=schedule)
+                                      g, max_iter=12, schedule=schedule,
+                                      kernel=kernel)
+    assert info["kernel_on"] == (kernel == "on")
     np.testing.assert_allclose(vp["rank"], ref, rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("kernel", ["off", "on"])
+@pytest.mark.parametrize("schedule", ["allgather", "push"])
+def test_distributed_sssp_kernel_schedule_matrix(lognormal_graph, schedule,
+                                                 kernel):
+    """Min-monoid (SSSP) through the non-default schedules with the
+    unified plane's kernel knob: results must match the single-device
+    reference exactly."""
+    g = lognormal_graph
+    u = repro.UniGPS()
+    ref, _ = u.sssp(g, root=0, engine="pregel", kernel="off")
+    vp, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=100,
+                                   schedule=schedule, kernel=kernel)
+    d = np.where(vp["distance"] >= 1.7e38, np.inf, vp["distance"])
+    np.testing.assert_array_equal(np.nan_to_num(d, posinf=1e30),
+                                  np.nan_to_num(ref, posinf=1e30))
 
 
 def test_bucket_meta_fallback_matches_precomputed(small_uniform_graph):
@@ -107,6 +132,10 @@ for sched in ("allgather", "ring", "push"):
         PageRankProgram(g.num_vertices, 10), g, max_iter=10, schedule=sched)
     out[f"pr_err_{sched}"] = float(np.abs(vp["rank"] - ref).max())
     assert info["num_parts"] == 8
+vp, info = run_vcprog_distributed(
+    PageRankProgram(g.num_vertices, 10), g, max_iter=10, schedule="ring",
+    kernel="on")
+out["pr_err_ring_kernel"] = float(np.abs(vp["rank"] - ref).max())
 dref, _ = u.sssp(g, root=0, engine="pregel")
 vp, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=100,
                                schedule="ring")
@@ -129,4 +158,5 @@ def test_distributed_8dev_subprocess():
     out = json.loads(line[len("RESULT:"):])
     assert out["pr_err_allgather"] < 1e-6
     assert out["pr_err_ring"] < 1e-6
+    assert out["pr_err_ring_kernel"] < 1e-6
     assert out["sssp_match"]

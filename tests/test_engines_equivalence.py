@@ -1,6 +1,7 @@
 """'Write once, run anywhere' (paper claim C5): one VCProgram, every engine,
 bit-identical vertex properties. This is the paper's core cross-platform
 claim made into an executable test."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -94,6 +95,36 @@ def test_kernel_path_equivalence(small_uniform_graph):
     uk = repro.UniGPS(use_kernel=True)
     r1, _ = uk.pagerank(g, num_iters=10, engine="pushpull")
     np.testing.assert_allclose(r0, r1, rtol=1e-6, atol=1e-9)
+
+
+def test_per_call_kernel_override(small_uniform_graph):
+    """Operator methods must honor per-call kernel=/use_kernel= overrides
+    of the session default (they used to be silently ignored)."""
+    g = small_uniform_graph
+    u_off = repro.UniGPS(kernel="off")
+    base, _ = u_off.pagerank(g, num_iters=8)
+    for op, args in [("pagerank", dict(num_iters=8)),
+                     ("sssp", dict(root=0)),
+                     ("connected_components", {}),
+                     ("bfs", dict(root=0)),
+                     ("degrees", {})]:
+        overridden = getattr(u_off, op)(g, **args, kernel="on")
+        session_on = getattr(repro.UniGPS(kernel="on"), op)(g, **args)
+        ov = np.concatenate([np.ravel(np.asarray(x, np.float64))
+                             for x in jax.tree.leaves(overridden[0])])
+        so = np.concatenate([np.ravel(np.asarray(x, np.float64))
+                             for x in jax.tree.leaves(session_on[0])])
+        np.testing.assert_allclose(np.nan_to_num(ov, posinf=1e30),
+                                   np.nan_to_num(so, posinf=1e30),
+                                   rtol=1e-6, atol=1e-9,
+                                   err_msg=f"per-call override lost: {op}")
+    # legacy boolean alias per call
+    r, _ = u_off.pagerank(g, num_iters=8, use_kernel=True)
+    on, _ = repro.UniGPS(kernel="on").pagerank(g, num_iters=8)
+    np.testing.assert_allclose(r, on, rtol=1e-6, atol=1e-9)
+    # unknown keywords must fail loudly, not be swallowed
+    with pytest.raises(TypeError):
+        u_off.pagerank(g, num_iters=8, kernle="on")
 
 
 KERNEL_ENGINES = ["pushpull", "pregel", "gas"]

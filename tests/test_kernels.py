@@ -170,6 +170,65 @@ def test_fused_multifield_and_integer_payloads(monoid):
     np.testing.assert_array_equal(np.asarray(hm), np.asarray(rhm))
 
 
+@pytest.mark.parametrize("monoid", ["sum", "min"])
+def test_fused_valid_mask_and_ids(monoid):
+    """Pre-padded layouts: the `valid` mask must veto padded slots and
+    `src_ids`/`dst_ids` must reach emit instead of the gather indices."""
+    E, V = 300, 50
+    src, dst, active = _random_graph_arrays(E, V, seed=7)
+    rng = np.random.default_rng(7)
+    vprops = {"x": jnp.asarray(rng.random(V), jnp.float32)}
+    valid = jnp.asarray(rng.random(E) < 0.6)
+    sid = jnp.asarray(np.asarray(src) + 1000)
+    did = jnp.asarray(np.asarray(dst) + 2000)
+
+    def emit(s, d, sp, ep):
+        # reads the ids: wrong ids change the result
+        return jnp.bool_(True), {"v": sp["x"] + (s - d).astype(jnp.float32)}
+
+    out, hm = ops.gather_emit_combine(emit, monoid, src, dst, vprops, {},
+                                      active, V, valid=valid, src_ids=sid,
+                                      dst_ids=did)
+    refo, rhm = ops.gather_emit_combine_ref(emit, monoid, src, dst, vprops,
+                                            {}, active, V, valid=valid,
+                                            src_ids=sid, dst_ids=did)
+    np.testing.assert_allclose(np.asarray(out["v"]), np.asarray(refo["v"]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(rhm))
+
+
+@pytest.mark.parametrize("monoid", ["sum", "min", "max"])
+def test_fused_prefetch_variant(monoid):
+    """The scalar-prefetch (PrefetchScalarGridSpec) variant — two
+    `window`-row src slabs DMA'd per edge block instead of the whole [V]
+    resident set — must match the oracle exactly."""
+    from repro.core.graph_device import compute_prefetch_windows
+
+    rng = np.random.default_rng(5)
+    E, V = 4096, 2048
+    dst = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    src = np.clip(dst + rng.integers(-40, 41, E), 0, V - 1).astype(np.int32)
+    blocks, window = compute_prefetch_windows(src, V)
+    assert 0 < 2 * window < V, "workload must exercise real windows"
+    vprops = {"x": jnp.asarray(rng.random(V), jnp.float32),
+              "deg": jnp.asarray(rng.integers(1, 9, V), jnp.float32)}
+    eprops = {"w": jnp.asarray(rng.random(E), jnp.float32)}
+    active = jnp.asarray(rng.random(V) < 0.8)
+
+    def emit(s, d, sp, ep):
+        return sp["x"] < 0.9, {"v": sp["x"] / sp["deg"] + ep["w"]}
+
+    out, hm = ops.gather_emit_combine(
+        emit, monoid, jnp.asarray(src), jnp.asarray(dst), vprops, eprops,
+        active, V, prefetch=(jnp.asarray(blocks), window, 512))
+    refo, rhm = ops.gather_emit_combine_ref(
+        emit, monoid, jnp.asarray(src), jnp.asarray(dst), vprops, eprops,
+        active, V)
+    np.testing.assert_allclose(np.asarray(out["v"]), np.asarray(refo["v"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(rhm))
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

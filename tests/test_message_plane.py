@@ -1,0 +1,234 @@
+"""Unit tests for the unified message plane (core/message_plane.py) and
+the typed DeviceGraph/EdgeLayout pytrees it dispatches on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import io as gio
+from repro.core import message_plane, records
+from repro.core.graph_device import (EdgeLayout, bucket_layout,
+                                     build_device_graph,
+                                     compute_prefetch_windows)
+from repro.core.operators import CCProgram, PageRankProgram, SSSPProgram
+from repro.core.vcprog import make_segment_meta
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gio.uniform_graph(90, 700, seed=4, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def dgraph(graph):
+    return build_device_graph(graph)
+
+
+def _setup(program, dgraph):
+    empty = jax.tree.map(jnp.asarray, program.empty_message())
+    vids = jnp.arange(dgraph.num_vertices, dtype=jnp.int32)
+    vprops = jax.vmap(program.init_vertex)(vids, dgraph.out_degree,
+                                           dgraph.vprops_in)
+    active = jnp.ones((dgraph.num_vertices,), bool)
+    return empty, vprops, active
+
+
+def _tree_close(a, b, **kw):
+    assert records.tree_allclose(a, b, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pytree plumbing
+# ---------------------------------------------------------------------------
+
+def test_device_graph_is_a_jit_transparent_pytree(dgraph):
+    leaves, treedef = jax.tree.flatten(dgraph)
+    assert all(hasattr(l, "shape") for l in leaves)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.num_vertices == dgraph.num_vertices  # static survives
+
+    @jax.jit
+    def through(g):
+        return g.canonical.dst.sum(), g.src_sorted.perm.shape[0]
+
+    s, n = through(dgraph)
+    assert int(n) == dgraph.num_edges
+
+
+def test_edge_layout_links(dgraph):
+    can, ss = dgraph.canonical, dgraph.src_sorted
+    assert can.perm is None and can.combine_view is can
+    assert ss.perm is not None and ss.combine_view is ss.canonical
+    assert ss.canonical.num_segments == can.num_segments
+    # the permutation really maps canonical order -> src-sorted positions
+    np.testing.assert_array_equal(np.asarray(ss.src)[np.asarray(ss.perm)],
+                                  np.asarray(can.src))
+
+
+# ---------------------------------------------------------------------------
+# dispatch equivalence: every path computes the same inbox
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prog", [PageRankProgram(90, 5), SSSPProgram(0),
+                                  CCProgram()])
+def test_all_paths_agree_on_canonical(prog, dgraph):
+    empty, vprops, active = _setup(prog, dgraph)
+    base, base_hm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=False)
+    for kernel_on, mode in [(True, "auto"), (True, "unfused"),
+                            (False, "unfused"), (True, "fused")]:
+        inbox, hm = message_plane.emit_and_combine(
+            prog, dgraph.canonical, vprops, active, empty,
+            kernel_on=kernel_on, mode=mode)
+        _tree_close(inbox, base, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(hm), np.asarray(base_hm))
+
+
+@pytest.mark.parametrize("kernel_on", [False, True])
+def test_src_sorted_layout_matches_canonical(kernel_on, dgraph):
+    """The permute-then-combine path (pregel's view) and the canonical
+    path must produce identical inboxes — fused or not."""
+    prog = PageRankProgram(90, 5)
+    empty, vprops, active = _setup(prog, dgraph)
+    a, ahm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=kernel_on)
+    b, bhm = message_plane.emit_and_combine(
+        prog, dgraph.src_sorted, vprops, active, empty, kernel_on=kernel_on)
+    _tree_close(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ahm), np.asarray(bhm))
+
+
+def test_mode_fused_requires_named_monoid(dgraph):
+    class General(repro.VCProgram):
+        monoid = "general"
+
+        def empty_message(self):
+            return {"x": jnp.float32(0.0)}
+
+        def emit_message(self, s, d, sp, ep):
+            return jnp.bool_(True), {"x": jnp.float32(1.0)}
+
+        def merge_message(self, a, b):
+            return {"x": a["x"] + b["x"]}
+
+    prog = General()
+    empty = jax.tree.map(jnp.asarray, prog.empty_message())
+    vprops = {"y": jnp.zeros((90,), jnp.float32)}
+    with pytest.raises(ValueError, match="fused"):
+        message_plane.emit_and_combine(prog, dgraph.canonical, vprops,
+                                       jnp.ones((90,), bool), empty,
+                                       mode="fused")
+
+
+# ---------------------------------------------------------------------------
+# padded bucket layouts (the distributed view)
+# ---------------------------------------------------------------------------
+
+def test_bucket_layout_with_padding_matches_dense(dgraph):
+    """A hand-padded bucket (sentinel dst, valid mask) must combine to the
+    same inbox as the unpadded canonical layout, on every dispatch path."""
+    prog = PageRankProgram(90, 5)
+    empty, vprops, active = _setup(prog, dgraph)
+    can = dgraph.canonical
+    E, V = dgraph.num_edges, dgraph.num_vertices
+    pad = 37
+    padded = lambda a, fill: jnp.concatenate(
+        [a, jnp.full((pad,) + a.shape[1:], fill, a.dtype)])
+    mask = padded(jnp.ones((E,), bool), False)
+    dstp = padded(can.dst, jnp.int32(V))  # ascending through the sentinel
+    meta = make_segment_meta(dstp, V, valid=mask)
+    bk = bucket_layout(
+        src_local=padded(can.src, 0), src_global=padded(can.src, 0),
+        dst_local=dstp, dst_global=dstp,
+        eprops=jax.tree.map(lambda a: padded(a, 0), can.eprops),
+        mask=mask, seg_meta=meta, v_per_part=V)
+    base, bhm = message_plane.emit_and_combine(prog, can, vprops, active,
+                                               empty, kernel_on=False)
+    for kernel_on in (False, True):
+        inbox, hm = message_plane.emit_and_combine(
+            prog, bk, vprops, active, empty, kernel_on=kernel_on)
+        _tree_close(inbox, base, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+
+
+class _EmitSrcId(repro.VCProgram):
+    """Emits the (global) src id it is handed — detects any engine that
+    feeds emit_message local indices instead of global ids."""
+
+    monoid = "min"
+
+    def empty_message(self):
+        return {"m": jnp.int32(2**31 - 1)}
+
+    def merge_message(self, a, b):
+        return {"m": jnp.minimum(a["m"], b["m"])}
+
+    def emit_message(self, s, d, sp, ep):
+        return jnp.bool_(True), {"m": s.astype(jnp.int32)}
+
+
+def test_bucket_layout_global_emit_ids():
+    """emit_message must see the GLOBAL endpoint ids even though gather
+    and combine run on local indices."""
+    off = 40
+    src_g = jnp.asarray([41, 43, 43], jnp.int32)
+    dst_g = jnp.asarray([40, 40, 42], jnp.int32)
+    prog = _EmitSrcId()
+    empty = jax.tree.map(jnp.asarray, prog.empty_message())
+    vprops = {"label": jnp.asarray([41, 43, 99, 43], jnp.int32)}
+
+    bk = bucket_layout(
+        src_local=src_g - off, src_global=src_g,
+        dst_local=dst_g - off, dst_global=dst_g,
+        eprops={}, mask=jnp.ones((3,), bool),
+        seg_meta=make_segment_meta(dst_g - off, 4), v_per_part=4)
+    for kernel_on in (False, True):
+        inbox, hm = message_plane.emit_and_combine(
+            prog, bk, vprops, jnp.ones((4,), bool), empty,
+            kernel_on=kernel_on)
+        np.testing.assert_array_equal(np.asarray(inbox["m"]),
+                                      [41, 2**31 - 1, 43, 2**31 - 1])
+        np.testing.assert_array_equal(np.asarray(hm),
+                                      [True, False, True, False])
+
+
+# ---------------------------------------------------------------------------
+# scalar-prefetch variant
+# ---------------------------------------------------------------------------
+
+def test_prefetch_metadata_on_device_graph():
+    """A big locality-friendly graph gets a window strictly smaller than
+    the resident set, and the plane's fused pass with that metadata
+    matches the unfused one."""
+    rng = np.random.default_rng(3)
+    V, E = 4096, 20000
+    # banded graph: src within ±64 of dst, so the CANONICAL (dst-sorted)
+    # order has genuine src locality per edge block
+    dst = rng.integers(0, V, E).astype(np.int32)
+    src = np.clip(dst + rng.integers(-64, 65, E), 0, V - 1).astype(np.int32)
+    g = repro.core.graph.from_edges(src, dst, num_vertices=V)
+    dg = build_device_graph(g)
+    assert 0 < dg.canonical.prefetch_window
+    assert 2 * dg.canonical.prefetch_window < V
+
+    prog = PageRankProgram(V, 3)
+    empty, vprops, active = _setup(prog, dg)
+    base, bhm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=False)
+    fused, fhm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=True)
+    _tree_close(fused, base, rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fhm), np.asarray(bhm))
+
+
+def test_compute_prefetch_windows_degenerate():
+    blocks, w = compute_prefetch_windows(np.zeros((0,), np.int32), 10)
+    assert w == 0
+    # random src over a small V: slab pair >= resident set -> no metadata
+    rng = np.random.default_rng(0)
+    blocks, w = compute_prefetch_windows(
+        rng.integers(0, 64, 2048).astype(np.int32), 64)
+    assert w == 0
