@@ -29,19 +29,24 @@ DEFAULT_ENGINE = "pushpull"
 
 
 class UniGPS:
-    """Session handle; holds defaults (engine, kernel mode).
+    """Session handle; holds defaults (engine, kernel mode, reorder).
 
     kernel: "auto" picks the fused Pallas message-plane kernels on TPU and
     the XLA segment ops on CPU; "on"/"off" force a path. `use_kernel` is
     the legacy boolean alias and wins when given.
+
+    reorder: "none"|"rcm"|"degree"|"auto" — host-side vertex reordering
+    for gather locality (core/reorder.py). Semantically invisible: results
+    are un-permuted, vertex ids never change.
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
-                 use_kernel: bool | None = None):
+                 use_kernel: bool | None = None, reorder: str = "none"):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
             self.kernel = "off"
+        self.reorder = reorder
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -67,12 +72,14 @@ class UniGPS:
         gio.save_vertex_table(vprops, path)
 
     def _kernel_kw(self, kw: dict) -> dict:
-        """Uniform per-call kernel override handling: every operator (and
-        `vcprog`) accepts the same `kernel=`/`use_kernel=` keywords that
-        `run_vcprog` does, defaulting to the session-level knob. Unknown
-        keywords are rejected here rather than silently dropped."""
+        """Uniform per-call override handling: every operator (and
+        `vcprog`) accepts the same `kernel=`/`use_kernel=`/`reorder=`
+        keywords that `run_vcprog` does, defaulting to the session-level
+        knobs. Unknown keywords are rejected here rather than silently
+        dropped."""
         out = {"kernel": kw.pop("kernel", self.kernel),
-               "use_kernel": kw.pop("use_kernel", None)}
+               "use_kernel": kw.pop("use_kernel", None),
+               "reorder": kw.pop("reorder", self.reorder)}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

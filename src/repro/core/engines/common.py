@@ -18,9 +18,12 @@ from ..graph import PropertyGraph
 from ..graph_device import DeviceGraph, build_device_graph
 
 
-def prepare_device_graph(g: PropertyGraph) -> DeviceGraph:
-    """Host→device conversion; see graph_device.build_device_graph."""
-    return build_device_graph(g)
+def prepare_device_graph(g: PropertyGraph,
+                         reorder: str = "none") -> DeviceGraph:
+    """Host→device conversion; see graph_device.build_device_graph.
+    `reorder` relabels the vertex space for locality (core/reorder.py);
+    the driver below un-permutes results, so it is invisible to users."""
+    return build_device_graph(g, reorder=reorder)
 
 
 def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
@@ -28,8 +31,10 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
     V = graph.num_vertices
     empty = jax.tree.map(jnp.asarray, program.empty_message())
 
+    # reordered graphs: init_vertex sees ORIGINAL ids (vertex_perm)
     vprops0 = vcprog.init_vertices(program, graph.vprops_in,
-                                   graph.out_degree, V)
+                                   graph.out_degree, V,
+                                   vids=graph.vertex_perm)
     inbox0 = records.tree_tile(empty, V)
     active0 = jnp.ones((V,), bool)
     has_msg0 = jnp.zeros((V,), bool)
@@ -52,6 +57,9 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
     state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
                                    has_msg0, extra0), max_iter)
     final_it, vprops, active, _, _, _ = state
+    if graph.inv_perm is not None:
+        # un-permute: row old_id of the result lives at new_id=inv_perm[old]
+        vprops = records.tree_gather(vprops, graph.inv_perm)
     return vprops, final_it - 1, jnp.sum(active)
 
 
@@ -94,7 +102,7 @@ class _ProgramKey:
 
 def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
-               use_kernel: bool | None = None,
+               use_kernel: bool | None = None, reorder: str = "none",
                gdev: DeviceGraph | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
@@ -102,15 +110,22 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     and the XLA segment ops on CPU; "on"/"off" force a path. `use_kernel`
     is the legacy boolean alias and wins when given.
 
+    reorder: "none" (default) | "rcm" | "degree" | "auto" — host-side
+    vertex reordering for gather locality (core/reorder.py). Results are
+    un-permuted before returning, so any strategy is semantically
+    invisible; `gdev`, when given, wins over `reorder` (it was built with
+    its own strategy).
+
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
     """
     if engine == "distributed":
         from . import distributed
         return distributed.run_vcprog_distributed(
-            program, graph, max_iter, kernel=kernel, use_kernel=use_kernel)
+            program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
+            reorder=reorder)
     if gdev is None:
-        gdev = prepare_device_graph(graph)
+        gdev = prepare_device_graph(graph, reorder=reorder)
     kernel_on = message_plane.resolve_kernel_mode(
         use_kernel if use_kernel is not None else kernel)
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),

@@ -61,7 +61,22 @@ def _bucket_segment_meta(edge_dst_local, edge_mask, v_pp: int):
     return last.reshape(shape).astype(np.int32), has.reshape(shape)
 
 
-def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
+def build_sharded_graph(g: PropertyGraph, num_parts: int,
+                        reorder: str = "none") -> Dict[str, Any]:
+    """Partition + bucket a PropertyGraph for `num_parts` devices.
+
+    `reorder` relabels the vertex space host-side BEFORE partitioning
+    (core/reorder.py) — buckets, their segment metadata, and the
+    contiguous part ranges are all built from the reordered graph. The
+    ORIGINAL endpoint ids ride `edge_{src,dst}_uid` (what emit_message
+    sees) and `vertex_ids` (what init_vertex sees); `vertex_perm` /
+    `inv_perm` let the caller un-permute results.
+    """
+    perm = inv = None
+    if reorder not in (None, "none"):
+        from ..reorder import apply_reorder
+        g, perm, inv = apply_reorder(g, reorder)
+
     part = partition_graph(g, num_parts)
     Pn, v_pp = part.num_parts, part.v_per_part
     V_pad = Pn * v_pp
@@ -85,6 +100,20 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
     bucket_last, bucket_has = _bucket_segment_meta(dst_local,
                                                    part.edge_mask, v_pp)
 
+    dst_global = (dst_local + part.v_start[:, None, None]).astype(np.int32)
+    # ORIGINAL (user-visible) endpoint ids for emit_message. perm_pad maps
+    # the padded id range identically (sentinel dst_global can reach V_pad)
+    if perm is not None:
+        perm_pad = np.arange(V_pad + 1, dtype=np.int64)
+        perm_pad[:g.num_vertices] = perm
+        src_uid = perm_pad[part.edge_src].astype(np.int32)
+        dst_uid = perm_pad[dst_global].astype(np.int32)
+        vertex_ids = perm_pad[:V_pad].astype(np.int32)
+    else:
+        src_uid = part.edge_src.astype(np.int32)
+        dst_uid = dst_global
+        vertex_ids = np.arange(V_pad, dtype=np.int32)
+
     # The [P(dst part), B(src-part bucket), L] layout transposes into the
     # push engine's [P(src part), B(dst-part bucket), L] view for free —
     # within-bucket dst order is preserved (segment ops stay valid).
@@ -92,12 +121,16 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int) -> Dict[str, Any]:
         "num_parts": Pn,
         "v_per_part": v_pp,
         "num_vertices": g.num_vertices,
+        "vertex_perm": perm,
+        "inv_perm": inv,
+        "vertex_ids": vertex_ids.reshape(Pn, v_pp),
         # [P, B=P, L] edge structure: dst part -> (src-owner bucket, slot)
         "edge_src_local": src_local.astype(np.int32),
         "edge_dst_local": dst_local.astype(np.int32),
         "edge_src_global": part.edge_src.astype(np.int32),
-        "edge_dst_global": (dst_local
-                            + part.v_start[:, None, None]).astype(np.int32),
+        "edge_dst_global": dst_global,
+        "edge_src_uid": src_uid,
+        "edge_dst_uid": dst_uid,
         "edge_mask": part.edge_mask,
         # [P, B, v_pp] static segment structure of each bucket's dst runs
         "bucket_last_edge": bucket_last,
@@ -173,11 +206,16 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 meta = vcprog.make_segment_meta(
                     edges["edge_dst_local"][b], v_pp,
                     valid=edges["edge_mask"][b])
+            # emit ids: the ORIGINAL vertex ids when the graph was
+            # reordered ("_uid"); the new-id globals otherwise (compat
+            # fallback for hand-built edges dicts)
+            src_ids = edges.get("edge_src_uid", edges["edge_src_global"])
+            dst_ids = edges.get("edge_dst_uid", edges["edge_dst_global"])
             return bucket_layout(
                 src_local=edges["edge_src_local"][b],
-                src_global=edges["edge_src_global"][b],
+                src_global=src_ids[b],
                 dst_local=edges["edge_dst_local"][b],
-                dst_global=edges["edge_dst_global"][b],
+                dst_global=dst_ids[b],
                 eprops=jax.tree.map(lambda a: a[b], edges["eprops"]),
                 mask=edges["edge_mask"][b],
                 seg_meta=meta, v_per_part=v_pp)
@@ -313,14 +351,13 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
     vspec = P(AXIS)
     espec = P(AXIS)
 
-    def local_loop(vprops, active, out_degree, valid, edges):
+    def local_loop(vprops, active, out_degree, valid, vids, edges):
         # shard_map slices keep a size-1 leading (part) dim; drop it locally
         sq = lambda t: jax.tree.map(lambda a: a[0], t)
-        vprops, active, out_degree, valid, edges = map(
-            sq, (vprops, active, out_degree, valid, edges))
+        vprops, active, out_degree, valid, vids, edges = map(
+            sq, (vprops, active, out_degree, valid, vids, edges))
         empty = jax.tree.map(jnp.asarray, program.empty_message())
-        v_start = jax.lax.axis_index(AXIS).astype(jnp.int32) * v_pp
-        vids = v_start + jnp.arange(v_pp, dtype=jnp.int32)
+        # vids are precomputed host-side: the ORIGINAL ids under reordering
         vprops = jax.vmap(program.init_vertex)(vids, out_degree, vprops)
         inbox = records.tree_tile(empty, v_pp)
         has_msg = jnp.zeros((v_pp,), bool)
@@ -347,7 +384,7 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
     from repro.distributed.sharding import shard_map
     smapped = shard_map(
         local_loop, mesh=mesh,
-        in_specs=(vspec, vspec, vspec, vspec, espec),
+        in_specs=(vspec, vspec, vspec, vspec, vspec, espec),
         out_specs=(vspec, vspec),
         check_vma=False)
     return jax.jit(smapped)
@@ -362,7 +399,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            num_parts: Optional[int] = None,
                            schedule: str = "ring",
                            kernel: str | bool = "auto",
-                           use_kernel: bool | None = None):
+                           use_kernel: bool | None = None,
+                           reorder: str = "none"):
     if mesh is None:
         dev = np.asarray(jax.devices())
         mesh = Mesh(dev.reshape(-1), (AXIS,))
@@ -371,12 +409,13 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     kernel_on = message_plane.resolve_kernel_mode(
         use_kernel if use_kernel is not None else kernel)
 
-    sg = build_sharded_graph(graph, Pn)
+    sg = build_sharded_graph(graph, Pn, reorder=reorder)
     v_pp = sg["v_per_part"]
     if schedule == "push":
         # transpose to the src-part-major view (src ids become local);
         # per-bucket content (and its segment metadata) is unchanged
         for k in ("edge_src_local", "edge_src_global", "edge_dst_global",
+                  "edge_src_uid", "edge_dst_uid",
                   "edge_dst_local", "edge_mask", "bucket_last_edge",
                   "bucket_has_edge"):
             sg[k] = np.swapaxes(sg[k], 0, 1)
@@ -394,6 +433,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         "edge_src_local": jnp.asarray(sg["edge_src_local"]),
         "edge_src_global": jnp.asarray(sg["edge_src_global"]),
         "edge_dst_global": jnp.asarray(sg["edge_dst_global"]),
+        "edge_src_uid": jnp.asarray(sg["edge_src_uid"]),
+        "edge_dst_uid": jnp.asarray(sg["edge_dst_uid"]),
         "edge_dst_local": jnp.asarray(sg["edge_dst_local"]),
         "edge_mask": jnp.asarray(sg["edge_mask"]),
         "bucket_last_edge": jnp.asarray(sg["bucket_last_edge"]),
@@ -402,10 +443,14 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     }
     vprops, active = runner(vprops0, active0,
                             jnp.asarray(sg["out_degree"]),
-                            jnp.asarray(sg["vertex_valid"]), edges)
+                            jnp.asarray(sg["vertex_valid"]),
+                            jnp.asarray(sg["vertex_ids"]), edges)
     V = sg["num_vertices"]
     host = jax.tree.map(
         lambda a: np.asarray(a).reshape((Pn * v_pp,) + a.shape[2:])[:V],
         vprops)
+    if sg["inv_perm"] is not None:
+        # un-permute: row old_id of the result lives at new_id=inv_perm[old]
+        host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
     return host, {"schedule": schedule, "num_parts": Pn,
-                  "kernel_on": kernel_on}
+                  "kernel_on": kernel_on, "reorder": reorder}

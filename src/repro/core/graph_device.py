@@ -79,6 +79,16 @@ class EdgeLayout:
                   ``valid_mask`` is what distinguishes real edges.
       prefetch_window: src-window row count for the scalar-prefetch fused
                   kernel; 0 = no prefetch metadata.
+      pack:       optional :class:`~repro.kernels.fused_gather_emit.PackSpec`
+                  — the lane-aligned multi-leaf packing table (host-side
+                  slab offsets per record leaf) for the packed fused
+                  kernel. The spec depends on the PROGRAM's record
+                  schemas, so graph builders leave it None and the
+                  message plane derives it at trace time; callers running
+                  one known program may precompute it with
+                  `make_pack_spec` and bake it into their layout (it is
+                  hashable and keys the jit cache like the other static
+                  fields).
     """
 
     src: Any
@@ -96,6 +106,7 @@ class EdgeLayout:
     num_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
     prefetch_window: int = dataclasses.field(
         default=0, metadata=dict(static=True))
+    pack: Any = dataclasses.field(default=None, metadata=dict(static=True))
 
     @property
     def emit_src_ids(self):
@@ -115,13 +126,24 @@ class EdgeLayout:
 @dataclasses.dataclass(frozen=True)
 class DeviceGraph:
     """Device-resident property graph: both single-device edge layouts
-    plus the vertex-level arrays every engine needs."""
+    plus the vertex-level arrays every engine needs.
+
+    When the graph was built with a reorder strategy, the layouts index a
+    *relabeled* vertex space and ``vertex_perm``/``inv_perm`` record the
+    mapping (``vertex_perm[new] = old``; ``inv_perm[old] = new``). The
+    engine driver initializes vertices with their OLD ids (what
+    ``init_vertex`` sees), the layouts carry the old ids through
+    ``src_ids``/``dst_ids`` (what ``emit_message`` sees), and results are
+    un-permuted before returning — user-visible ids never change.
+    """
 
     canonical: EdgeLayout      # dst-sorted ("CSR over in-edges")
     src_sorted: EdgeLayout     # out-edge order, perm -> canonical
     out_degree: Any
     in_degree: Any
     vprops_in: Dict[str, Any]
+    vertex_perm: Any = None    # [V] int32, new id -> old id (None = natural)
+    inv_perm: Any = None       # [V] int32, old id -> new id
     num_vertices: int = dataclasses.field(
         default=0, metadata=dict(static=True))
     num_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
@@ -164,14 +186,26 @@ def compute_prefetch_windows(src: np.ndarray, num_vertices: int,
     return (lo // w).astype(np.int32), int(w)
 
 
-def build_device_graph(g: PropertyGraph) -> DeviceGraph:
+def build_device_graph(g: PropertyGraph,
+                       reorder: str = "none") -> DeviceGraph:
     """Host→device conversion of the canonical + src-sorted edge layouts.
 
     Precomputes everything structural that is a loop constant: the
     dst-sorted SegmentMeta (from the CSC row pointers already on the
     graph), the canonical→src-sorted permutation, and the scalar-prefetch
     window table of the canonical order.
+
+    `reorder` ("none"|"rcm"|"degree"|"auto", see core/reorder.py) relabels
+    the vertex space host-side first — the layouts (and their recomputed
+    SegmentMeta / prefetch windows) then describe the reordered edges,
+    while the ORIGINAL ids ride the layouts' `src_ids`/`dst_ids` so the
+    user's `emit_message` never sees the relabeling.
     """
+    perm_np = inv_np = None
+    if reorder not in (None, "none"):
+        from .reorder import apply_reorder
+        g, perm_np, inv_np = apply_reorder(g, reorder)
+
     src_s, dst_s, eprops_s = g.src_sorted()
     inv_csc = np.empty_like(g.csc_perm)
     inv_csc[g.csc_perm] = np.arange(g.csc_perm.shape[0])
@@ -182,11 +216,16 @@ def build_device_graph(g: PropertyGraph) -> DeviceGraph:
         has_edge=jnp.asarray(g.in_degree > 0))
     pf_blocks, pf_window = compute_prefetch_windows(g.src, V)
 
+    # original (user-visible) endpoint ids of the relabeled edges
+    uid = (lambda a: None) if perm_np is None else (
+        lambda a: jnp.asarray(perm_np[np.asarray(a)].astype(np.int32)))
+
     canonical = EdgeLayout(
         src=jnp.asarray(g.src),
         dst=jnp.asarray(g.dst),
         eprops=jax.tree.map(jnp.asarray, g.edge_props),
         seg_meta=meta,
+        src_ids=uid(g.src), dst_ids=uid(g.dst),
         prefetch_blocks=jnp.asarray(pf_blocks),
         num_segments=V, num_edges=E, prefetch_window=pf_window)
     src_sorted = EdgeLayout(
@@ -196,6 +235,7 @@ def build_device_graph(g: PropertyGraph) -> DeviceGraph:
         # canonical -> src-sorted position: gathering emissions with this
         # permutation scatters them back into combine (dst) order
         perm=jnp.asarray(inv_csc),
+        src_ids=uid(src_s), dst_ids=uid(dst_s),
         canonical=canonical,
         num_segments=V, num_edges=E)
     return DeviceGraph(
@@ -204,6 +244,10 @@ def build_device_graph(g: PropertyGraph) -> DeviceGraph:
         out_degree=jnp.asarray(g.out_degree),
         in_degree=jnp.asarray(g.in_degree),
         vprops_in=jax.tree.map(jnp.asarray, g.vertex_props),
+        vertex_perm=None if perm_np is None
+        else jnp.asarray(perm_np.astype(np.int32)),
+        inv_perm=None if inv_np is None
+        else jnp.asarray(inv_np.astype(np.int32)),
         num_vertices=V, num_edges=E)
 
 

@@ -79,16 +79,28 @@ def save_vertex_table(vprops: Dict[str, np.ndarray], path: str) -> None:
 # -- synthetic generators -----------------------------------------------------
 
 def lognormal_graph(num_vertices: int, mu: float = 4.0, sigma: float = 1.3,
-                    seed: int = 0, weighted: bool = False) -> PropertyGraph:
+                    seed: int = 0, weighted: bool = False,
+                    locality: float = 0.0) -> PropertyGraph:
     """GraphX `logNormalGraph` analogue (paper §V-D data-scalability runs):
     out-degree of each vertex ~ round(lognormal(mu, sigma)), capped at V-1;
-    targets drawn uniformly."""
+    targets drawn uniformly.
+
+    `locality` > 0 draws each target within ``±locality*V`` of its source
+    (mod V) instead of uniformly — the community structure real graphs
+    have (and the regime where vertex reordering pays; see
+    core/reorder.py). 0 keeps the classic uniform-target generator.
+    """
     rng = np.random.default_rng(seed)
     deg = np.minimum(rng.lognormal(mu, sigma, num_vertices).astype(np.int64),
                      max(num_vertices - 1, 1))
     total = int(deg.sum())
     src = np.repeat(np.arange(num_vertices, dtype=np.int64), deg)
-    dst = rng.integers(0, num_vertices, total, dtype=np.int64)
+    if locality > 0:
+        w = max(1, int(locality * num_vertices))
+        off = rng.integers(-w, w + 1, total, dtype=np.int64)
+        dst = (src + off) % num_vertices
+    else:
+        dst = rng.integers(0, num_vertices, total, dtype=np.int64)
     keep = src != dst
     src, dst = src[keep], dst[keep]
     eprops = None

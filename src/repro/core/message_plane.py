@@ -10,13 +10,16 @@ place that dataflow is implemented and dispatched:
 
 ``layout`` is an :class:`~repro.core.graph_device.EdgeLayout`; the
 dispatcher reads its fields (perm? valid_mask? prefetch table? canonical
-alias?) and the program's monoid to pick between
+alias?) and the program's monoid — one name for the whole record, or a
+per-leaf table for mixed records — to pick between
 
   * the fused gather–emit–combine Pallas kernel (one pass, messages never
-    touch HBM) — resident or scalar-prefetch variant,
+    touch HBM) — resident or scalar-prefetch variant, and for multi-leaf
+    records the PACKED shape (per-dtype vprops slabs, per-(dtype, monoid)
+    message panels, whole record in one launch),
   * the blocked Pallas segment-combine kernel over materialized messages,
-  * XLA segment ops (named monoids) or a flagged associative scan
-    (general monoids),
+  * XLA segment ops (named monoids, uniform or per-leaf) or a flagged
+    associative scan (general monoids),
 
 with permute-then-combine inserted automatically for emission orders that
 are not combine-ordered (pregel's src-sorted view). Because every engine
@@ -37,6 +40,35 @@ from .vcprog import Record, RecordBatch, SegmentMeta, VCProgram, \
     make_segment_meta
 
 _MODES = ("auto", "fused", "unfused")
+_MULTILEAF = ("auto", "packed", "perleaf")
+_NAMED = ("sum", "min", "max")
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf monoid resolution
+# ---------------------------------------------------------------------------
+
+def leaf_monoids(program: VCProgram, msg_tree) -> Optional[Tuple[str, ...]]:
+    """Resolve `program.monoid` into a per-leaf named-monoid table.
+
+    `monoid` may be one name for the whole record ("sum"|"min"|"max"), or
+    a pytree of names mirroring the message record — the per-slice table
+    of the packed fused kernel (e.g. ``{"dist": "min", "count": "sum"}``).
+    Returns the table in flattened-leaf order, or None when any leaf needs
+    the general (merge_message) path.
+    """
+    m = program.monoid
+    leaves = jax.tree.leaves(msg_tree)
+    if isinstance(m, str):
+        return tuple([m] * len(leaves)) if m in _NAMED else None
+    names, mdef = jax.tree.flatten(m)
+    if mdef != jax.tree.structure(msg_tree):
+        raise ValueError(
+            f"per-leaf monoid table {m!r} does not mirror the message "
+            "record returned by empty_message()")
+    if any(n not in _NAMED for n in names):
+        return None
+    return tuple(names)
 
 
 # ---------------------------------------------------------------------------
@@ -107,26 +139,35 @@ def _segment_general(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
 
 def _segment_named(program: VCProgram, msgs: RecordBatch, dst: jnp.ndarray,
                    valid: jnp.ndarray, num_segments: int, empty: Record,
-                   meta: SegmentMeta) -> Tuple[RecordBatch, jnp.ndarray]:
-    """Fast path for named elementwise monoids (sum/min/max on every field)."""
-    op = {"sum": jax.ops.segment_sum,
-          "min": jax.ops.segment_min,
-          "max": jax.ops.segment_max}[program.monoid]
+                   meta: SegmentMeta, monoids: Tuple[str, ...],
+                   seg_op=None) -> Tuple[RecordBatch, jnp.ndarray]:
+    """Fast path for named elementwise monoids — `monoids` is the per-leaf
+    table (uniform or mixed sum/min/max across the record's fields).
+    `seg_op(leaf, monoid)` overrides the reduction (the blocked Pallas
+    kernel plugs in here); the default is the XLA segment ops."""
+    if seg_op is None:
+        ops = {"sum": jax.ops.segment_sum,
+               "min": jax.ops.segment_min,
+               "max": jax.ops.segment_max}
+        seg_op = lambda x, monoid: ops[monoid](
+            x, dst, num_segments=num_segments, indices_are_sorted=True)
     E = dst.shape[0]
     empty_b = records.tree_tile(empty, E)
     msgs = records.tree_where(valid, msgs, empty_b)
 
-    def leaf(x, e):
-        out = op(x, dst, num_segments=num_segments, indices_are_sorted=True)
-        if program.monoid in ("min", "max"):
+    def leaf(x, e, monoid):
+        out = seg_op(x, monoid)
+        if monoid in ("min", "max"):
             # segments with no edges return +/-inf-ish init; clamp to identity
             has = meta.has_edge.reshape(
                 meta.has_edge.shape + (1,) * (out.ndim - 1))
             out = jnp.where(has, out, jnp.broadcast_to(e, out.shape).astype(out.dtype))
         return out.astype(x.dtype)
 
-    empty_v = jax.tree.map(jnp.asarray, empty)
-    inbox = jax.tree.map(leaf, msgs, empty_v)
+    m_leaves, mdef = jax.tree.flatten(msgs)
+    e_leaves = [jnp.asarray(l) for l in jax.tree.leaves(empty)]
+    inbox = jax.tree.unflatten(mdef, [leaf(x, e, mo) for x, e, mo in
+                                      zip(m_leaves, e_leaves, monoids)])
     return inbox, _has_msg(valid, dst, num_segments)
 
 
@@ -143,22 +184,15 @@ def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
     """
     if meta is None:
         meta = make_segment_meta(dst, num_segments)
-    if program.monoid in ("sum", "min", "max"):
+    monoids = leaf_monoids(program, msgs)
+    if monoids is not None:
+        seg_op = None
         if kernel_on:
             from repro.kernels import ops as kops
-            E = dst.shape[0]
-            empty_b = records.tree_tile(empty, E)
-            msgs_m = records.tree_where(valid, msgs, empty_b)
-            inbox = jax.tree.map(
-                lambda x: kops.segment_combine(x, dst, num_segments,
-                                               monoid=program.monoid),
-                msgs_m)
-            if program.monoid in ("min", "max"):
-                empty_v = records.tree_tile(empty, num_segments)
-                inbox = records.tree_where(meta.has_edge, inbox, empty_v)
-            return inbox, _has_msg(valid, dst, num_segments)
+            seg_op = lambda x, monoid: kops.segment_combine(
+                x, dst, num_segments, monoid=monoid)
         return _segment_named(program, msgs, dst, valid, num_segments, empty,
-                              meta)
+                              meta, monoids, seg_op=seg_op)
     return _segment_general(program, msgs, dst, valid, num_segments, empty,
                             meta)
 
@@ -207,39 +241,102 @@ def combine(program: VCProgram, layout: EdgeLayout, msgs, valid, empty,
                            empty, kernel_on, meta=meta)
 
 
+def _program_monoids(program: VCProgram):
+    """program.monoid as the kernel predicate consumes it: one name, a
+    per-leaf tuple (mixed records), or None (general path only)."""
+    m = program.monoid
+    if isinstance(m, str):
+        return m if m in _NAMED else None
+    return leaf_monoids(program, program.empty_message())
+
+
 def fused_applicable(program: VCProgram, layout: EdgeLayout, vprops) -> bool:
     """Static check: can this (program, layout) pair run as ONE fused
-    kernel pass? Needs a named monoid, scalar record leaves, and a
-    combine-ordered view of the edge set (the layout itself or its
-    canonical alias). Delegates to the kernel's own `fusable` predicate so
-    the gate and the kernel's schema validation can never drift apart."""
+    kernel pass? Needs named monoids (one for the record or one per
+    leaf), scalar record leaves, and a combine-ordered view of the edge
+    set (the layout itself or its canonical alias). Delegates to the
+    kernel's own `fusable` predicate so the gate and the kernel's schema
+    validation can never drift apart."""
     cv = layout.combine_view
     if cv is None:
         return False
+    mono = _program_monoids(program)
+    if mono is None:
+        return False
     from repro.kernels.fused_gather_emit import fusable
-    return fusable(program.emit_message, program.monoid, vprops, cv.eprops,
+    return fusable(program.emit_message, mono, vprops, cv.eprops,
                    cv.num_edges, cv.num_segments)
 
 
+def _per_leaf_fused(program: VCProgram, layout: EdgeLayout, vprops, active,
+                    monoids, prefetch):
+    """k scalar-kernel launches, one message leaf each — the baseline the
+    packed multi-leaf pass collapses into one launch (kept for the
+    multileaf="perleaf" bench/verification path)."""
+    from repro.kernels import ops as kops
+
+    empty_rec = program.empty_message()
+    mdef = jax.tree.structure(empty_rec)
+    out_leaves, has_msg = [], None
+    for j, monoid in enumerate(monoids):
+        def emit_one(s, d, sp, ep, _j=j):
+            is_emit, msg = program.emit_message(s, d, sp, ep)
+            return is_emit, {"leaf": jax.tree.leaves(msg)[_j]}
+
+        inbox_j, hm_j = kops.gather_emit_combine(
+            emit_one, monoid, layout.src, layout.dst, vprops,
+            layout.eprops, active, layout.num_segments,
+            valid=layout.valid_mask,
+            src_ids=layout.src_ids, dst_ids=layout.dst_ids,
+            prefetch=prefetch)
+        out_leaves.append(inbox_j["leaf"])
+        has_msg = hm_j if has_msg is None else has_msg
+    return jax.tree.unflatten(mdef, out_leaves), has_msg
+
+
 def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
-                        active, empty: Record):
+                        active, empty: Record, multileaf: str = "auto"):
     """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
     and fold into per-vertex inboxes inside a single Pallas kernel — no
     E-sized message materialization in HBM. `layout` must be the
-    combine-ordered view."""
+    combine-ordered view.
+
+    Records with several leaves (or a per-leaf monoid table) run the
+    PACKED variant by default: dtype-grouped vprops slabs and
+    (dtype, monoid)-grouped message panels make the whole record ONE
+    launch. multileaf="perleaf" forces the k-launch baseline instead.
+    """
     from repro.kernels import ops as kops
+    from repro.kernels.fused_gather_emit import make_pack_spec
     from .graph_device import PREFETCH_BLOCK_E
 
     prefetch = None
     if layout.prefetch_window and layout.prefetch_blocks is not None:
         prefetch = (layout.prefetch_blocks, layout.prefetch_window,
                     PREFETCH_BLOCK_E)
-    inbox, has_msg = kops.gather_emit_combine(
-        program.emit_message, program.monoid, layout.src, layout.dst,
-        vprops, layout.eprops, active, layout.num_segments,
-        valid=layout.valid_mask,
-        src_ids=layout.src_ids, dst_ids=layout.dst_ids,
-        prefetch=prefetch)
+
+    monoids = leaf_monoids(program, empty)
+    if multileaf == "perleaf":
+        inbox, has_msg = _per_leaf_fused(program, layout, vprops, active,
+                                         monoids, prefetch)
+    elif len(monoids) > 1 or multileaf == "packed":
+        pack = layout.pack
+        if pack is None:
+            pack = make_pack_spec(program.emit_message, monoids, vprops,
+                                  layout.eprops, layout.num_edges)
+        inbox, has_msg = kops.gather_emit_combine_packed(
+            program.emit_message, monoids, layout.src, layout.dst,
+            vprops, layout.eprops, active, layout.num_segments,
+            valid=layout.valid_mask,
+            src_ids=layout.src_ids, dst_ids=layout.dst_ids,
+            prefetch=prefetch, pack=pack)
+    else:
+        inbox, has_msg = kops.gather_emit_combine(
+            program.emit_message, monoids[0], layout.src, layout.dst,
+            vprops, layout.eprops, active, layout.num_segments,
+            valid=layout.valid_mask,
+            src_ids=layout.src_ids, dst_ids=layout.dst_ids,
+            prefetch=prefetch)
     # normalize no-message vertices to the user's exact empty record
     empty_v = records.tree_tile(empty, layout.num_segments)
     return records.tree_where(has_msg, inbox, empty_v), has_msg
@@ -251,7 +348,7 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
 
 def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
                      empty: Record, *, kernel_on: bool = False,
-                     mode: str = "auto"
+                     mode: str = "auto", multileaf: str = "auto"
                      ) -> Tuple[RecordBatch, jnp.ndarray]:
     """Run the whole message plane (Phase 3 + Phase 1) for one iteration.
 
@@ -264,17 +361,25 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
       mode="unfused"  never fuse (still honors `kernel_on` for the
                       blocked segment-combine kernel).
 
+    multileaf ("auto"|"packed"|"perleaf") picks the fused pass shape for
+    multi-leaf records: "auto" packs k leaves into ONE launch (per-dtype
+    vprops slabs, per-(dtype, monoid) message panels), "perleaf" forces
+    the k-launch baseline, "packed" forces packing even for one leaf.
+
     Returns (inbox [num_segments] record batch, has_msg [num_segments]).
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    if multileaf not in _MULTILEAF:
+        raise ValueError(
+            f"multileaf must be one of {_MULTILEAF}, got {multileaf!r}")
     want_fused = mode == "fused" or (mode == "auto" and kernel_on)
     if want_fused and fused_applicable(program, layout, vprops):
         return _fused_emit_combine(program, layout.combine_view, vprops,
-                                   active, empty)
+                                   active, empty, multileaf)
     if mode == "fused":
         raise ValueError(
             "mode='fused' but the program/layout pair is not fusable "
-            "(needs a named monoid and scalar record leaves)")
+            "(needs named monoids and scalar record leaves)")
     msgs, valid = emit_messages(program, layout, vprops, active)
     return combine(program, layout, msgs, valid, empty, kernel_on)

@@ -1,0 +1,175 @@
+"""Host-side vertex reordering — the locality stage of the pipeline.
+
+The scalar-prefetch fused kernel (`kernels/fused_gather_emit.py`) DMAs
+two `window`-row src slabs per edge block instead of keeping the whole
+[V] vertex-property batch VMEM-resident; `window` is the power of two
+covering the widest per-block src span of the canonical (dst-sorted)
+edge order (`graph_device.compute_prefetch_windows`). On banded graphs
+the windows are tiny; on real graphs with *hidden* locality (community
+structure scrambled by arbitrary vertex ids — the GraphX / Ammar–Özsu
+observation that vertex ordering dominates gather/scatter cost) the
+natural order spans the whole vertex range and the kernel falls back to
+the resident variant.
+
+This module computes a vertex permutation that recovers the locality:
+
+  rcm      reverse Cuthill–McKee: BFS from a low-degree seed per
+           component, neighbours visited in ascending-degree order,
+           final order reversed. The classic bandwidth-minimization
+           heuristic — endpoints of an edge land near each other, so
+           dst-sorted edge blocks read a narrow src window.
+  degree   sort by total degree, descending. Packs hubs (and, on graphs
+           with many zero-degree vertices, *all* edge endpoints) into a
+           compact id prefix — the degree-grouping half of locality
+           reordering literature.
+  auto     evaluate the candidate permutations host-side and keep the
+           one with the smallest achieved prefetch window ("none" on
+           ties — reordering is never worse than free).
+  none     identity; no permutation is attached.
+
+Everything here is numpy on the host: graphs are inputs, not traced
+values, and the permutation is a loop constant. `apply_reorder` returns
+a relabeled PropertyGraph plus (perm, inv_perm) with the convention
+
+    perm[new_id] = old_id        inv_perm[old_id] = new_id
+
+so `reordered_vprops = vprops[perm]` and results un-permute with
+`result[old] = vprops_out[inv_perm[old]]`. User-visible vertex ids never
+change: `build_device_graph` threads the *old* ids through the layouts'
+`src_ids`/`dst_ids` (what `emit_message` sees) and `run_vcprog`
+un-permutes the output properties.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .graph import PropertyGraph, from_edges
+
+STRATEGIES = ("none", "rcm", "degree", "auto")
+
+
+def identity_permutation(num_vertices: int) -> np.ndarray:
+    return np.arange(num_vertices, dtype=np.int64)
+
+
+def degree_permutation(src, dst, num_vertices: int) -> np.ndarray:
+    """Total-degree descending order (stable, so ties keep natural order)."""
+    deg = (np.bincount(src, minlength=num_vertices)
+           + np.bincount(dst, minlength=num_vertices))
+    return np.argsort(-deg, kind="stable").astype(np.int64)
+
+
+def rcm_permutation(src, dst, num_vertices: int) -> np.ndarray:
+    """Reverse Cuthill–McKee over the symmetrized adjacency.
+
+    Per connected component: seed at the lowest-degree unvisited vertex
+    (the cheap stand-in for a pseudo-peripheral start), BFS with
+    neighbours enqueued in ascending-degree order, then reverse the whole
+    visit order. O(V + E log d_max) host time.
+    """
+    V = int(num_vertices)
+    if V == 0:
+        return np.zeros((0,), np.int64)
+    s = np.concatenate([src, dst]).astype(np.int64)
+    t = np.concatenate([dst, src]).astype(np.int64)
+    deg = np.bincount(s, minlength=V)
+    order = np.argsort(s, kind="stable")
+    adj = t[order]
+    indptr = np.zeros(V + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+
+    visited = np.zeros(V, bool)
+    out = np.empty(V, np.int64)
+    n = 0
+    for seed in np.argsort(deg, kind="stable"):
+        if visited[seed]:
+            continue
+        visited[seed] = True
+        out[n] = seed
+        head, n = n, n + 1
+        while head < n:
+            v = out[head]
+            head += 1
+            nb = np.unique(adj[indptr[v]:indptr[v + 1]])  # dedupe parallels
+            nb = nb[~visited[nb]]
+            if nb.size:
+                nb = nb[np.argsort(deg[nb], kind="stable")]
+                visited[nb] = True
+                out[n:n + nb.size] = nb
+                n += nb.size
+    return out[::-1].copy()
+
+
+def _inverse(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    return inv
+
+
+def achieved_window(src, dst, num_vertices: int,
+                    perm: Optional[np.ndarray] = None) -> int:
+    """The scalar-prefetch window the canonical (dst-sorted) order of the
+    (optionally relabeled) edge set would get. 0 = resident fallback."""
+    from .graph_device import compute_prefetch_windows  # avoid import cycle
+
+    s, d = np.asarray(src), np.asarray(dst)
+    if perm is not None:
+        inv = _inverse(perm)
+        s, d = inv[s], inv[d]
+    order = np.lexsort((s, d))
+    _, w = compute_prefetch_windows(s[order], num_vertices)
+    return int(w)
+
+
+def resolve_permutation(strategy: str, src, dst,
+                        num_vertices: int) -> Optional[np.ndarray]:
+    """Strategy name -> permutation (None for "none"; "auto" keeps the
+    candidate with the smallest achieved prefetch window, identity on
+    ties — so auto can only ever help)."""
+    if strategy is None:
+        strategy = "none"
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"reorder must be one of {STRATEGIES}, got {strategy!r}")
+    if strategy == "none":
+        return None
+    if strategy == "rcm":
+        return rcm_permutation(src, dst, num_vertices)
+    if strategy == "degree":
+        return degree_permutation(src, dst, num_vertices)
+    # auto: windows are small ints; 0 means "no useful window" (resident)
+    best_perm, best_w = None, achieved_window(src, dst, num_vertices)
+    if best_w == 0:
+        best_w = 1 << 62
+    for cand in (rcm_permutation(src, dst, num_vertices),
+                 degree_permutation(src, dst, num_vertices)):
+        w = achieved_window(src, dst, num_vertices, cand)
+        if w and w < best_w:
+            best_perm, best_w = cand, w
+    return best_perm
+
+
+def apply_reorder(g: PropertyGraph, strategy: str
+                  ) -> Tuple[PropertyGraph, Optional[np.ndarray],
+                             Optional[np.ndarray]]:
+    """Relabel a PropertyGraph under `strategy`.
+
+    Returns (graph, perm, inv_perm); (g, None, None) when the strategy is
+    "none" (or degenerates to the identity), so callers can branch on
+    `perm is None`. Edge/vertex properties stay aligned: the relabeled
+    edge list is handed to `from_edges` with the old canonical-order
+    props, and vertex props are gathered with `perm`.
+    """
+    perm = resolve_permutation(strategy, g.src, g.dst, g.num_vertices)
+    if perm is None or np.array_equal(perm, np.arange(g.num_vertices)):
+        return g, None, None
+    inv = _inverse(perm)
+    g2 = from_edges(inv[g.src], inv[g.dst], g.num_vertices,
+                    edge_props=g.edge_props,
+                    vertex_props={k: np.asarray(v)[perm]
+                                  for k, v in g.vertex_props.items()},
+                    directed=True)  # both directions already materialized
+    g2.directed = g.directed
+    return g2, perm, inv

@@ -74,10 +74,13 @@ def make_segment_meta(dst: jnp.ndarray, num_segments: int,
 class VCProgram:
     """Abstract base class — mirrors paper Fig. 2 exactly (snake_case)."""
 
-    #: optional fast-path hint: "sum" | "min" | "max" | "general".
-    #: "general" always works; the named monoids unlock segment-op /
-    #: Pallas fast paths. Correctness is engine-independent.
-    monoid: str = "general"
+    #: optional fast-path hint: "sum" | "min" | "max" | "general", or a
+    #: pytree of names mirroring the message record for MIXED records
+    #: (e.g. ``{"dist": "min", "count": "sum"}`` — the packed fused
+    #: kernel's per-slice monoid table). "general" always works; named
+    #: monoids unlock segment-op / Pallas fast paths. Correctness is
+    #: engine-independent.
+    monoid = "general"
 
     # -- Phase 0 (before iterations) --------------------------------------
     def init_vertex(self, vid, out_degree, vprop) -> Record:
@@ -135,8 +138,13 @@ def resolve_kernel_mode(kernel: str | bool | None) -> bool:
 # Algorithm-1 driver (engine-agnostic part)
 # ---------------------------------------------------------------------------
 
-def init_vertices(program: VCProgram, graph_vprops, out_degree, num_vertices):
-    vids = jnp.arange(num_vertices, dtype=jnp.int32)
+def init_vertices(program: VCProgram, graph_vprops, out_degree, num_vertices,
+                  vids=None):
+    """Phase 0 over all vertices. `vids` overrides the id each vertex is
+    initialized with — reordered device graphs pass their `vertex_perm`
+    so `init_vertex` always sees the ORIGINAL (user-visible) id."""
+    if vids is None:
+        vids = jnp.arange(num_vertices, dtype=jnp.int32)
     return jax.vmap(program.init_vertex)(vids, out_degree, graph_vprops)
 
 

@@ -45,6 +45,7 @@ accumulate in int32 (exact for sentinel ids like 2^31-1), floats in f32.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +55,7 @@ from jax.experimental.pallas import tpu as pltpu
 from .segment_reduce import _CompilerParams, _ceil_to
 
 _F32_IDENT = {"sum": 0.0, "min": 3.4e38, "max": -3.4e38}
+_NAMED = ("sum", "min", "max")
 
 
 def _ident_for(dtype, monoid: str):
@@ -199,18 +201,28 @@ def _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops) -> bool:
             and all(a.shape == (E,) for a in jax.tree.leaves(eprops)))
 
 
-def fusable(emit_fn, monoid: str, vprops, eprops, num_edges: int,
+def fusable(emit_fn, monoid, vprops, eprops, num_edges: int,
             num_vertices: int) -> bool:
     """THE applicability predicate for the fused kernel — the same schema
     check gather_emit_combine enforces, so a True here can never turn
-    into a trace-time ValueError there."""
-    if monoid not in ("sum", "min", "max"):
+    into a trace-time ValueError there.
+
+    `monoid` is either one named-monoid string (every leaf combines the
+    same way, scalar kernel) or a tuple of per-leaf names in the flattened
+    message order (the packed multi-leaf kernel's per-slice table)."""
+    if isinstance(monoid, (tuple, list)):
+        if not monoid or any(m not in _NAMED for m in monoid):
+            return False
+    elif monoid not in _NAMED:
         return False
     if int(num_vertices) == 0:
         return False
     try:
         emit_sds = _emit_schema(emit_fn, num_edges, vprops, eprops)
     except Exception:
+        return False
+    if isinstance(monoid, (tuple, list)) \
+            and len(monoid) != len(jax.tree.leaves(emit_sds[1])):
         return False
     return _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops)
 
@@ -350,4 +362,370 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
     msg_out, hm = outs[:-1], outs[-1]
     inbox = jax.tree.unflatten(jax.tree.structure(emit_sds[1]),
                                [o[:V] for o in msg_out])
+    return inbox, hm[:V] > 0
+
+
+# ---------------------------------------------------------------------------
+# Packed multi-leaf variant: one launch for the WHOLE record
+# ---------------------------------------------------------------------------
+# The scalar kernel above keeps every record leaf a separate [V] operand
+# and a separate [1, BV] accumulator: k leaves mean k 1-D gathers per edge
+# block and k one-hot matvecs — and a per-leaf fallback dispatcher would
+# pay k whole launches, re-streaming the same endpoints each time. The
+# packed variant groups leaves host-side (PackSpec): vertex-property
+# leaves by dtype into [V, W] slabs (ONE row gather per slab per block),
+# message leaves by (dtype, monoid) into [BE, W] panels whose sum groups
+# fold with ONE [BE,BV]x[BE,W] MXU matmul instead of W matvecs. A
+# per-slice monoid table means mixed-monoid records (sum and min and max
+# leaves in one message) still run as a single launch.
+
+#: slab widths are padded to this sublane quantum so the [BV, W]
+#: accumulators tile cleanly; Mosaic pads the lane dim to 128 internally.
+LANE_ALIGN = 8
+
+
+class PackSlot(NamedTuple):
+    leaf: int     # flat leaf index in the record
+    offset: int   # column in the group's slab
+
+
+class PackGroup(NamedTuple):
+    dtype: str    # numpy dtype name shared by every leaf in the group
+    monoid: str   # per-slice monoid ("" for vertex-property groups)
+    width: int    # lane-aligned slab width (>= number of slots)
+    slots: Tuple[PackSlot, ...]
+
+
+class PackSpec(NamedTuple):
+    """Host-side packing table: which record leaf lives at which slab
+    column. Hashable — rides EdgeLayout's static `pack` field and the jit
+    cache key."""
+    vp_groups: Tuple[PackGroup, ...]
+    msg_groups: Tuple[PackGroup, ...]
+
+
+def _pack_groups(keys) -> Tuple[PackGroup, ...]:
+    order = {}
+    for i, k in enumerate(keys):
+        order.setdefault(k, []).append(i)
+    out = []
+    for (dtype, monoid), idxs in order.items():
+        width = _ceil_to(len(idxs), LANE_ALIGN)
+        out.append(PackGroup(
+            dtype=dtype, monoid=monoid, width=width,
+            slots=tuple(PackSlot(leaf=i, offset=o)
+                        for o, i in enumerate(idxs))))
+    return tuple(out)
+
+
+def make_pack_spec(emit_fn, monoids, vprops, eprops, num_edges: int
+                   ) -> PackSpec:
+    """Group vertex-property leaves by dtype and message leaves by
+    (dtype, monoid); computed host-side once per (program, layout) pair."""
+    vp_sds = jax.tree.leaves(jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), vprops))
+    msg_sds = jax.tree.leaves(
+        _emit_schema(emit_fn, num_edges, vprops, eprops)[1])
+    if len(monoids) != len(msg_sds):
+        raise ValueError(
+            f"per-leaf monoid table has {len(monoids)} entries for "
+            f"{len(msg_sds)} message leaves")
+    return PackSpec(
+        vp_groups=_pack_groups([(s.dtype.name, "") for s in vp_sds]),
+        msg_groups=_pack_groups([(s.dtype.name, m)
+                                 for s, m in zip(msg_sds, monoids)]))
+
+
+def _pack_cols(leaves, group: PackGroup, fill):
+    """[E] leaves -> one [E, width] slab in the group dtype."""
+    cols = [None] * group.width
+    for slot in group.slots:
+        cols[slot.offset] = leaves[slot.leaf]
+    n = leaves[group.slots[0].leaf].shape[0]
+    pad = jnp.full((n,), fill, jnp.dtype(group.dtype))
+    return jnp.stack([pad if c is None else c.astype(jnp.dtype(group.dtype))
+                      for c in cols], axis=1)
+
+
+def _packed_kernel(*refs, emit_fn, pack, vp_def, n_ep, ep_def,
+                   idents, acc_dtypes, block_v, n_e, num_edges, block_e,
+                   has_valid, has_ids, window):
+    if window:
+        win_ref, refs = refs[0], refs[1:]
+    seg_ref, src_ref = refs[0], refs[1]
+    k = 2
+    if has_valid:
+        valid_ref = refs[k]
+        k += 1
+    if has_ids:
+        sid_ref, did_ref = refs[k], refs[k + 1]
+        k += 2
+    n_slab = 2 if window else 1
+    n_vg, n_mg = len(pack.vp_groups), len(pack.msg_groups)
+    act_refs = refs[k:k + n_slab]
+    k += n_slab
+    vp_refs = refs[k:k + n_slab * n_vg]
+    ep_refs = refs[k + n_slab * n_vg:k + n_slab * n_vg + n_ep]
+    k += n_slab * n_vg + n_ep
+    out_refs = refs[k:k + n_mg]
+    hm_out = refs[k + n_mg]
+    acc_refs = refs[k + n_mg + 1:k + 2 * n_mg + 1]
+    hm_acc = refs[k + 2 * n_mg + 1]
+
+    iv = pl.program_id(0)
+    ie = pl.program_id(1)
+
+    @pl.when(ie == 0)
+    def _init():
+        for a, ident in zip(acc_refs, idents):
+            a[...] = jnp.full_like(a, ident)
+        hm_acc[...] = jnp.zeros_like(hm_acc)
+
+    seg = seg_ref[...]  # [BE] int32 dst ids, sorted (pads = sentinel)
+    v_lo = iv * block_v
+    overlap = (seg[-1] >= v_lo) & (seg[0] < v_lo + block_v)
+
+    @pl.when(overlap)
+    def _compute():
+        src = src_ref[...]
+        be = seg.shape[0]
+
+        if window:
+            base = win_ref[ie] * window
+            idx = src - base
+            in_win = (idx >= 0) & (idx < 2 * window)
+            idx_lo = jnp.clip(idx, 0, window - 1)
+            idx_hi = jnp.clip(idx - window, 0, window - 1)
+            in_lo = idx < window
+
+            def gather(pair, sel_shape):
+                lo = jnp.take(pair[0][...], idx_lo, axis=0)
+                hi = jnp.take(pair[1][...], idx_hi, axis=0)
+                sel = in_lo.reshape(sel_shape)
+                return jnp.where(sel, lo, hi)
+
+            slabs = [gather(vp_refs[2 * i:2 * i + 2], (be, 1))
+                     for i in range(n_vg)]                    # [BE, Wg] each
+            act = gather(act_refs, (be,)) > 0                 # [BE]
+        else:
+            in_win = None
+            slabs = [jnp.take(r[...], src, axis=0) for r in vp_refs]
+            act = jnp.take(act_refs[0][...], src, axis=0) > 0
+
+        # unpack slab columns back into the record the user's emit sees
+        sp_leaves = [None] * sum(len(g.slots) for g in pack.vp_groups)
+        for g, slab in zip(pack.vp_groups, slabs):
+            for slot in g.slots:
+                sp_leaves[slot.leaf] = slab[:, slot.offset]
+        ep_leaves = [r[...] for r in ep_refs]
+
+        src_prop = jax.tree.unflatten(vp_def, sp_leaves)
+        edge_prop = jax.tree.unflatten(ep_def, ep_leaves)
+        sid = sid_ref[...] if has_ids else src
+        did = did_ref[...] if has_ids else seg
+        is_emit, msg = jax.vmap(emit_fn)(sid, did, src_prop, edge_prop)
+        pos = (jax.lax.broadcasted_iota(jnp.int32, (be, 1), 0)[:, 0]
+               + ie * block_e)
+        valid = is_emit.astype(bool) & act & (pos < num_edges)
+        if has_valid:
+            valid &= valid_ref[...] > 0
+        if in_win is not None:
+            valid &= in_win
+
+        seg_ids = jax.lax.broadcasted_iota(jnp.int32, (be, block_v), 1) + v_lo
+        onehot = (seg[:, None] == seg_ids)  # [BE, BV]
+        hit = onehot & valid[:, None]
+
+        msg_leaves = jax.tree.leaves(msg)
+        for g, acc, ident, adt in zip(pack.msg_groups, acc_refs, idents,
+                                      acc_dtypes):
+            panel = _pack_cols(msg_leaves, g, ident).astype(adt)  # [BE, Wg]
+            if g.monoid == "sum":
+                m = jnp.where(valid[:, None], panel, jnp.asarray(0, adt))
+                acc[...] += jax.lax.dot_general(
+                    onehot.astype(adt), m,
+                    dimension_numbers=(((0,), (0,)), ((), ())),
+                    preferred_element_type=adt)  # [BV, Wg]
+            else:
+                # reduce only the occupied columns (offsets are the
+                # prefix 0..n-1); lane-pad columns hold the identity from
+                # _init and are never read back by the unpack
+                ident_col = jnp.full((block_v,), ident, adt)
+                cols = [ident_col] * g.width
+                for slot in g.slots:
+                    sel = jnp.where(hit, panel[:, slot.offset][:, None],
+                                    jnp.asarray(ident, adt))
+                    cols[slot.offset] = (jnp.min(sel, axis=0)
+                                         if g.monoid == "min"
+                                         else jnp.max(sel, axis=0))
+                red = jnp.stack(cols, axis=1)  # [BV, Wg]
+                op = jnp.minimum if g.monoid == "min" else jnp.maximum
+                acc[...] = op(acc[...], red)
+
+        got = jnp.any(hit, axis=0)[None, :]
+        hm_acc[...] = jnp.maximum(hm_acc[...], got.astype(jnp.int32))
+
+    @pl.when(ie == n_e - 1)
+    def _flush():
+        for o, a in zip(out_refs, acc_refs):
+            o[...] = a[...].astype(o.dtype)
+        hm_out[...] = hm_acc[0]
+
+
+def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
+                               active, num_vertices: int, *, valid=None,
+                               src_ids=None, dst_ids=None, prefetch=None,
+                               pack: PackSpec | None = None,
+                               block_v: int = 128, block_e: int = 512,
+                               interpret=None):
+    """Packed multi-leaf single-pass message plane (combine-ordered edges).
+
+    Like :func:`gather_emit_combine` but for records with several leaves
+    and/or per-leaf monoids: `monoids` is the per-slice monoid table (one
+    named monoid per flattened message leaf), `pack` the optional
+    precomputed :class:`PackSpec` (computed here when absent). Vertex
+    properties are packed into per-dtype [V, W] slabs and messages into
+    per-(dtype, monoid) panels, so the whole record costs ONE launch, one
+    row gather per slab per edge block, and one MXU matmul per sum group.
+    """
+    monoids = tuple(monoids)
+    if any(m not in _NAMED for m in monoids):
+        raise ValueError(f"per-leaf monoids must be named, got {monoids!r}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    E = int(src.shape[0])
+    V = int(num_vertices)
+    vp_leaves, vp_def = jax.tree.flatten(vprops)
+    ep_leaves, ep_def = jax.tree.flatten(eprops)
+
+    emit_sds = _emit_schema(emit_fn, E, vprops, eprops)
+    msg_sds = jax.tree.leaves(emit_sds[1])
+    msg_def = jax.tree.structure(emit_sds[1])
+    if not _schema_ok(emit_sds, E, V, vprops, eprops):
+        raise ValueError("fused kernel needs scalar record leaves")
+    if pack is None:
+        pack = make_pack_spec(emit_fn, monoids, vprops, eprops, E)
+
+    window = 0
+    if prefetch is not None:
+        win_idx, window, table_be = prefetch
+        window = int(window)
+        if window <= 0 or 2 * window >= _ceil_to(V, 8):
+            prefetch, window = None, 0
+        else:
+            block_e = int(table_be)
+
+    bv = min(block_v, _ceil_to(V, 8))
+    be = min(block_e, _ceil_to(E, 8)) if not window else block_e
+    E_pad = max(pl.cdiv(E, be), 1) * be
+    V_pad = pl.cdiv(V, bv) * bv
+
+    # one (identity, acc dtype) pair per msg GROUP (uniform inside a group)
+    idents, acc_dtypes = zip(*(
+        _ident_for(jnp.dtype(g.dtype), g.monoid) for g in pack.msg_groups))
+
+    pad_e = lambda a, fill: jnp.pad(a, (0, E_pad - a.shape[0]),
+                                    constant_values=fill)
+    seg_p = pad_e(dst.astype(jnp.int32), jnp.int32(V_pad))
+    src_p = pad_e(src.astype(jnp.int32), 0)
+    ep_p = [pad_e(l, 0) for l in ep_leaves]
+
+    n_e = E_pad // be
+    grid = (V_pad // bv, n_e)
+    e_spec = pl.BlockSpec((be,), lambda iv, ie: (ie,))
+    out_specs = [pl.BlockSpec((bv, g.width), lambda iv, ie: (iv, 0))
+                 for g in pack.msg_groups]
+    hm_spec = pl.BlockSpec((bv,), lambda iv, ie: (iv,))
+    if window:
+        VW_pad = (max(pl.cdiv(V, window), 1) + 1) * window
+        pad_rows = lambda a, fill, n: jnp.pad(
+            a, ((0, n - a.shape[0]),) + ((0, 0),) * (a.ndim - 1),
+            constant_values=fill)
+        act_specs = [pl.BlockSpec((window,), lambda iv, ie, win: (win[ie],)),
+                     pl.BlockSpec((window,),
+                                  lambda iv, ie, win: (win[ie] + 1,))]
+        slab_specs = lambda w: [
+            pl.BlockSpec((window, w), lambda iv, ie, win: (win[ie], 0)),
+            pl.BlockSpec((window, w), lambda iv, ie, win: (win[ie] + 1, 0))]
+        e_spec = pl.BlockSpec((be,), lambda iv, ie, win: (ie,))
+        out_specs = [pl.BlockSpec((bv, g.width), lambda iv, ie, win: (iv, 0))
+                     for g in pack.msg_groups]
+        hm_spec = pl.BlockSpec((bv,), lambda iv, ie, win: (iv,))
+        win_p = jnp.pad(win_idx.astype(jnp.int32),
+                        (0, n_e - int(win_idx.shape[0])))
+        pad_v_rows = VW_pad
+    else:
+        pad_rows = lambda a, fill, n: jnp.pad(
+            a, ((0, n - a.shape[0]),) + ((0, 0),) * (a.ndim - 1),
+            constant_values=fill)
+        act_specs = [pl.BlockSpec((V_pad,), lambda iv, ie: (0,))]
+        slab_specs = lambda w: [pl.BlockSpec((V_pad, w),
+                                             lambda iv, ie: (0, 0))]
+        pad_v_rows = V_pad
+
+    act_p = pad_rows(active.astype(jnp.int32), 0, pad_v_rows)
+    vp_slabs = [pad_rows(_pack_cols(vp_leaves, g, 0), 0, pad_v_rows)
+                for g in pack.vp_groups]
+
+    operands = [seg_p, src_p]
+    in_specs = [e_spec, e_spec]
+    if valid is not None:
+        operands.append(pad_e(valid.astype(jnp.int32), 0))
+        in_specs.append(e_spec)
+    if src_ids is not None or dst_ids is not None:
+        operands += [pad_e((src if src_ids is None else src_ids)
+                           .astype(jnp.int32), 0),
+                     pad_e((dst if dst_ids is None else dst_ids)
+                           .astype(jnp.int32), 0)]
+        in_specs += [e_spec, e_spec]
+    n_slab = 2 if window else 1
+    operands += [act_p] * n_slab
+    in_specs += act_specs
+    for g, slab in zip(pack.vp_groups, vp_slabs):
+        operands += [slab] * n_slab
+        in_specs += slab_specs(g.width)
+    operands += ep_p
+    in_specs += [e_spec] * len(ep_p)
+
+    body = functools.partial(
+        _packed_kernel, emit_fn=emit_fn, pack=pack, vp_def=vp_def,
+        n_ep=len(ep_p), ep_def=ep_def, idents=idents,
+        acc_dtypes=acc_dtypes, block_v=bv, n_e=n_e, num_edges=E,
+        block_e=be, has_valid=valid is not None,
+        has_ids=src_ids is not None or dst_ids is not None, window=window)
+    out_shape = tuple(
+        [jax.ShapeDtypeStruct((V_pad, g.width), jnp.dtype(g.dtype))
+         for g in pack.msg_groups]
+        + [jax.ShapeDtypeStruct((V_pad,), jnp.int32)])
+    scratch = ([pltpu.VMEM((bv, g.width), adt)
+                for g, adt in zip(pack.msg_groups, acc_dtypes)]
+               + [pltpu.VMEM((1, bv), jnp.int32)])
+    params = _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+
+    if window:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=tuple(out_specs + [hm_spec]),
+            scratch_shapes=scratch)
+        outs = pl.pallas_call(
+            body, grid_spec=grid_spec, out_shape=out_shape,
+            compiler_params=params, interpret=bool(interpret),
+            name="gather_emit_packed_prefetch",
+        )(win_p, *operands)
+    else:
+        outs = pl.pallas_call(
+            body, grid=grid, in_specs=in_specs,
+            out_specs=tuple(out_specs + [hm_spec]),
+            out_shape=out_shape, scratch_shapes=scratch,
+            compiler_params=params, interpret=bool(interpret),
+            name="gather_emit_packed",
+        )(*operands)
+
+    slab_out, hm = outs[:-1], outs[-1]
+    inbox_leaves = [None] * len(msg_sds)
+    for g, slab in zip(pack.msg_groups, slab_out):
+        for slot in g.slots:
+            inbox_leaves[slot.leaf] = slab[:V, slot.offset]
+    inbox = jax.tree.unflatten(msg_def, inbox_leaves)
     return inbox, hm[:V] > 0

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_kernel
 from .fused_gather_emit import gather_emit_combine as _gather_emit_combine
+from .fused_gather_emit import \
+    gather_emit_combine_packed as _gather_emit_combine_packed
 from .segment_reduce import segment_combine_kernel
 
 
@@ -46,6 +48,19 @@ def gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops, active,
                                 active, num_vertices,
                                 interpret=_auto_interpret(interpret),
                                 **kw)
+
+
+def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
+                               active, num_vertices: int, interpret=None,
+                               **kw):
+    """Packed multi-leaf fused pass: whole record in ONE launch, vertex
+    props in per-dtype slabs, per-slice monoid table `monoids` (one named
+    monoid per flattened message leaf). Optional kw as above plus
+    `pack=` (a precomputed PackSpec)."""
+    return _gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops,
+                                       eprops, active, num_vertices,
+                                       interpret=_auto_interpret(interpret),
+                                       **kw)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int | None = None,

@@ -1,0 +1,262 @@
+"""Multi-leaf packed message-plane tests: mixed-dtype and mixed-monoid
+records (sum/min/max leaves in ONE message) must run as a single packed
+fused launch that is exactly equivalent to the per-leaf launches and to
+the kernel-off paths — across every engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import io as gio
+from repro.core import message_plane, records
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.graph_device import build_device_graph
+from repro.kernels.fused_gather_emit import (LANE_ALIGN, PackSpec,
+                                             make_pack_spec)
+
+INF = float(3.4e38)
+
+
+class MixedStats(repro.VCProgram):
+    """5-leaf message with three monoids and two dtypes in one record:
+    {f32 sum x2, f32 min, i32 sum, i32 max} — every packing group shape."""
+
+    monoid = {"cnt": "sum", "hi": "max", "lo": "min",
+              "wsum": "sum", "w2": "sum"}
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"val": (vid % 13).astype(jnp.float32),
+                "ival": (vid % 7).astype(jnp.int32),
+                "cnt": jnp.int32(0), "hi": jnp.int32(-2**31),
+                "lo": jnp.float32(INF), "wsum": jnp.float32(0.0),
+                "w2": jnp.float32(0.0)}
+
+    def empty_message(self):
+        return {"cnt": jnp.int32(0), "hi": jnp.int32(-2**31),
+                "lo": jnp.float32(INF), "wsum": jnp.float32(0.0),
+                "w2": jnp.float32(0.0)}
+
+    def merge_message(self, a, b):
+        return {"cnt": a["cnt"] + b["cnt"],
+                "hi": jnp.maximum(a["hi"], b["hi"]),
+                "lo": jnp.minimum(a["lo"], b["lo"]),
+                "wsum": a["wsum"] + b["wsum"], "w2": a["w2"] + b["w2"]}
+
+    def vertex_compute(self, prop, msg, it):
+        out = dict(prop)
+        out.update({k: msg[k] for k in msg})
+        return out, it < 3
+
+    def emit_message(self, src, dst, sp, ep):
+        return sp["ival"] < 6, {"cnt": jnp.int32(1), "hi": sp["ival"] * 2,
+                                "lo": sp["val"], "wsum": sp["val"] * 0.5,
+                                "w2": sp["val"] + 1.0}
+
+
+class UniformTriple(repro.VCProgram):
+    """3 leaves, ONE monoid — the packed path must also cover the uniform
+    multi-leaf case (one launch instead of three)."""
+
+    monoid = "min"
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"a": vid.astype(jnp.int32), "b": (vid * 2).astype(jnp.int32),
+                "c": (vid % 5).astype(jnp.float32)}
+
+    def empty_message(self):
+        return {"a": jnp.int32(2**31 - 1), "b": jnp.int32(2**31 - 1),
+                "c": jnp.float32(INF)}
+
+    def merge_message(self, a, b):
+        return jax.tree.map(jnp.minimum, a, b)
+
+    def vertex_compute(self, prop, msg, it):
+        new = jax.tree.map(jnp.minimum, prop, msg)
+        changed = jnp.any(jnp.asarray(
+            [new[k] < prop[k] for k in ("a", "b")]))
+        return new, jnp.where(it == 1, jnp.bool_(True), changed)
+
+    def emit_message(self, src, dst, sp, ep):
+        return jnp.bool_(True), dict(sp)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gio.uniform_graph(90, 700, seed=4, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def dgraph(graph):
+    return build_device_graph(graph)
+
+
+def _setup(program, dgraph):
+    empty = jax.tree.map(jnp.asarray, program.empty_message())
+    vids = jnp.arange(dgraph.num_vertices, dtype=jnp.int32)
+    vprops = jax.vmap(program.init_vertex)(vids, dgraph.out_degree,
+                                           dgraph.vprops_in)
+    return empty, vprops, jnp.ones((dgraph.num_vertices,), bool)
+
+
+def _assert_tree_equal(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# PackSpec structure
+# ---------------------------------------------------------------------------
+
+def test_pack_spec_groups_by_dtype_and_monoid(dgraph):
+    prog = MixedStats()
+    empty, vprops, _ = _setup(prog, dgraph)
+    monoids = message_plane.leaf_monoids(prog, empty)
+    assert monoids == ("sum", "max", "min", "sum", "sum")  # sorted keys
+    spec = make_pack_spec(prog.emit_message, monoids, vprops,
+                          dgraph.canonical.eprops, dgraph.num_edges)
+    assert isinstance(spec, PackSpec) and hash(spec) is not None
+    # msg groups: (i32,sum)={cnt}, (i32,max)={hi}, (f32,min)={lo},
+    # (f32,sum)={wsum,w2}
+    keys = {(g.dtype, g.monoid): len(g.slots) for g in spec.msg_groups}
+    assert keys == {("int32", "sum"): 1, ("int32", "max"): 1,
+                    ("float32", "min"): 1, ("float32", "sum"): 2}
+    # vp groups: f32={lo,val,w2,wsum}, i32={cnt,hi,ival} (whole record)
+    vp = {g.dtype: len(g.slots) for g in spec.vp_groups}
+    assert vp == {"float32": 4, "int32": 3}
+    for g in spec.msg_groups + spec.vp_groups:
+        assert g.width % LANE_ALIGN == 0 and g.width >= len(g.slots)
+        assert len({s.offset for s in g.slots}) == len(g.slots)
+
+
+def test_monoid_table_must_mirror_record(dgraph):
+    class Bad(MixedStats):
+        monoid = {"cnt": "sum"}  # missing leaves
+
+    empty = jax.tree.map(jnp.asarray, Bad().empty_message())
+    with pytest.raises(ValueError, match="mirror"):
+        message_plane.leaf_monoids(Bad(), empty)
+
+
+def test_general_leaf_falls_back(dgraph):
+    class Part(MixedStats):
+        monoid = {"cnt": "sum", "hi": "general", "lo": "min",
+                  "wsum": "sum", "w2": "sum"}
+
+    prog = Part()
+    empty = jax.tree.map(jnp.asarray, prog.empty_message())
+    assert message_plane.leaf_monoids(prog, empty) is None
+    assert not message_plane.fused_applicable(
+        prog, dgraph.canonical, _setup(prog, dgraph)[1])
+
+
+# ---------------------------------------------------------------------------
+# plane-level equivalence: packed == perleaf == unfused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prog_cls", [MixedStats, UniformTriple])
+def test_packed_equals_perleaf_and_unfused(prog_cls, dgraph):
+    prog = prog_cls()
+    empty, vprops, active = _setup(prog, dgraph)
+    base, bhm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=False)
+    for multileaf in ("auto", "packed", "perleaf"):
+        inbox, hm = message_plane.emit_and_combine(
+            prog, dgraph.canonical, vprops, active, empty, kernel_on=True,
+            multileaf=multileaf)
+        _assert_tree_equal(inbox, base, f"multileaf={multileaf}")
+        np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+
+
+def test_prebuilt_pack_spec_on_layout_is_honored(dgraph):
+    """A caller-precomputed PackSpec baked into EdgeLayout.pack must be
+    used as-is (and produce identical results to the derived one)."""
+    import dataclasses
+
+    prog = MixedStats()
+    empty, vprops, active = _setup(prog, dgraph)
+    monoids = message_plane.leaf_monoids(prog, empty)
+    spec = make_pack_spec(prog.emit_message, monoids, vprops,
+                          dgraph.canonical.eprops, dgraph.num_edges)
+    layout = dataclasses.replace(dgraph.canonical, pack=spec)
+    a, ahm = message_plane.emit_and_combine(
+        prog, layout, vprops, active, empty, kernel_on=True)
+    b, bhm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=True)
+    _assert_tree_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(ahm), np.asarray(bhm))
+
+
+def test_packed_on_src_sorted_view(dgraph):
+    """pregel's layout runs packed through the canonical alias."""
+    prog = MixedStats()
+    empty, vprops, active = _setup(prog, dgraph)
+    a, ahm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=True)
+    b, bhm = message_plane.emit_and_combine(
+        prog, dgraph.src_sorted, vprops, active, empty, kernel_on=True)
+    _assert_tree_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(ahm), np.asarray(bhm))
+
+
+def test_packed_with_prefetch_windows():
+    """Packed + scalar-prefetch: banded graph with real windows."""
+    rng = np.random.default_rng(3)
+    V, E = 2048, 12000
+    dst = rng.integers(0, V, E).astype(np.int32)
+    src = np.clip(dst + rng.integers(-40, 41, E), 0, V - 1).astype(np.int32)
+    g = repro.core.graph.from_edges(src, dst, num_vertices=V)
+    dg = build_device_graph(g)
+    assert dg.canonical.prefetch_window > 0
+    prog = MixedStats()
+    empty, vprops, active = _setup(prog, dg)
+    base, bhm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=False)
+    out, hm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=True)
+    _assert_tree_equal(out, base)
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: one VCProgram, every engine, kernel on == off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["pregel", "gas", "pushpull"])
+@pytest.mark.parametrize("prog_cls", [MixedStats, UniformTriple])
+def test_mixed_monoid_engines_kernel_on_off(engine, prog_cls, graph):
+    prog_off, _ = run_vcprog(prog_cls(), graph, max_iter=4, engine=engine,
+                             kernel="off")
+    prog_on, _ = run_vcprog(prog_cls(), graph, max_iter=4, engine=engine,
+                            kernel="on")
+    _assert_tree_equal(prog_on, prog_off, f"{engine} kernel on/off")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_mixed_monoid_distributed(schedule, graph):
+    base, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="pushpull",
+                         kernel="off")
+    for kernel in ("off", "on"):
+        out, _ = run_vcprog_distributed(MixedStats(), graph, max_iter=4,
+                                        schedule=schedule, kernel=kernel)
+        _assert_tree_equal(out, base, f"distributed/{schedule}/{kernel}")
+
+
+def test_mixed_monoid_callback(graph):
+    base, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="pushpull",
+                         kernel="off")
+    out, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="callback")
+    _assert_tree_equal(out, base, "callback mixed monoid")
+
+
+def test_packed_plus_reorder(graph):
+    """The tentpole composed: reordered layouts + packed multi-leaf fused
+    pass, still exactly equal to the natural-order unfused run."""
+    base, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="pushpull",
+                         kernel="off", reorder="none")
+    out, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="pushpull",
+                        kernel="on", reorder="rcm")
+    _assert_tree_equal(out, base, "packed+reorder")
