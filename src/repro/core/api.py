@@ -38,15 +38,23 @@ class UniGPS:
     reorder: "none"|"rcm"|"degree"|"auto" — host-side vertex reordering
     for gather locality (core/reorder.py). Semantically invisible: results
     are un-permuted, vertex ids never change.
+
+    frontier: "dense"|"auto"|"sparse" — the frontier-sparse message plane
+    (and, for the distributed engine, delta exchange of changed boundary
+    vertices). "auto" makes per-superstep cost track the frontier with a
+    dense fallback above the crossover density; every mode is
+    bit-identical to "dense".
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
-                 use_kernel: bool | None = None, reorder: str = "none"):
+                 use_kernel: bool | None = None, reorder: str = "none",
+                 frontier: str = "dense"):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
             self.kernel = "off"
         self.reorder = reorder
+        self.frontier = frontier
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -73,13 +81,14 @@ class UniGPS:
 
     def _kernel_kw(self, kw: dict) -> dict:
         """Uniform per-call override handling: every operator (and
-        `vcprog`) accepts the same `kernel=`/`use_kernel=`/`reorder=`
-        keywords that `run_vcprog` does, defaulting to the session-level
-        knobs. Unknown keywords are rejected here rather than silently
-        dropped."""
+        `vcprog`) accepts the same `kernel=`/`use_kernel=`/`reorder=`/
+        `frontier=` keywords that `run_vcprog` does, defaulting to the
+        session-level knobs. Unknown keywords are rejected here rather
+        than silently dropped."""
         out = {"kernel": kw.pop("kernel", self.kernel),
                "use_kernel": kw.pop("use_kernel", None),
-               "reorder": kw.pop("reorder", self.reorder)}
+               "reorder": kw.pop("reorder", self.reorder),
+               "frontier": kw.pop("frontier", self.frontier)}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

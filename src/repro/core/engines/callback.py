@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import message_plane, records
+from .. import message_plane, records, vcprog
 from .common import register
 
 
@@ -57,7 +57,7 @@ class CallbackEngine:
 
     # Phase 3 + Phase 1 on the host ----------------------------------------
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on):
+                         kernel_on, frontier="dense"):
         V = graph.num_vertices
         # strip the nested canonical alias so the operand list stays flat
         layout = dataclasses.replace(graph.canonical, canonical=None,
@@ -70,11 +70,12 @@ class CallbackEngine:
             # is a jit-scope tracer and must not leak into eager execution
             empty_h = jax.tree.map(jnp.asarray, program.empty_message())
             inbox, has_msg = message_plane.emit_and_combine(
-                program, lo, vp, jnp.asarray(act), empty_h, kernel_on=False)
+                program, lo, vp, jnp.asarray(act), empty_h, kernel_on=False,
+                frontier=frontier)
             return jax.tree.map(np.asarray, (inbox, has_msg))
 
         inbox_shape = _as_shapes(records.tree_tile(empty, V))
         out_shapes = (inbox_shape, jax.ShapeDtypeStruct((V,), jnp.bool_))
         inbox, has_msg = jax.pure_callback(
-            host, out_shapes, vprops, active, layout)
+            host, out_shapes, vprops, vcprog.frontier_mask(active), layout)
         return inbox, has_msg, extra

@@ -27,7 +27,7 @@ def prepare_device_graph(g: PropertyGraph,
 
 
 def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
-                  kernel_on: bool):
+                  kernel_on: bool, frontier: str = "dense"):
     V = graph.num_vertices
     empty = jax.tree.map(jnp.asarray, program.empty_message())
 
@@ -50,8 +50,13 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
         else:
             vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                                   process, it)
+        # the frontier is first-class from here on: engines consume the
+        # mask (push/pull heuristic, the plane's per-edge flags); the
+        # distributed engine additionally dispatches on the count
+        front = vcprog.make_frontier(active)
         inbox, has_msg, extra = engine.emit_and_combine(
-            graph, program, vprops, active, extra, empty, kernel_on)
+            graph, program, vprops, front, extra, empty, kernel_on,
+            frontier)
         return vprops, active, inbox, has_msg, extra
 
     state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
@@ -65,13 +70,14 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
 
 @functools.lru_cache(maxsize=64)
 def _jitted_runner(engine_name: str, program_key, max_iter: int,
-                   kernel_on: bool):
+                   kernel_on: bool, frontier: str = "dense"):
     from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
     engine = ENGINES[engine_name]
     program = program_key.program
 
     def run(graph: DeviceGraph):
-        return _run_compiled(program, graph, max_iter, engine, kernel_on)
+        return _run_compiled(program, graph, max_iter, engine, kernel_on,
+                             frontier)
 
     # DeviceGraph's static fields (num_vertices/num_edges/...) live in the
     # pytree structure, so jax.jit keys its own cache on graph shape.
@@ -103,6 +109,7 @@ class _ProgramKey:
 def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
                use_kernel: bool | None = None, reorder: str = "none",
+               frontier: str = "dense",
                gdev: DeviceGraph | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
@@ -116,20 +123,27 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     invisible; `gdev`, when given, wins over `reorder` (it was built with
     its own strategy).
 
+    frontier: "dense" (default) | "auto" | "sparse" — the frontier-sparse
+    message plane (message_plane.resolve_frontier_mode). "auto" makes
+    per-superstep cost track the frontier (block-skip fused kernels +
+    active-edge compaction with a dense fallback); every mode is
+    bit-identical to "dense".
+
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
     """
+    frontier = message_plane.resolve_frontier_mode(frontier)
     if engine == "distributed":
         from . import distributed
         return distributed.run_vcprog_distributed(
             program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
-            reorder=reorder)
+            reorder=reorder, frontier=frontier)
     if gdev is None:
         gdev = prepare_device_graph(graph, reorder=reorder)
     kernel_on = message_plane.resolve_kernel_mode(
         use_kernel if use_kernel is not None else kernel)
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
-                            kernel_on)
+                            kernel_on, frontier)
     vprops, iters, num_active = runner(gdev)
     return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}
 

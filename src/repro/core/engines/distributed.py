@@ -37,9 +37,38 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .. import message_plane, records, vcprog
 from ..graph import PropertyGraph, partition_graph
-from ..graph_device import bucket_layout
+from ..graph_device import bucket_layout, workset_capacity
 
 AXIS = "graph"
+
+
+# ---------------------------------------------------------------------------
+# Delta exchange: ship (indices, values) of frontier vertices only
+# ---------------------------------------------------------------------------
+# Emissions are vetoed for inactive sources, so a remote part only ever
+# *reads* the properties of active vertices — the communication schedules
+# can ship the compacted (indices, values) of the frontier and scatter
+# them into a zero slab on the receiving side, bit-identically (the zeros
+# are never selected). K is a static per-part capacity with a dense
+# fallback above it ("auto"), or the full v_pp ("sparse", always exact).
+
+def _compact_active(vprops, active, K: int, v_pp: int):
+    """Local frontier as a wire payload: (idx [K] int32 with sentinel
+    v_pp pads, vals [K, ...] gathered rows, count)."""
+    idx, cnt = message_plane.compact_indices(active, K)
+    vals = records.tree_gather(vprops, jnp.minimum(idx, max(v_pp - 1, 0)))
+    return idx, vals, cnt
+
+
+def _scatter_part(vprops_tmpl, v_pp: int, idx, vals):
+    """Reconstruct a remote part's (props, active) from its delta payload.
+    Rows not shipped stay zero AND inactive — never read by any combine
+    path (the active veto masks their emissions before use)."""
+    base = jax.tree.map(lambda a: jnp.zeros((v_pp,) + a.shape[1:], a.dtype),
+                        vprops_tmpl)
+    vp = jax.tree.map(lambda b, v: b.at[idx].set(v, mode="drop"), base, vals)
+    act = jnp.zeros((v_pp,), bool).at[idx].set(True, mode="drop")
+    return vp, act
 
 
 # ---------------------------------------------------------------------------
@@ -71,9 +100,21 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int,
     ORIGINAL endpoint ids ride `edge_{src,dst}_uid` (what emit_message
     sees) and `vertex_ids` (what init_vertex sees); `vertex_perm` /
     `inv_perm` let the caller un-permute results.
+
+    Beyond the global strategies, `reorder="rcm:part"` is the
+    PARTITION-AWARE variant: RCM applied within each contiguous part
+    range (block-diagonal permutation, part ownership unchanged), so
+    per-bucket src runs are banded in each part's LOCAL id space — the
+    quantity the per-bucket scalar-prefetch windows actually depend on
+    (see `bucket_prefetch_windows`).
     """
     perm = inv = None
-    if reorder not in (None, "none"):
+    if reorder == "rcm:part":
+        from ..reorder import apply_permutation, partitioned_rcm_permutation
+        p = partitioned_rcm_permutation(g.src, g.dst, g.num_vertices,
+                                        num_parts)
+        g, perm, inv = apply_permutation(g, p)
+    elif reorder not in (None, "none"):
         from ..reorder import apply_reorder
         g, perm, inv = apply_reorder(g, reorder)
 
@@ -142,6 +183,27 @@ def build_sharded_graph(g: PropertyGraph, num_parts: int,
     }
 
 
+def bucket_prefetch_windows(sg: Dict[str, Any]) -> np.ndarray:
+    """Host-side locality metric of a sharded graph: the achieved
+    scalar-prefetch window of every (dst-part, src-owner-bucket)'s local
+    src run ([P, B] int64; 0 = resident fallback, i.e. the slab pair
+    would cover at least the whole part). The partition-aware reorderer
+    ("rcm:part") exists to shrink these."""
+    from ..graph_device import compute_prefetch_windows
+
+    v_pp = sg["v_per_part"]
+    srcl, mask = sg["edge_src_local"], sg["edge_mask"]
+    Pn, B = srcl.shape[0], srcl.shape[1]
+    out = np.zeros((Pn, B), np.int64)
+    for dp in range(Pn):
+        for b in range(B):
+            # the bucket's own (dst-sorted) edge order — what a
+            # per-bucket prefetch variant would actually stream
+            s = srcl[dp, b][mask[dp, b]]
+            _, out[dp, b] = compute_prefetch_windows(s, v_pp)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Device-side iteration (runs inside shard_map; all args are LOCAL slices)
 # ---------------------------------------------------------------------------
@@ -171,22 +233,38 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                           num_parts: int, schedule: str = "ring",
                           unroll_buckets: bool = False,
                           skip_buckets: bool = False,
-                          kernel_on: bool = False):
+                          kernel_on: bool = False,
+                          frontier: str = "dense"):
     """One Algorithm-1 iteration as a shard_map-able local function.
 
     Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
     [B=P, L, ...] for this device's dst range. Returns updated local state
     + global num_active.
+
+    frontier ("dense"|"auto"|"sparse") switches the schedules to delta
+    exchange — allgather/ring rotate only the (indices, values) of active
+    boundary vertices, push all_to_alls only the (indices, values) of
+    non-empty partial-inbox rows — and threads the same mode into every
+    bucket's message plane. "auto" falls back to the dense exchange when
+    any part's frontier exceeds the static capacity K (decided with ONE
+    pmax so every device takes the same branch); "sparse" uses K = v_pp
+    (always exact). All modes are bit-identical.
     """
+    frontier = message_plane.resolve_frontier_mode(frontier)
+    K = v_pp if frontier == "sparse" else workset_capacity(v_pp)
 
     def local_step(it, vprops, active, inbox, has_msg, edges):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
         my = jax.lax.axis_index(AXIS)
 
-        # Phase 2: vertex_compute on the local slice
+        # Phase 2: vertex_compute on the local slice. The local frontier
+        # is first-class from here on: its popcount is computed once and
+        # consumed by the delta-exchange crossover conds AND the global
+        # termination count below.
         process = active | has_msg
         vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                               process, it)
+        front = vcprog.make_frontier(active)
 
         # Phases 3+1: emit along in-edges, reading remote src props
         inbox0 = records.tree_tile(empty, v_pp)
@@ -221,10 +299,11 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 seg_meta=meta, v_per_part=v_pp)
 
         def bucket_plane(bk, src_props_part, active_part):
-            """One bucket's whole message plane (fused when kernel_on)."""
+            """One bucket's whole message plane (fused when kernel_on;
+            frontier-sparse dispatch inherited from the session knob)."""
             return message_plane.emit_and_combine(
                 program, bk, src_props_part, active_part, empty,
-                kernel_on=kernel_on)
+                kernel_on=kernel_on, frontier=frontier)
 
         if skip_buckets:
             # cost-calibration variant: everything EXCEPT the bucket loop
@@ -263,51 +342,100 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 (inbox, has_msg), _ = jax.lax.scan(
                     _fold_partials(program), (inbox0, has0), (ex, exh))
         elif schedule == "allgather":
-            all_vp = jax.lax.all_gather(vprops, AXIS)       # [P, v_pp, ...]
-            all_act = jax.lax.all_gather(active, AXIS)
+            def ag_run(part_props):
+                """Scan the P src buckets; part_props(b) yields bucket b's
+                (remote props, remote active)."""
+                def body(carry, b):
+                    inbox, has_msg = carry
+                    vp_b, act_b = part_props(b)
+                    b_inbox, b_has = bucket_plane(bucket_at(b), vp_b, act_b)
+                    return _merge_partial(program, inbox, has_msg, b_inbox,
+                                          b_has), None
 
-            def body(carry, b):
-                inbox, has_msg = carry
-                b_inbox, b_has = bucket_plane(
-                    bucket_at(b), records.tree_row(all_vp, b), all_act[b])
-                return _merge_partial(program, inbox, has_msg, b_inbox,
-                                      b_has), None
+                if unroll_buckets:
+                    # python loop: every bucket appears in the HLO, so the
+                    # dry-run's cost_analysis counts all P buckets (a
+                    # lax.scan body is counted once regardless of trips)
+                    carry = (inbox0, has0)
+                    for b in range(num_parts):
+                        carry, _ = body(carry, jnp.int32(b))
+                    return carry
+                return jax.lax.scan(body, (inbox0, has0),
+                                    jnp.arange(num_parts))[0]
 
-            if unroll_buckets:
-                # python loop: every bucket appears in the HLO, so the
-                # dry-run's cost_analysis counts all P buckets (a lax.scan
-                # body is counted once regardless of trip count)
-                carry = (inbox0, has0)
-                for b in range(num_parts):
-                    carry, _ = body(carry, jnp.int32(b))
-                inbox, has_msg = carry
+            def ag_dense(_):
+                all_vp = jax.lax.all_gather(vprops, AXIS)   # [P, v_pp, ...]
+                all_act = jax.lax.all_gather(active, AXIS)
+                return ag_run(lambda b: (records.tree_row(all_vp, b),
+                                         all_act[b]))
+
+            def ag_sparse(_):
+                # delta exchange: gather only (indices, values) of each
+                # part's frontier — wire P·K·prop_bytes, not V·prop_bytes
+                idx, vals, _ = _compact_active(vprops, active, K, v_pp)
+                all_idx = jax.lax.all_gather(idx, AXIS)     # [P, K]
+                all_vals = jax.tree.map(
+                    lambda a: jax.lax.all_gather(a, AXIS), vals)
+                return ag_run(lambda b: _scatter_part(
+                    vprops, v_pp, all_idx[b],
+                    records.tree_row(all_vals, b)))
+
+            if frontier == "dense":
+                inbox, has_msg = ag_dense(None)
+            elif frontier == "sparse":
+                inbox, has_msg = ag_sparse(None)
             else:
-                (inbox, has_msg), _ = jax.lax.scan(
-                    body, (inbox0, has0), jnp.arange(num_parts))
+                # one pmax so every device takes the same cond branch
+                fits = jax.lax.pmax(front.count, AXIS) <= K
+                inbox, has_msg = jax.lax.cond(fits, ag_sparse, ag_dense,
+                                              operand=None)
         elif schedule == "ring":
             perm = [(i, (i + 1) % num_parts) for i in range(num_parts)]
+            pperm = lambda t: jax.tree.map(
+                lambda a: jax.lax.ppermute(a, AXIS, perm), t)
 
-            def body(carry, r):
-                inbox, has_msg, vp_rot, act_rot = carry
-                b = (my - r) % num_parts        # whose props we hold now
-                b_inbox, b_has = bucket_plane(bucket_at(b), vp_rot, act_rot)
-                inbox, has_msg = _merge_partial(program, inbox, has_msg,
-                                                b_inbox, b_has)
-                # rotate towards the next neighbour (overlaps with compute)
-                vp_rot = jax.tree.map(
-                    lambda a: jax.lax.ppermute(a, AXIS, perm), vp_rot)
-                act_rot = jax.lax.ppermute(act_rot, AXIS, perm)
-                return (inbox, has_msg, vp_rot, act_rot), None
+            def ring_run(payload0, reconstruct):
+                """Rotate `payload0` around the ring; reconstruct(payload)
+                yields the (props, active) of the part it currently
+                holds."""
+                def body(carry, r):
+                    inbox, has_msg, payload = carry
+                    b = (my - r) % num_parts    # whose props we hold now
+                    vp_b, act_b = reconstruct(payload)
+                    b_inbox, b_has = bucket_plane(bucket_at(b), vp_b, act_b)
+                    inbox, has_msg = _merge_partial(program, inbox, has_msg,
+                                                    b_inbox, b_has)
+                    # rotate to the next neighbour (overlaps with compute)
+                    return (inbox, has_msg, pperm(payload)), None
 
-            if unroll_buckets:
-                carry = (inbox0, has0, vprops, active)
-                for r in range(num_parts):
-                    carry, _ = body(carry, jnp.int32(r))
-                inbox, has_msg, _, _ = carry
+                if unroll_buckets:
+                    carry = (inbox0, has0, payload0)
+                    for r in range(num_parts):
+                        carry, _ = body(carry, jnp.int32(r))
+                    return carry[0], carry[1]
+                (inbox, has_msg, _), _ = jax.lax.scan(
+                    body, (inbox0, has0, payload0), jnp.arange(num_parts))
+                return inbox, has_msg
+
+            def ring_dense(_):
+                return ring_run((vprops, active), lambda p: p)
+
+            def ring_sparse(_):
+                # rotate the compacted (indices, values) of the frontier —
+                # per-hop wire K·(prop_bytes + 4) instead of v_pp rows
+                idx, vals, _ = _compact_active(vprops, active, K, v_pp)
+                return ring_run((idx, vals),
+                                lambda p: _scatter_part(vprops, v_pp,
+                                                        p[0], p[1]))
+
+            if frontier == "dense":
+                inbox, has_msg = ring_dense(None)
+            elif frontier == "sparse":
+                inbox, has_msg = ring_sparse(None)
             else:
-                (inbox, has_msg, _, _), _ = jax.lax.scan(
-                    body, (inbox0, has0, vprops, active),
-                    jnp.arange(num_parts))
+                fits = jax.lax.pmax(front.count, AXIS) <= K
+                inbox, has_msg = jax.lax.cond(fits, ring_sparse, ring_dense,
+                                              operand=None)
         elif schedule == "push":
             # §Perf (Gemini push mode): src props are LOCAL; combine
             # per-dst-part partial inboxes locally, exchange them with ONE
@@ -322,18 +450,57 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             _, (partials, phas) = jax.lax.scan(
                 part_body, (inbox0, has0), jnp.arange(num_parts))
             # partials: [P, v_pp, ...] — row b = my messages for part b
-            ex = jax.tree.map(
-                lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
-                                             concat_axis=0, tiled=False),
-                partials)
-            exh = jax.lax.all_to_all(phas, AXIS, split_axis=0,
-                                     concat_axis=0, tiled=False)
-            (inbox, has_msg), _ = jax.lax.scan(_fold_partials(program),
-                                               (inbox0, has0), (ex, exh))
+            a2a = lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
+                                               concat_axis=0, tiled=False)
+
+            def push_dense(_):
+                ex = jax.tree.map(a2a, partials)
+                exh = a2a(phas)
+                return jax.lax.scan(_fold_partials(program), (inbox0, has0),
+                                    (ex, exh))[0]
+
+            def push_sparse(_):
+                # delta exchange of the partial inboxes: each [v_pp] row is
+                # mostly has_msg=False on a thin frontier — ship only its
+                # (indices, values) and rebuild the dense partial on the
+                # receiving side before the monoid fold
+                idx = jax.vmap(
+                    lambda m: message_plane.compact_indices(m, K)[0])(phas)
+                clip = jnp.minimum(idx, max(v_pp - 1, 0))
+                vals = jax.tree.map(
+                    lambda a: jax.vmap(
+                        lambda row, c: jnp.take(row, c, axis=0))(a, clip),
+                    partials)
+                ex_idx = a2a(idx)
+                ex_vals = jax.tree.map(a2a, vals)
+
+                def fold(carry, x):
+                    inbox_c, has_c = carry
+                    i_row, v_row = x
+                    part = jax.tree.map(
+                        lambda e, v: e.at[i_row].set(v, mode="drop"),
+                        records.tree_tile(empty, v_pp), v_row)
+                    ph = jnp.zeros((v_pp,), bool).at[i_row].set(
+                        True, mode="drop")
+                    return _merge_partial(program, inbox_c, has_c, part,
+                                          ph), None
+
+                return jax.lax.scan(fold, (inbox0, has0),
+                                    (ex_idx, ex_vals))[0]
+
+            if frontier == "dense":
+                inbox, has_msg = push_dense(None)
+            elif frontier == "sparse":
+                inbox, has_msg = push_sparse(None)
+            else:
+                rows = jnp.sum(phas.astype(jnp.int32), axis=1)  # [P]
+                fits = jax.lax.pmax(jnp.max(rows), AXIS) <= K
+                inbox, has_msg = jax.lax.cond(fits, push_sparse, push_dense,
+                                              operand=None)
         else:
             raise ValueError(schedule)
 
-        num_active = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), AXIS)
+        num_active = jax.lax.psum(front.count, AXIS)
         num_msg = jax.lax.psum(jnp.sum(has_msg.astype(jnp.int32)), AXIS)
         return vprops, active, inbox, has_msg, num_active + num_msg
 
@@ -343,10 +510,12 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
 def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
                             num_parts: int, mesh: Mesh, max_iter: int,
                             schedule: str = "ring",
-                            kernel_on: bool = False):
+                            kernel_on: bool = False,
+                            frontier: str = "dense"):
     """jit(shard_map(full Algorithm-1 loop)) over mesh axis AXIS."""
     local_step = make_distributed_step(program, v_pp, num_parts, schedule,
-                                       kernel_on=kernel_on)
+                                       kernel_on=kernel_on,
+                                       frontier=frontier)
 
     vspec = P(AXIS)
     espec = P(AXIS)
@@ -400,7 +569,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            schedule: str = "ring",
                            kernel: str | bool = "auto",
                            use_kernel: bool | None = None,
-                           reorder: str = "none"):
+                           reorder: str = "none",
+                           frontier: str = "dense"):
     if mesh is None:
         dev = np.asarray(jax.devices())
         mesh = Mesh(dev.reshape(-1), (AXIS,))
@@ -408,6 +578,7 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     assert Pn == mesh.devices.size, "one part per device"
     kernel_on = message_plane.resolve_kernel_mode(
         use_kernel if use_kernel is not None else kernel)
+    frontier = message_plane.resolve_frontier_mode(frontier)
 
     sg = build_sharded_graph(graph, Pn, reorder=reorder)
     v_pp = sg["v_per_part"]
@@ -424,7 +595,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         sg["edge_src_local"] = sg["edge_src_global"] % v_pp
 
     runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
-                                     schedule, kernel_on=kernel_on)
+                                     schedule, kernel_on=kernel_on,
+                                     frontier=frontier)
 
     # initial vertex props: the input props (init_vertex runs on device)
     vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
@@ -453,4 +625,5 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         # un-permute: row old_id of the result lives at new_id=inv_perm[old]
         host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
     return host, {"schedule": schedule, "num_parts": Pn,
-                  "kernel_on": kernel_on, "reorder": reorder}
+                  "kernel_on": kernel_on, "reorder": reorder,
+                  "frontier": frontier}

@@ -33,16 +33,20 @@ class GASEngine:
         return (store, valid)
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on):
+                         kernel_on, frontier="dense"):
         layout = graph.canonical
         if kernel_on and message_plane.fused_applicable(program, layout,
                                                         vprops):
             inbox, has_msg = message_plane.emit_and_combine(
-                program, layout, vprops, active, empty, kernel_on=True)
+                program, layout, vprops, active, empty, kernel_on=True,
+                frontier=frontier)
             return inbox, has_msg, extra
 
         # SCATTER: evaluate emit for every edge (canonical order), store
-        # e.msg; GATHER + SUM: combine the store with the monoid
+        # e.msg; GATHER + SUM: combine the store with the monoid. The
+        # store is definitionally E-sized (Fig. 4b's memory profile), so
+        # the kernel-off GAS dataflow stays dense regardless of the
+        # frontier mode — still bit-identical, by construction.
         msgs, valid = message_plane.emit_messages(program, layout, vprops,
                                                   active)
         empty_b = records.tree_tile(empty, graph.num_edges)

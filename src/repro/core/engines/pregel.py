@@ -20,8 +20,8 @@ class PregelEngine:
         return ()
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on):
+                         kernel_on, frontier="dense"):
         inbox, has_msg = message_plane.emit_and_combine(
             program, graph.src_sorted, vprops, active, empty,
-            kernel_on=kernel_on)
+            kernel_on=kernel_on, frontier=frontier)
         return inbox, has_msg, extra

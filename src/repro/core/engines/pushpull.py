@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import message_plane
+from .. import message_plane, vcprog
 from .common import register
 
 
@@ -31,19 +31,20 @@ class PushPullEngine:
         return ()
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on):
-        active_out_edges = jnp.sum(jnp.where(active, graph.out_degree, 0))
+                         kernel_on, frontier="dense"):
+        mask = vcprog.frontier_mask(active)
+        active_out_edges = jnp.sum(jnp.where(mask, graph.out_degree, 0))
         use_push = active_out_edges < (graph.num_edges / self.alpha)
 
         def push(_):
             return message_plane.emit_and_combine(
                 program, graph.src_sorted, vprops, active, empty,
-                kernel_on=kernel_on)
+                kernel_on=kernel_on, frontier=frontier)
 
         def pull(_):
             return message_plane.emit_and_combine(
                 program, graph.canonical, vprops, active, empty,
-                kernel_on=kernel_on)
+                kernel_on=kernel_on, frontier=frontier)
 
         inbox, has_msg = jax.lax.cond(use_push, push, pull, operand=None)
         return inbox, has_msg, extra

@@ -123,6 +123,39 @@ def uniform_graph(num_vertices: int, num_edges: int, seed: int = 0,
                       directed=directed)
 
 
+def part_community_graph(num_parts: int, v_per_part: int, degree: int = 8,
+                         band: int = 4, cross_edges: int = 64,
+                         seed: int = 0) -> PropertyGraph:
+    """Per-part banded communities whose LOCAL ids are scrambled.
+
+    Each contiguous range of `v_per_part` vertices forms one banded
+    community (targets within ±band of the source, `degree` out-edges per
+    vertex) relabeled by a within-range shuffle, plus a sprinkling of
+    uniform cross-part edges. This is the regime the partition-aware
+    reorderer (`build_sharded_graph(reorder="rcm:part")`) targets: the
+    partitioner's ranges align with the communities, but within-range
+    order carries no structure. Shared by tests/test_reorder.py and
+    benchmarks/bench_kernels.py so the bench measures the same graph the
+    invariants are asserted on."""
+    rng = np.random.default_rng(seed)
+    V = num_parts * v_per_part
+    src_l, dst_l = [], []
+    for p in range(num_parts):
+        base = p * v_per_part
+        s = np.repeat(np.arange(v_per_part), degree)
+        d = np.clip(s + rng.integers(-band, band + 1, s.shape[0]), 0,
+                    v_per_part - 1)
+        shuf = rng.permutation(v_per_part)
+        src_l.append(base + shuf[s])
+        dst_l.append(base + shuf[d])
+    cs = rng.integers(0, V, cross_edges)
+    cd = rng.integers(0, V, cross_edges)
+    src = np.concatenate(src_l + [cs])
+    dst = np.concatenate(dst_l + [cd])
+    keep = src != dst
+    return from_edges(src[keep], dst[keep], V)
+
+
 def rmat_graph(scale: int, edge_factor: int = 8, seed: int = 0,
                a: float = 0.57, b: float = 0.19, c: float = 0.19,
                weighted: bool = False) -> PropertyGraph:

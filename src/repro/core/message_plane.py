@@ -26,6 +26,15 @@ are not combine-ordered (pregel's src-sorted view). Because every engine
 routes through this entry point, a fast path added here is immediately
 reachable from pregel, GAS, pushpull, callback and each distributed
 bucket — the GraphX lesson applied to our Pallas specializations.
+
+The plane is also where frontier sparsity lives (``frontier=`` knob):
+convergent programs (SSSP, CC, label propagation) spend most supersteps
+on a thin frontier, so the fused kernels consult a per-edge-block
+``any_active`` bitmap and early-out dead blocks, and the unfused pass
+compacts the active edge set into a static-capacity workset with a dense
+fallback above the crossover — pushpull's push/pull density heuristic
+promoted into the dispatcher, inherited by every engine. All modes are
+bit-identical to dense.
 """
 from __future__ import annotations
 
@@ -35,12 +44,13 @@ import jax
 import jax.numpy as jnp
 
 from . import records
-from .graph_device import EdgeLayout
+from .graph_device import EdgeLayout, SPARSE_CAP_FRAC, workset_capacity
 from .vcprog import Record, RecordBatch, SegmentMeta, VCProgram, \
-    make_segment_meta
+    frontier_mask, make_segment_meta
 
 _MODES = ("auto", "fused", "unfused")
 _MULTILEAF = ("auto", "packed", "perleaf")
+_FRONTIER = ("auto", "dense", "sparse")
 _NAMED = ("sum", "min", "max")
 
 
@@ -74,6 +84,27 @@ def leaf_monoids(program: VCProgram, msg_tree) -> Optional[Tuple[str, ...]]:
 # ---------------------------------------------------------------------------
 # Kernel knob
 # ---------------------------------------------------------------------------
+
+def resolve_frontier_mode(frontier) -> str:
+    """Validate the frontier knob ("auto"|"dense"|"sparse"; None="dense").
+
+    "dense" runs every plane pass over all E edge slots (the historical
+    behavior). "auto" makes iteration cost track the frontier: the fused
+    kernels early-out edge blocks with no active src, and the unfused
+    pass compacts the active edge set into a `workset_capacity(E)`-slot
+    workset whenever it fits (dense fallback above the crossover).
+    "sparse" forces the sparse shape of whichever path dispatches —
+    block-skip when the fused kernel runs, the compaction arm at full
+    (always-exact) capacity otherwise; use kernel_on=False (or
+    mode="unfused") to pin the compaction arm for verification/benching.
+    Every mode is bit-identical."""
+    if frontier is None:
+        return "dense"
+    if frontier not in _FRONTIER:
+        raise ValueError(
+            f"frontier must be one of {_FRONTIER}, got {frontier!r}")
+    return frontier
+
 
 def resolve_kernel_mode(kernel) -> bool:
     """Resolve the tri-state kernel knob to a concrete on/off.
@@ -198,22 +229,105 @@ def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
 
 
 # ---------------------------------------------------------------------------
+# Frontier-sparse machinery: device-side compaction of the active edge set
+# ---------------------------------------------------------------------------
+
+def compact_indices(flag, cap: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Order-preserving device-side compaction of True positions.
+
+    Returns (idx, count): idx [cap] int32 holds the positions of the
+    first `cap` True flags in ascending order, padded with the sentinel
+    ``flag.shape[0]``; count is the total number of True flags. Flags
+    beyond `cap` are dropped, so exact callers dispatch on
+    ``count <= cap`` (the auto crossover) or pass ``cap = len(flag)``.
+    """
+    n = int(flag.shape[0])
+    if n == 0:
+        return jnp.zeros((cap,), jnp.int32), jnp.int32(0)
+    # idx[k] = position of the (k+1)-th True flag = first index whose
+    # running count reaches k+1; k beyond the count lands at n (the
+    # sentinel) for free. Binary search beats a scatter ~6x on CPU and
+    # avoids serializing XLA scatter semantics on TPU.
+    csum = jnp.cumsum(flag.astype(jnp.int32))
+    idx = jnp.searchsorted(csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
+                           side="left").astype(jnp.int32)
+    return idx, csum[-1]
+
+
+def _sparse_emit_combine(program: VCProgram, cv: EdgeLayout, vprops,
+                         empty: Record, kernel_on: bool,
+                         monoids: Tuple[str, ...], act_e, cap: int
+                         ) -> Tuple[RecordBatch, jnp.ndarray]:
+    """The frontier-sparse arm: compact the CSR slices of active sources
+    into a `cap`-slot workset, then run emit + segment-combine over the
+    workset only — iteration cost O(cap) record work instead of O(E).
+
+    `cv` must be the combine-ordered view and `act_e` the per-edge
+    frontier flags in ITS order (active src & valid slot). Compaction is
+    order-preserving, so the workset dst run stays ascending (sentinel
+    `num_segments` pads keep it so through the tail) and every
+    combine-path invariant of the dense pass carries over — the result is
+    bit-identical to dense (same emission values folded under the same
+    monoid, skipped slots contribute only identities).
+    """
+    E, V = cv.num_edges, cv.num_segments
+    ws, count = compact_indices(act_e, cap)
+    ws_valid = jnp.arange(cap, dtype=jnp.int32) < count
+    wsc = jnp.minimum(ws, max(E - 1, 0))  # clip sentinel pads for gathers
+    src_ws = jnp.take(cv.src, wsc, axis=0)
+    dst_ws = jnp.where(ws_valid, jnp.take(cv.dst, wsc, axis=0),
+                       jnp.int32(V))
+    sid_ws = jnp.take(cv.emit_src_ids, wsc, axis=0)
+    did_ws = jnp.where(ws_valid, jnp.take(cv.emit_dst_ids, wsc, axis=0),
+                       jnp.int32(V))
+    src_prop = records.tree_gather(vprops, src_ws)
+    eprops_ws = records.tree_gather(cv.eprops, wsc)
+    is_emit, msgs = jax.vmap(program.emit_message)(sid_ws, did_ws, src_prop,
+                                                   eprops_ws)
+    valid = is_emit.astype(bool) & ws_valid  # act already folded into flags
+    # workset segment structure is dynamic (changes every superstep) —
+    # derived in-trace at O(cap), unlike the loop-constant dense meta
+    meta = make_segment_meta(dst_ws, V, valid=valid)
+    seg_op = None
+    if kernel_on:
+        from repro.kernels import ops as kops
+        seg_op = lambda x, monoid: kops.segment_combine(
+            x, dst_ws, V, monoid=monoid)
+    return _segment_named(program, msgs, dst_ws, valid, V, empty, meta,
+                          monoids, seg_op=seg_op)
+
+
+# ---------------------------------------------------------------------------
 # Layout-level dataflow pieces (what engines compose)
 # ---------------------------------------------------------------------------
 
-def emit_messages(program: VCProgram, layout: EdgeLayout, vprops, active
-                  ) -> Tuple[RecordBatch, jnp.ndarray]:
+def edge_active(layout: EdgeLayout, active) -> jnp.ndarray:
+    """Per-edge frontier flags in LAYOUT order: src on the frontier and
+    the slot not padding. Computed ONCE per plane invocation and shared
+    by the emit veto, the permuted combine mask, the sparse-arm
+    compaction and the block-skip bitmap (aliased layouts reuse it
+    instead of re-gathering `active`)."""
+    flags = jnp.take(frontier_mask(active), layout.src, axis=0)
+    if layout.valid_mask is not None:
+        flags = flags & layout.valid_mask
+    return flags
+
+
+def emit_messages(program: VCProgram, layout: EdgeLayout, vprops, active,
+                  src_active=None) -> Tuple[RecordBatch, jnp.ndarray]:
     """Phase 3 on the layout's own edge order: gather src props, vmap the
-    user's emit, veto inactive sources and padded slots.
+    user's emit, veto inactive sources and padded slots. `src_active` is
+    the hoisted per-edge frontier mask (see :func:`edge_active`); it is
+    derived here when the caller has not already computed it.
 
     Returns (msgs, valid) in LAYOUT order (not necessarily combine order).
     """
+    if src_active is None:
+        src_active = edge_active(layout, active)
     src_prop = records.tree_gather(vprops, layout.src)
     is_emit, msgs = jax.vmap(program.emit_message)(
         layout.emit_src_ids, layout.emit_dst_ids, src_prop, layout.eprops)
-    valid = is_emit.astype(bool) & jnp.take(active, layout.src, axis=0)
-    if layout.valid_mask is not None:
-        valid = valid & layout.valid_mask
+    valid = is_emit.astype(bool) & src_active
     return msgs, valid
 
 
@@ -250,26 +364,52 @@ def _program_monoids(program: VCProgram):
     return leaf_monoids(program, program.empty_message())
 
 
-def fused_applicable(program: VCProgram, layout: EdgeLayout, vprops) -> bool:
+def _has_vector_leaves(program: VCProgram, cv: EdgeLayout, vprops) -> bool:
+    """Any [V, D] vertex-property or [E, D] message leaf? (Those are
+    packed-variant-only: a vector leaf spans D slab columns.)"""
+    from repro.kernels.fused_gather_emit import _emit_schema
+    if any(jnp.ndim(a) > 1 for a in jax.tree.leaves(vprops)):
+        return True
+    try:
+        emit_sds = _emit_schema(program.emit_message, cv.num_edges, vprops,
+                                cv.eprops)
+    except Exception:
+        return False
+    return any(len(s.shape) > 1 for s in jax.tree.leaves(emit_sds[1]))
+
+
+def fused_applicable(program: VCProgram, layout: EdgeLayout, vprops,
+                     multileaf: str = "auto", has_vec: bool | None = None
+                     ) -> bool:
     """Static check: can this (program, layout) pair run as ONE fused
     kernel pass? Needs named monoids (one for the record or one per
-    leaf), scalar record leaves, and a combine-ordered view of the edge
-    set (the layout itself or its canonical alias). Delegates to the
-    kernel's own `fusable` predicate so the gate and the kernel's schema
-    validation can never drift apart."""
+    leaf), [N]-or-[N, D] record leaves (vector leaves only when the
+    packed variant will run), and a combine-ordered view of the edge set
+    (the layout itself or its canonical alias). Delegates to the kernel's
+    own `fusable` predicate so the gate and the kernel's schema
+    validation can never drift apart. `has_vec` lets the dispatcher pass
+    a precomputed :func:`_has_vector_leaves` (it needs an emit-schema
+    eval_shape) instead of re-deriving it here."""
     cv = layout.combine_view
     if cv is None:
         return False
     mono = _program_monoids(program)
     if mono is None:
         return False
+    if has_vec is None:
+        has_vec = _has_vector_leaves(program, cv, vprops)
+    n_leaves = len(mono) if isinstance(mono, tuple) else 1
+    will_pack = multileaf != "perleaf" and (
+        n_leaves > 1 or multileaf == "packed" or has_vec)
+    if has_vec and not will_pack:
+        return False  # per-leaf scalar launches cannot carry vector leaves
     from repro.kernels.fused_gather_emit import fusable
     return fusable(program.emit_message, mono, vprops, cv.eprops,
-                   cv.num_edges, cv.num_segments)
+                   cv.num_edges, cv.num_segments, allow_vector=will_pack)
 
 
 def _per_leaf_fused(program: VCProgram, layout: EdgeLayout, vprops, active,
-                    monoids, prefetch):
+                    monoids, prefetch, block_skip):
     """k scalar-kernel launches, one message leaf each — the baseline the
     packed multi-leaf pass collapses into one launch (kept for the
     multileaf="perleaf" bench/verification path)."""
@@ -288,23 +428,29 @@ def _per_leaf_fused(program: VCProgram, layout: EdgeLayout, vprops, active,
             layout.eprops, active, layout.num_segments,
             valid=layout.valid_mask,
             src_ids=layout.src_ids, dst_ids=layout.dst_ids,
-            prefetch=prefetch)
+            prefetch=prefetch, block_skip=block_skip)
         out_leaves.append(inbox_j["leaf"])
         has_msg = hm_j if has_msg is None else has_msg
     return jax.tree.unflatten(mdef, out_leaves), has_msg
 
 
 def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
-                        active, empty: Record, multileaf: str = "auto"):
+                        active, empty: Record, multileaf: str = "auto",
+                        block_skip: bool = False,
+                        has_vec: bool | None = None):
     """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
     and fold into per-vertex inboxes inside a single Pallas kernel — no
     E-sized message materialization in HBM. `layout` must be the
     combine-ordered view.
 
-    Records with several leaves (or a per-leaf monoid table) run the
-    PACKED variant by default: dtype-grouped vprops slabs and
-    (dtype, monoid)-grouped message panels make the whole record ONE
-    launch. multileaf="perleaf" forces the k-launch baseline instead.
+    Records with several leaves (or a per-leaf monoid table, or vector
+    [., D] leaves) run the PACKED variant by default: dtype-grouped
+    vprops slabs and (dtype, monoid)-grouped message panels make the
+    whole record ONE launch. multileaf="perleaf" forces the k-launch
+    baseline instead. block_skip=True is the frontier-sparse shape: the
+    kernels prefetch a per-edge-block any_active bitmap and early-out
+    whole blocks (bit-identical; works for the resident, scalar-prefetch
+    and packed variants alike).
     """
     from repro.kernels import ops as kops
     from repro.kernels.fused_gather_emit import make_pack_spec
@@ -315,11 +461,14 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
         prefetch = (layout.prefetch_blocks, layout.prefetch_window,
                     PREFETCH_BLOCK_E)
 
+    active = frontier_mask(active)
     monoids = leaf_monoids(program, empty)
+    if has_vec is None:
+        has_vec = _has_vector_leaves(program, layout, vprops)
     if multileaf == "perleaf":
         inbox, has_msg = _per_leaf_fused(program, layout, vprops, active,
-                                         monoids, prefetch)
-    elif len(monoids) > 1 or multileaf == "packed":
+                                         monoids, prefetch, block_skip)
+    elif len(monoids) > 1 or multileaf == "packed" or has_vec:
         pack = layout.pack
         if pack is None:
             pack = make_pack_spec(program.emit_message, monoids, vprops,
@@ -329,14 +478,14 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
             vprops, layout.eprops, active, layout.num_segments,
             valid=layout.valid_mask,
             src_ids=layout.src_ids, dst_ids=layout.dst_ids,
-            prefetch=prefetch, pack=pack)
+            prefetch=prefetch, pack=pack, block_skip=block_skip)
     else:
         inbox, has_msg = kops.gather_emit_combine(
             program.emit_message, monoids[0], layout.src, layout.dst,
             vprops, layout.eprops, active, layout.num_segments,
             valid=layout.valid_mask,
             src_ids=layout.src_ids, dst_ids=layout.dst_ids,
-            prefetch=prefetch)
+            prefetch=prefetch, block_skip=block_skip)
     # normalize no-message vertices to the user's exact empty record
     empty_v = records.tree_tile(empty, layout.num_segments)
     return records.tree_where(has_msg, inbox, empty_v), has_msg
@@ -348,9 +497,13 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
 
 def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
                      empty: Record, *, kernel_on: bool = False,
-                     mode: str = "auto", multileaf: str = "auto"
+                     mode: str = "auto", multileaf: str = "auto",
+                     frontier: str = "dense"
                      ) -> Tuple[RecordBatch, jnp.ndarray]:
     """Run the whole message plane (Phase 3 + Phase 1) for one iteration.
+
+    `active` is the frontier — a :class:`~repro.core.vcprog.Frontier` or
+    a bare [num_vertices] bool mask.
 
     Dispatch (static — every branch resolves at trace time):
       mode="auto"     fuse into one kernel pass when `kernel_on` and the
@@ -366,6 +519,23 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
     vprops slabs, per-(dtype, monoid) message panels), "perleaf" forces
     the k-launch baseline, "packed" forces packing even for one leaf.
 
+    frontier ("auto"|"dense"|"sparse") is the sparse fast path — the
+    push/pull density idea promoted into the plane, so every engine (and
+    every distributed bucket) inherits it:
+      "dense"   every pass covers all E edge slots (historical behavior).
+      "auto"    fused passes consult a per-edge-block any_active bitmap
+                and skip dead blocks; unfused named-monoid passes compact
+                the active edge set into a `workset_capacity(E)`-slot
+                workset under `lax.cond` (dense fallback above the
+                crossover). Bit-identical to dense by construction.
+      "sparse"  force the sparse shape of the dispatched path: block-skip
+                when the fused kernel runs, otherwise the compaction arm
+                at full (E-slot) capacity — always exact (pin the
+                compaction arm with kernel_on=False / mode="unfused").
+    General (merge_message-only) monoids always run dense: their combine
+    is the flagged scan, whose cost is structural, and re-deriving its
+    tree shape per superstep would cost more than it saves.
+
     Returns (inbox [num_segments] record batch, has_msg [num_segments]).
     """
     if mode not in _MODES:
@@ -373,13 +543,51 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
     if multileaf not in _MULTILEAF:
         raise ValueError(
             f"multileaf must be one of {_MULTILEAF}, got {multileaf!r}")
+    frontier = resolve_frontier_mode(frontier)
     want_fused = mode == "fused" or (mode == "auto" and kernel_on)
-    if want_fused and fused_applicable(program, layout, vprops):
-        return _fused_emit_combine(program, layout.combine_view, vprops,
-                                   active, empty, multileaf)
+    if want_fused:
+        cv0 = layout.combine_view
+        # one emit-schema eval_shape per dispatch, shared by the gate and
+        # the fused pass
+        has_vec = (_has_vector_leaves(program, cv0, vprops)
+                   if cv0 is not None else False)
+        if fused_applicable(program, layout, vprops, multileaf,
+                            has_vec=has_vec):
+            return _fused_emit_combine(program, cv0, vprops, active, empty,
+                                       multileaf,
+                                       block_skip=frontier != "dense",
+                                       has_vec=has_vec)
     if mode == "fused":
         raise ValueError(
             "mode='fused' but the program/layout pair is not fusable "
             "(needs named monoids and scalar record leaves)")
-    msgs, valid = emit_messages(program, layout, vprops, active)
+
+    # unfused dataflow: the per-edge frontier mask is computed ONCE (in
+    # layout order) and shared by the emit veto, the permuted combine
+    # mask and the sparse arm
+    src_active = edge_active(layout, active)
+    monoids = leaf_monoids(program, empty)
+    cv = layout.combine_view
+    if (frontier != "dense" and monoids is not None
+            and cv.num_edges > 0 and cv.num_segments > 0):
+        # frontier flags in combine order (one permute of the hoisted mask)
+        act_e = (src_active if layout.perm is None
+                 else jnp.take(src_active, layout.perm, axis=0))
+        cap = workset_capacity(
+            cv.num_edges, 1.0 if frontier == "sparse" else SPARSE_CAP_FRAC)
+        sparse_fn = lambda _: _sparse_emit_combine(
+            program, cv, vprops, empty, kernel_on, monoids, act_e, cap)
+        if frontier == "sparse" or cap >= cv.num_edges:
+            return sparse_fn(None)
+
+        def dense_fn(_):
+            msgs, valid = emit_messages(program, layout, vprops, active,
+                                        src_active=src_active)
+            return combine(program, layout, msgs, valid, empty, kernel_on)
+
+        n_act = jnp.sum(act_e.astype(jnp.int32))
+        return jax.lax.cond(n_act <= cap, sparse_fn, dense_fn, operand=None)
+
+    msgs, valid = emit_messages(program, layout, vprops, active,
+                                src_active=src_active)
     return combine(program, layout, msgs, valid, empty, kernel_on)

@@ -151,19 +151,48 @@ def resolve_permutation(strategy: str, src, dst,
     return best_perm
 
 
-def apply_reorder(g: PropertyGraph, strategy: str
-                  ) -> Tuple[PropertyGraph, Optional[np.ndarray],
-                             Optional[np.ndarray]]:
-    """Relabel a PropertyGraph under `strategy`.
+def partitioned_rcm_permutation(src, dst, num_vertices: int,
+                                num_parts: int) -> np.ndarray:
+    """Block-diagonal RCM for the distributed partitioner: every vertex
+    stays in its contiguous part range [p·v_pp, (p+1)·v_pp) — part
+    ownership (and therefore the bucket structure) is unchanged — but ids
+    WITHIN each part are RCM-ordered over the part-induced subgraph, so
+    each bucket's src runs become banded and per-bucket prefetch windows
+    shrink the way the single-device windows do under global RCM.
 
-    Returns (graph, perm, inv_perm); (g, None, None) when the strategy is
-    "none" (or degenerates to the identity), so callers can branch on
-    `perm is None`. Edge/vertex properties stay aligned: the relabeled
-    edge list is handed to `from_edges` with the old canonical-order
-    props, and vertex props are gathered with `perm`.
+    Ranges use the same ceil(V/P) stride as `graph.partition_graph`, so
+    applying this permutation before partitioning is safe by
+    construction. Cross-part edges don't influence the within-part order
+    (their locality is owned by the partitioner, not the relabeling).
     """
-    perm = resolve_permutation(strategy, g.src, g.dst, g.num_vertices)
-    if perm is None or np.array_equal(perm, np.arange(g.num_vertices)):
+    V, P = int(num_vertices), int(num_parts)
+    if V == 0:
+        return np.zeros((0,), np.int64)
+    v_pp = -(-V // P)
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    perm = np.arange(V, dtype=np.int64)
+    for p in range(P):
+        lo, hi = p * v_pp, min((p + 1) * v_pp, V)
+        if lo >= hi:
+            break
+        keep = (src >= lo) & (src < hi) & (dst >= lo) & (dst < hi)
+        local = rcm_permutation(src[keep] - lo, dst[keep] - lo, hi - lo)
+        perm[lo:hi] = local + lo
+    return perm
+
+
+def apply_permutation(g: PropertyGraph, perm: np.ndarray
+                      ) -> Tuple[PropertyGraph, Optional[np.ndarray],
+                                 Optional[np.ndarray]]:
+    """Relabel a PropertyGraph under an explicit permutation
+    (perm[new_id] = old_id). Returns (graph, perm, inv_perm);
+    (g, None, None) when the permutation is the identity. Edge/vertex
+    properties stay aligned: the relabeled edge list is handed to
+    `from_edges` with the old canonical-order props, and vertex props are
+    gathered with `perm`."""
+    perm = np.asarray(perm, np.int64)
+    if np.array_equal(perm, np.arange(g.num_vertices)):
         return g, None, None
     inv = _inverse(perm)
     g2 = from_edges(inv[g.src], inv[g.dst], g.num_vertices,
@@ -173,3 +202,18 @@ def apply_reorder(g: PropertyGraph, strategy: str
                     directed=True)  # both directions already materialized
     g2.directed = g.directed
     return g2, perm, inv
+
+
+def apply_reorder(g: PropertyGraph, strategy: str
+                  ) -> Tuple[PropertyGraph, Optional[np.ndarray],
+                             Optional[np.ndarray]]:
+    """Relabel a PropertyGraph under `strategy`.
+
+    Returns (graph, perm, inv_perm); (g, None, None) when the strategy is
+    "none" (or degenerates to the identity), so callers can branch on
+    `perm is None`.
+    """
+    perm = resolve_permutation(strategy, g.src, g.dst, g.num_vertices)
+    if perm is None:
+        return g, None, None
+    return apply_permutation(g, perm)

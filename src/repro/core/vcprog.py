@@ -46,6 +46,55 @@ class SegmentMeta(NamedTuple):
     has_edge: jnp.ndarray
 
 
+# ---------------------------------------------------------------------------
+# Frontier — the changed-vertex set, as a first-class value
+# ---------------------------------------------------------------------------
+
+class Frontier(NamedTuple):
+    """The frontier of one superstep: which vertices came out of the
+    apply/compute phase active (``vertex_compute``'s is_active, masked to
+    the processed set), plus its precomputed population count.
+
+    Historically the mask was threaded through the engines as a bare
+    ``active`` array and consumed exactly once, as an emit-side veto
+    (``valid &= active[src]``). Making it a first-class value lets the
+    message plane *dispatch* on it — compacting the active out-edges into
+    a workset, skipping whole edge blocks in the fused kernels, and
+    shipping only changed boundary vertices in the distributed schedules.
+    The mask feeds the push/pull heuristic and the per-edge frontier
+    flags; the count is the popcount the distributed engine computes once
+    per superstep and reuses for both the delta-exchange crossover conds
+    and the global termination psum.
+
+      mask:  [V] bool — vertex is in the frontier.
+      count: scalar int32 — jnp.sum(mask).
+    """
+
+    mask: jnp.ndarray
+    count: jnp.ndarray
+
+
+def make_frontier(mask) -> Frontier:
+    """Wrap an active mask as a Frontier (count computed here, once)."""
+    if isinstance(mask, Frontier):
+        return mask
+    mask = jnp.asarray(mask).astype(bool)
+    return Frontier(mask=mask, count=jnp.sum(mask.astype(jnp.int32)))
+
+
+def frontier_mask(active) -> jnp.ndarray:
+    """The bare [V] bool mask of a Frontier-or-mask value."""
+    return active.mask if isinstance(active, Frontier) else active
+
+
+def frontier_count(active) -> jnp.ndarray:
+    """Population count of a Frontier-or-mask value (reuses the
+    precomputed count when available)."""
+    if isinstance(active, Frontier):
+        return active.count
+    return jnp.sum(jnp.asarray(active).astype(jnp.int32))
+
+
 def make_segment_meta(dst: jnp.ndarray, num_segments: int,
                       valid: Optional[jnp.ndarray] = None) -> SegmentMeta:
     """Traced fallback for callers without host-side precompute.

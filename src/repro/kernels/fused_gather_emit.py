@@ -18,9 +18,10 @@ Layout contract (the framework's canonical order):
     is skipped via `@pl.when` unless the block's dst range overlaps.
     Padded edge slots of pre-padded layouts (distributed buckets) must
     carry a sentinel dst >= num_segments so sortedness survives padding.
-  * vertex-property leaves are [V] scalars-per-vertex (records are pytrees
-    of scalars); message leaves are [E] after vmap. Callers with vector
-    leaves fall back to the unfused path.
+  * vertex-property leaves are [V] scalars-per-vertex for the scalar
+    kernel; message leaves are [E] after vmap. The PACKED variant also
+    accepts vector leaves ([V, D] / [E, D] — D consecutive slab columns);
+    anything else falls back to the unfused path.
   * `valid` (optional [E] mask) vetoes emissions of padded slots; `src_ids`
     / `dst_ids` (optional [E]) are the endpoint ids handed to `emit_fn`
     when they differ from the gather/combine indices (distributed buckets
@@ -70,9 +71,11 @@ def _ident_for(dtype, monoid: str):
 
 def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
             idents, acc_dtypes, block_v, n_e, num_edges, block_e,
-            has_valid, has_ids, window):
+            has_valid, has_ids, window, blockskip):
     if window:
         win_ref, refs = refs[0], refs[1:]
+    if blockskip:
+        bm_ref, refs = refs[0], refs[1:]
     seg_ref, src_ref = refs[0], refs[1]
     k = 2
     if has_valid:
@@ -104,6 +107,12 @@ def _kernel(*refs, emit_fn, monoid, n_vp, n_ep, n_msg, vp_def, ep_def,
     seg = seg_ref[...]  # [BE] int32 dst ids, sorted (pads = sentinel)
     v_lo = iv * block_v
     overlap = (seg[-1] >= v_lo) & (seg[0] < v_lo + block_v)
+    if blockskip:
+        # frontier block-skip: the prefetched per-edge-block any_active
+        # bitmap says no src in this block is on the frontier — every
+        # emission would be vetoed, so the whole block contributes only
+        # identities and can be skipped (bit-identical to running it)
+        overlap &= bm_ref[ie] > 0
 
     @pl.when(overlap)
     def _compute():
@@ -194,22 +203,33 @@ def _emit_schema(emit_fn, num_edges: int, vprops, eprops):
                      eprops))
 
 
-def _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops) -> bool:
+def _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops,
+               allow_vector: bool = False) -> bool:
     E, V = int(num_edges), int(num_vertices)
-    return (all(s.shape == (E,) for s in jax.tree.leaves(emit_sds[1]))
-            and all(a.shape == (V,) for a in jax.tree.leaves(vprops))
+
+    def ok(shape, n):
+        if shape == (n,):
+            return True
+        return (allow_vector and len(shape) == 2 and shape[0] == n
+                and shape[1] >= 1)
+
+    return (all(ok(s.shape, E) for s in jax.tree.leaves(emit_sds[1]))
+            and all(ok(a.shape, V) for a in jax.tree.leaves(vprops))
             and all(a.shape == (E,) for a in jax.tree.leaves(eprops)))
 
 
 def fusable(emit_fn, monoid, vprops, eprops, num_edges: int,
-            num_vertices: int) -> bool:
+            num_vertices: int, allow_vector: bool = False) -> bool:
     """THE applicability predicate for the fused kernel — the same schema
     check gather_emit_combine enforces, so a True here can never turn
     into a trace-time ValueError there.
 
     `monoid` is either one named-monoid string (every leaf combines the
     same way, scalar kernel) or a tuple of per-leaf names in the flattened
-    message order (the packed multi-leaf kernel's per-slice table)."""
+    message order (the packed multi-leaf kernel's per-slice table).
+    `allow_vector` admits [V, D] vertex-property and [E, D] message leaves
+    — legal only for the PACKED variant, where a vector leaf occupies D
+    consecutive slab columns."""
     if isinstance(monoid, (tuple, list)):
         if not monoid or any(m not in _NAMED for m in monoid):
             return False
@@ -224,12 +244,24 @@ def fusable(emit_fn, monoid, vprops, eprops, num_edges: int,
     if isinstance(monoid, (tuple, list)) \
             and len(monoid) != len(jax.tree.leaves(emit_sds[1])):
         return False
-    return _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops)
+    return _schema_ok(emit_sds, num_edges, num_vertices, vprops, eprops,
+                      allow_vector=allow_vector)
+
+
+def _block_active(active, src, valid, pad_e, n_e: int, be: int):
+    """Per-edge-block frontier bitmap [n_e] int32: does any edge in the
+    block have an active src (and a valid slot)? Computed on device each
+    superstep — one cheap [E] int gather + a blocked max."""
+    flag = jnp.take(active.astype(jnp.int32), src.astype(jnp.int32), axis=0)
+    if valid is not None:
+        flag = flag * valid.astype(jnp.int32)
+    return pad_e(flag, 0).reshape(n_e, be).max(axis=1)
 
 
 def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
                         active, num_vertices: int, *, valid=None,
                         src_ids=None, dst_ids=None, prefetch=None,
+                        block_skip: bool = False,
                         block_v: int = 128, block_e: int = 512,
                         interpret=None):
     """Single-pass message plane over combine-ordered (dst-sorted) edges.
@@ -241,7 +273,10 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
     valid / src_ids / dst_ids: see the module docstring (pre-padded and
     globally-addressed layouts). prefetch=(block_idx, window, table_be)
     selects the scalar-prefetch variant; `block_e` is then forced to the
-    table's block size.
+    table's block size. block_skip=True prefetches a per-edge-block
+    frontier bitmap and early-outs whole blocks with no active src —
+    bit-identical to the dense pass (skipped blocks contribute only
+    identities), cost proportional to the frontier's block footprint.
     """
     if monoid not in ("sum", "min", "max"):
         raise ValueError(f"fused kernel needs a named monoid, got {monoid!r}")
@@ -283,8 +318,11 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
 
     n_e = E_pad // be
     grid = (V_pad // bv, n_e)
-    e_spec = pl.BlockSpec((be,), lambda iv, ie: (ie,))
-    out_spec = pl.BlockSpec((bv,), lambda iv, ie: (iv,))
+    # index maps are variadic in the trailing scalar-prefetch refs, so the
+    # same lambdas serve the plain grid, the window table, the block-skip
+    # bitmap, and their combination
+    e_spec = pl.BlockSpec((be,), lambda iv, ie, *_: (ie,))
+    out_spec = pl.BlockSpec((bv,), lambda iv, ie, *_: (iv,))
     if window:
         # vertex rows are windowed: each edge block DMAs the slab PAIR
         # (win[ie], win[ie]+1) of `window` rows each; pad vertex leaves
@@ -292,17 +330,15 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
         VW_pad = (max(pl.cdiv(V, window), 1) + 1) * window
         pad_v = lambda a, fill: jnp.pad(a, (0, VW_pad - a.shape[0]),
                                         constant_values=fill)
-        v_specs = [pl.BlockSpec((window,), lambda iv, ie, win: (win[ie],)),
+        v_specs = [pl.BlockSpec((window,), lambda iv, ie, win, *_: (win[ie],)),
                    pl.BlockSpec((window,),
-                                lambda iv, ie, win: (win[ie] + 1,))]
-        e_spec = pl.BlockSpec((be,), lambda iv, ie, win: (ie,))
-        out_spec = pl.BlockSpec((bv,), lambda iv, ie, win: (iv,))
+                                lambda iv, ie, win, *_: (win[ie] + 1,))]
         win_p = jnp.pad(win_idx.astype(jnp.int32),
                         (0, n_e - int(win_idx.shape[0])))
     else:
         pad_v = lambda a, fill: jnp.pad(a, (0, V_pad - a.shape[0]),
                                         constant_values=fill)
-        v_specs = [pl.BlockSpec((V_pad,), lambda iv, ie: (0,))]
+        v_specs = [pl.BlockSpec((V_pad,), lambda iv, ie, *_: (0,))]
 
     act_p = pad_v(active.astype(jnp.int32), 0)
     vp_p = [pad_v(l, 0) for l in vp_leaves]
@@ -332,7 +368,8 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
         n_ep=len(ep_p), n_msg=len(msg_sds), vp_def=vp_def, ep_def=ep_def,
         idents=idents, acc_dtypes=acc_dtypes, block_v=bv, n_e=n_e,
         num_edges=E, block_e=be, has_valid=valid is not None,
-        has_ids=src_ids is not None or dst_ids is not None, window=window)
+        has_ids=src_ids is not None or dst_ids is not None, window=window,
+        blockskip=bool(block_skip))
     out_shape = tuple([jax.ShapeDtypeStruct((V_pad,), s.dtype)
                        for s in msg_sds]
                       + [jax.ShapeDtypeStruct((V_pad,), jnp.int32)])
@@ -340,23 +377,31 @@ def gather_emit_combine(emit_fn, monoid: str, src, dst, vprops, eprops,
                + [pltpu.VMEM((1, bv), jnp.int32)])
     params = _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
 
+    scalar_ops = []
     if window:
+        scalar_ops.append(win_p)
+    if block_skip:
+        scalar_ops.append(_block_active(active, src, valid, pad_e, n_e, be))
+    name = (f"gather_emit{'_prefetch' if window else ''}"
+            f"{'_skip' if block_skip else ''}_{monoid}")
+    if scalar_ops:
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            num_scalar_prefetch=len(scalar_ops), grid=grid,
+            in_specs=in_specs,
             out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
             scratch_shapes=scratch)
         outs = pl.pallas_call(
             body, grid_spec=grid_spec, out_shape=out_shape,
             compiler_params=params, interpret=bool(interpret),
-            name=f"gather_emit_prefetch_{monoid}",
-        )(win_p, *operands)
+            name=name,
+        )(*scalar_ops, *operands)
     else:
         outs = pl.pallas_call(
             body, grid=grid, in_specs=in_specs,
             out_specs=tuple([out_spec] * (len(msg_sds) + 1)),
             out_shape=out_shape, scratch_shapes=scratch,
             compiler_params=params, interpret=bool(interpret),
-            name=f"gather_emit_{monoid}",
+            name=name,
         )(*operands)
 
     msg_out, hm = outs[:-1], outs[-1]
@@ -386,13 +431,14 @@ LANE_ALIGN = 8
 
 class PackSlot(NamedTuple):
     leaf: int     # flat leaf index in the record
-    offset: int   # column in the group's slab
+    offset: int   # first column in the group's slab
+    ncols: int = 1  # columns occupied ([E]/[V] scalar leaf = 1, [.., D] = D)
 
 
 class PackGroup(NamedTuple):
     dtype: str    # numpy dtype name shared by every leaf in the group
     monoid: str   # per-slice monoid ("" for vertex-property groups)
-    width: int    # lane-aligned slab width (>= number of slots)
+    width: int    # lane-aligned slab width (>= total slot columns)
     slots: Tuple[PackSlot, ...]
 
 
@@ -404,24 +450,33 @@ class PackSpec(NamedTuple):
     msg_groups: Tuple[PackGroup, ...]
 
 
-def _pack_groups(keys) -> Tuple[PackGroup, ...]:
+def _pack_groups(keys, ncols) -> Tuple[PackGroup, ...]:
     order = {}
     for i, k in enumerate(keys):
         order.setdefault(k, []).append(i)
     out = []
     for (dtype, monoid), idxs in order.items():
-        width = _ceil_to(len(idxs), LANE_ALIGN)
+        slots, off = [], 0
+        for i in idxs:
+            slots.append(PackSlot(leaf=i, offset=off, ncols=int(ncols[i])))
+            off += int(ncols[i])
         out.append(PackGroup(
-            dtype=dtype, monoid=monoid, width=width,
-            slots=tuple(PackSlot(leaf=i, offset=o)
-                        for o, i in enumerate(idxs))))
+            dtype=dtype, monoid=monoid, width=_ceil_to(off, LANE_ALIGN),
+            slots=tuple(slots)))
     return tuple(out)
+
+
+def _leaf_cols(sds) -> int:
+    """Slab columns a record leaf occupies: 1 for [N], D for [N, D]."""
+    return 1 if len(sds.shape) == 1 else int(sds.shape[1])
 
 
 def make_pack_spec(emit_fn, monoids, vprops, eprops, num_edges: int
                    ) -> PackSpec:
     """Group vertex-property leaves by dtype and message leaves by
-    (dtype, monoid); computed host-side once per (program, layout) pair."""
+    (dtype, monoid); computed host-side once per (program, layout) pair.
+    Vector ([N, D]) leaves occupy D consecutive columns of their group's
+    slab."""
     vp_sds = jax.tree.leaves(jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), vprops))
     msg_sds = jax.tree.leaves(
@@ -431,27 +486,43 @@ def make_pack_spec(emit_fn, monoids, vprops, eprops, num_edges: int
             f"per-leaf monoid table has {len(monoids)} entries for "
             f"{len(msg_sds)} message leaves")
     return PackSpec(
-        vp_groups=_pack_groups([(s.dtype.name, "") for s in vp_sds]),
+        vp_groups=_pack_groups([(s.dtype.name, "") for s in vp_sds],
+                               [_leaf_cols(s) for s in vp_sds]),
         msg_groups=_pack_groups([(s.dtype.name, m)
-                                 for s, m in zip(msg_sds, monoids)]))
+                                 for s, m in zip(msg_sds, monoids)],
+                                [_leaf_cols(s) for s in msg_sds]))
 
 
 def _pack_cols(leaves, group: PackGroup, fill):
-    """[E] leaves -> one [E, width] slab in the group dtype."""
-    cols = [None] * group.width
-    for slot in group.slots:
-        cols[slot.offset] = leaves[slot.leaf]
+    """[N] / [N, D] leaves -> one [N, width] slab in the group dtype.
+    Slot offsets are assigned contiguously in slot order, so the slab is
+    a concatenation of the (column-expanded) leaves plus lane padding."""
+    dt = jnp.dtype(group.dtype)
     n = leaves[group.slots[0].leaf].shape[0]
-    pad = jnp.full((n,), fill, jnp.dtype(group.dtype))
-    return jnp.stack([pad if c is None else c.astype(jnp.dtype(group.dtype))
-                      for c in cols], axis=1)
+    pieces, col = [], 0
+    for slot in sorted(group.slots, key=lambda s: s.offset):
+        leaf = leaves[slot.leaf].astype(dt)
+        pieces.append(leaf[:, None] if leaf.ndim == 1 else leaf)
+        col += slot.ncols
+    if group.width > col:
+        pieces.append(jnp.full((n, group.width - col), fill, dt))
+    return jnp.concatenate(pieces, axis=1)
+
+
+def _unpack_slot(slab, slot: PackSlot):
+    """The slot's columns of a slab, in the leaf's own rank."""
+    if slot.ncols == 1:
+        return slab[:, slot.offset]
+    return slab[:, slot.offset:slot.offset + slot.ncols]
 
 
 def _packed_kernel(*refs, emit_fn, pack, vp_def, n_ep, ep_def,
                    idents, acc_dtypes, block_v, n_e, num_edges, block_e,
-                   has_valid, has_ids, window):
+                   has_valid, has_ids, window, blockskip):
     if window:
         win_ref, refs = refs[0], refs[1:]
+    if blockskip:
+        bm_ref, refs = refs[0], refs[1:]
     seg_ref, src_ref = refs[0], refs[1]
     k = 2
     if has_valid:
@@ -484,6 +555,10 @@ def _packed_kernel(*refs, emit_fn, pack, vp_def, n_ep, ep_def,
     seg = seg_ref[...]  # [BE] int32 dst ids, sorted (pads = sentinel)
     v_lo = iv * block_v
     overlap = (seg[-1] >= v_lo) & (seg[0] < v_lo + block_v)
+    if blockskip:
+        # frontier block-skip (see _kernel): no active src in this edge
+        # block means only identity contributions — skip it entirely
+        overlap &= bm_ref[ie] > 0
 
     @pl.when(overlap)
     def _compute():
@@ -516,7 +591,7 @@ def _packed_kernel(*refs, emit_fn, pack, vp_def, n_ep, ep_def,
         sp_leaves = [None] * sum(len(g.slots) for g in pack.vp_groups)
         for g, slab in zip(pack.vp_groups, slabs):
             for slot in g.slots:
-                sp_leaves[slot.leaf] = slab[:, slot.offset]
+                sp_leaves[slot.leaf] = _unpack_slot(slab, slot)
         ep_leaves = [r[...] for r in ep_refs]
 
         src_prop = jax.tree.unflatten(vp_def, sp_leaves)
@@ -548,16 +623,18 @@ def _packed_kernel(*refs, emit_fn, pack, vp_def, n_ep, ep_def,
                     preferred_element_type=adt)  # [BV, Wg]
             else:
                 # reduce only the occupied columns (offsets are the
-                # prefix 0..n-1); lane-pad columns hold the identity from
-                # _init and are never read back by the unpack
+                # prefix 0..sum(ncols)-1); lane-pad columns hold the
+                # identity from _init and are never read back
                 ident_col = jnp.full((block_v,), ident, adt)
                 cols = [ident_col] * g.width
                 for slot in g.slots:
-                    sel = jnp.where(hit, panel[:, slot.offset][:, None],
-                                    jnp.asarray(ident, adt))
-                    cols[slot.offset] = (jnp.min(sel, axis=0)
-                                         if g.monoid == "min"
-                                         else jnp.max(sel, axis=0))
+                    for j in range(slot.ncols):
+                        c = slot.offset + j
+                        sel = jnp.where(hit, panel[:, c][:, None],
+                                        jnp.asarray(ident, adt))
+                        cols[c] = (jnp.min(sel, axis=0)
+                                   if g.monoid == "min"
+                                   else jnp.max(sel, axis=0))
                 red = jnp.stack(cols, axis=1)  # [BV, Wg]
                 op = jnp.minimum if g.monoid == "min" else jnp.maximum
                 acc[...] = op(acc[...], red)
@@ -576,6 +653,7 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
                                active, num_vertices: int, *, valid=None,
                                src_ids=None, dst_ids=None, prefetch=None,
                                pack: PackSpec | None = None,
+                               block_skip: bool = False,
                                block_v: int = 128, block_e: int = 512,
                                interpret=None):
     """Packed multi-leaf single-pass message plane (combine-ordered edges).
@@ -587,6 +665,8 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
     properties are packed into per-dtype [V, W] slabs and messages into
     per-(dtype, monoid) panels, so the whole record costs ONE launch, one
     row gather per slab per edge block, and one MXU matmul per sum group.
+    Vector leaves ([V, D] vertex properties / [E, D] messages) occupy D
+    consecutive slab columns. block_skip: see gather_emit_combine.
     """
     monoids = tuple(monoids)
     if any(m not in _NAMED for m in monoids):
@@ -602,8 +682,9 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
     emit_sds = _emit_schema(emit_fn, E, vprops, eprops)
     msg_sds = jax.tree.leaves(emit_sds[1])
     msg_def = jax.tree.structure(emit_sds[1])
-    if not _schema_ok(emit_sds, E, V, vprops, eprops):
-        raise ValueError("fused kernel needs scalar record leaves")
+    if not _schema_ok(emit_sds, E, V, vprops, eprops, allow_vector=True):
+        raise ValueError(
+            "packed fused kernel needs [N] or [N, D] record leaves")
     if pack is None:
         pack = make_pack_spec(emit_fn, monoids, vprops, eprops, E)
 
@@ -633,35 +714,32 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
 
     n_e = E_pad // be
     grid = (V_pad // bv, n_e)
-    e_spec = pl.BlockSpec((be,), lambda iv, ie: (ie,))
-    out_specs = [pl.BlockSpec((bv, g.width), lambda iv, ie: (iv, 0))
+    # variadic index maps: same lambdas for the plain grid and any
+    # combination of trailing scalar-prefetch refs (window table, bitmap)
+    e_spec = pl.BlockSpec((be,), lambda iv, ie, *_: (ie,))
+    out_specs = [pl.BlockSpec((bv, g.width), lambda iv, ie, *_: (iv, 0))
                  for g in pack.msg_groups]
-    hm_spec = pl.BlockSpec((bv,), lambda iv, ie: (iv,))
+    hm_spec = pl.BlockSpec((bv,), lambda iv, ie, *_: (iv,))
+    pad_rows = lambda a, fill, n: jnp.pad(
+        a, ((0, n - a.shape[0]),) + ((0, 0),) * (a.ndim - 1),
+        constant_values=fill)
     if window:
         VW_pad = (max(pl.cdiv(V, window), 1) + 1) * window
-        pad_rows = lambda a, fill, n: jnp.pad(
-            a, ((0, n - a.shape[0]),) + ((0, 0),) * (a.ndim - 1),
-            constant_values=fill)
-        act_specs = [pl.BlockSpec((window,), lambda iv, ie, win: (win[ie],)),
+        act_specs = [pl.BlockSpec((window,),
+                                  lambda iv, ie, win, *_: (win[ie],)),
                      pl.BlockSpec((window,),
-                                  lambda iv, ie, win: (win[ie] + 1,))]
+                                  lambda iv, ie, win, *_: (win[ie] + 1,))]
         slab_specs = lambda w: [
-            pl.BlockSpec((window, w), lambda iv, ie, win: (win[ie], 0)),
-            pl.BlockSpec((window, w), lambda iv, ie, win: (win[ie] + 1, 0))]
-        e_spec = pl.BlockSpec((be,), lambda iv, ie, win: (ie,))
-        out_specs = [pl.BlockSpec((bv, g.width), lambda iv, ie, win: (iv, 0))
-                     for g in pack.msg_groups]
-        hm_spec = pl.BlockSpec((bv,), lambda iv, ie, win: (iv,))
+            pl.BlockSpec((window, w), lambda iv, ie, win, *_: (win[ie], 0)),
+            pl.BlockSpec((window, w),
+                         lambda iv, ie, win, *_: (win[ie] + 1, 0))]
         win_p = jnp.pad(win_idx.astype(jnp.int32),
                         (0, n_e - int(win_idx.shape[0])))
         pad_v_rows = VW_pad
     else:
-        pad_rows = lambda a, fill, n: jnp.pad(
-            a, ((0, n - a.shape[0]),) + ((0, 0),) * (a.ndim - 1),
-            constant_values=fill)
-        act_specs = [pl.BlockSpec((V_pad,), lambda iv, ie: (0,))]
+        act_specs = [pl.BlockSpec((V_pad,), lambda iv, ie, *_: (0,))]
         slab_specs = lambda w: [pl.BlockSpec((V_pad, w),
-                                             lambda iv, ie: (0, 0))]
+                                             lambda iv, ie, *_: (0, 0))]
         pad_v_rows = V_pad
 
     act_p = pad_rows(active.astype(jnp.int32), 0, pad_v_rows)
@@ -693,7 +771,8 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
         n_ep=len(ep_p), ep_def=ep_def, idents=idents,
         acc_dtypes=acc_dtypes, block_v=bv, n_e=n_e, num_edges=E,
         block_e=be, has_valid=valid is not None,
-        has_ids=src_ids is not None or dst_ids is not None, window=window)
+        has_ids=src_ids is not None or dst_ids is not None, window=window,
+        blockskip=bool(block_skip))
     out_shape = tuple(
         [jax.ShapeDtypeStruct((V_pad, g.width), jnp.dtype(g.dtype))
          for g in pack.msg_groups]
@@ -703,29 +782,37 @@ def gather_emit_combine_packed(emit_fn, monoids, src, dst, vprops, eprops,
                + [pltpu.VMEM((1, bv), jnp.int32)])
     params = _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
 
+    scalar_ops = []
     if window:
+        scalar_ops.append(win_p)
+    if block_skip:
+        scalar_ops.append(_block_active(active, src, valid, pad_e, n_e, be))
+    name = (f"gather_emit_packed{'_prefetch' if window else ''}"
+            f"{'_skip' if block_skip else ''}")
+    if scalar_ops:
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            num_scalar_prefetch=len(scalar_ops), grid=grid,
+            in_specs=in_specs,
             out_specs=tuple(out_specs + [hm_spec]),
             scratch_shapes=scratch)
         outs = pl.pallas_call(
             body, grid_spec=grid_spec, out_shape=out_shape,
             compiler_params=params, interpret=bool(interpret),
-            name="gather_emit_packed_prefetch",
-        )(win_p, *operands)
+            name=name,
+        )(*scalar_ops, *operands)
     else:
         outs = pl.pallas_call(
             body, grid=grid, in_specs=in_specs,
             out_specs=tuple(out_specs + [hm_spec]),
             out_shape=out_shape, scratch_shapes=scratch,
             compiler_params=params, interpret=bool(interpret),
-            name="gather_emit_packed",
+            name=name,
         )(*operands)
 
     slab_out, hm = outs[:-1], outs[-1]
     inbox_leaves = [None] * len(msg_sds)
     for g, slab in zip(pack.msg_groups, slab_out):
         for slot in g.slots:
-            inbox_leaves[slot.leaf] = slab[:V, slot.offset]
+            inbox_leaves[slot.leaf] = _unpack_slot(slab[:V], slot)
     inbox = jax.tree.unflatten(msg_def, inbox_leaves)
     return inbox, hm[:V] > 0

@@ -43,6 +43,7 @@ def gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops, active,
     fused_gather_emit.py for the layout contract. Optional kw: `valid`
     (pre-padded layouts), `src_ids`/`dst_ids` (global emit ids),
     `prefetch=(block_idx, window, block_e)` (scalar-prefetch variant),
+    `block_skip=True` (frontier bitmap early-out of dead edge blocks),
     plus block sizes."""
     return _gather_emit_combine(emit_fn, monoid, src, dst, vprops, eprops,
                                 active, num_vertices,

@@ -1,0 +1,403 @@
+"""Frontier-sparse message plane: the engine × kernel × reorder ×
+frontier-mode matrix must be BIT-identical to the dense path, including
+zero-active and all-active supersteps, on every distributed schedule —
+plus units for the workset compaction, the block-skip kernels and the
+delta-exchange knob threading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import io as gio
+from repro.core import message_plane, records, vcprog
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.graph_device import (build_device_graph, workset_capacity,
+                                     SPARSE_CAP_FRAC)
+from repro.core.operators import (CCProgram, PageRankProgram, SSSPProgram,
+                                  sssp)
+
+ENGINES = ("pregel", "gas", "pushpull", "callback")
+
+
+# ---------------------------------------------------------------------------
+# Frontier value + compaction units
+# ---------------------------------------------------------------------------
+
+def test_make_frontier_counts_once():
+    mask = jnp.asarray([True, False, True, True])
+    fr = vcprog.make_frontier(mask)
+    assert int(fr.count) == 3
+    assert vcprog.make_frontier(fr) is fr  # idempotent
+    np.testing.assert_array_equal(np.asarray(vcprog.frontier_mask(fr)),
+                                  np.asarray(mask))
+    assert int(vcprog.frontier_count(mask)) == 3
+
+
+def test_workset_capacity_bounds():
+    assert workset_capacity(0) == 1
+    assert workset_capacity(4) == 4
+    assert workset_capacity(1000, 1.0) == 1000
+    cap = workset_capacity(1000)
+    assert cap % 8 == 0 and cap >= SPARSE_CAP_FRAC * 1000
+    assert workset_capacity(1000, 0.0001) == 8  # floor
+
+
+@pytest.mark.parametrize("n,cap", [(0, 1), (7, 7), (64, 16), (64, 64)])
+def test_compact_indices_matches_numpy(n, cap):
+    rng = np.random.default_rng(n + cap)
+    flag = rng.random(n) < 0.3
+    idx, count = message_plane.compact_indices(jnp.asarray(flag), cap)
+    idx, count = np.asarray(idx), int(count)
+    want = np.flatnonzero(flag)
+    assert count == want.size
+    k = min(count, cap)
+    np.testing.assert_array_equal(idx[:k], want[:k])  # order-preserving
+    assert (idx[k:] == n).all()  # sentinel pads
+
+
+# hypothesis is an OPTIONAL dev dependency; only the property test skips
+# when it is missing.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @given(flags=st.lists(st.booleans(), min_size=0, max_size=200),
+           frac=st.floats(min_value=0.05, max_value=1.0))
+    @settings(max_examples=40, deadline=None)
+    def test_property_compaction_round_trip(flags, frac):
+        """compact_indices is an exact, order-preserving round trip: the
+        workset names precisely the True positions (prefix under
+        capacity), sentinel-pads the tail, and scattering arange back
+        reconstructs the flag array."""
+        flag = np.asarray(flags, bool)
+        n = flag.shape[0]
+        cap = workset_capacity(n, frac)
+        idx, count = message_plane.compact_indices(jnp.asarray(flag), cap)
+        idx, count = np.asarray(idx), int(count)
+        want = np.flatnonzero(flag)
+        assert count == want.size
+        k = min(count, cap)
+        np.testing.assert_array_equal(idx[:k], want[:k])
+        assert (idx[k:] == n).all()
+        if count <= cap:  # exact regime: scatter back == original flags
+            back = np.zeros(n, bool)
+            back[idx[:k]] = True
+            np.testing.assert_array_equal(back, flag)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_compaction_round_trip():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Plane-level matrix: dense vs auto vs sparse, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dgraph(kernel_graph):
+    return build_device_graph(kernel_graph)
+
+
+def _setup(program, dg):
+    empty = jax.tree.map(jnp.asarray, program.empty_message())
+    vids = jnp.arange(dg.num_vertices, dtype=jnp.int32)
+    vprops = jax.vmap(program.init_vertex)(vids, dg.out_degree,
+                                           dg.vprops_in)
+    return empty, vprops
+
+
+@pytest.mark.parametrize("prog_cls", [lambda: SSSPProgram(0),
+                                      lambda: CCProgram(),
+                                      lambda: PageRankProgram(80, 5)])
+@pytest.mark.parametrize("kernel_on", [False, True])
+def test_plane_bit_identical_all_densities(prog_cls, kernel_on, dgraph):
+    """Every frontier mode × both layouts × {zero, thin, full} frontiers:
+    the inbox and has_msg are bitwise equal to dense (float sums
+    included)."""
+    prog = prog_cls()
+    empty, vprops = _setup(prog, dgraph)
+    V = dgraph.num_vertices
+    rng = np.random.default_rng(1)
+    for dens in (0.0, 0.04, 1.0):
+        active = jnp.asarray(rng.random(V) < dens) if 0 < dens < 1 \
+            else jnp.full((V,), bool(dens))
+        for layout in (dgraph.canonical, dgraph.src_sorted):
+            base = message_plane.emit_and_combine(
+                prog, layout, vprops, active, empty, kernel_on=kernel_on,
+                frontier="dense")
+            for fr in ("auto", "sparse"):
+                out = message_plane.emit_and_combine(
+                    prog, layout, vprops, active, empty,
+                    kernel_on=kernel_on, frontier=fr)
+                assert records.tree_equal(out[0], base[0]), \
+                    (type(prog).__name__, dens, fr, kernel_on)
+                np.testing.assert_array_equal(np.asarray(out[1]),
+                                              np.asarray(base[1]))
+
+
+def test_plane_accepts_frontier_value(dgraph):
+    """A vcprog.Frontier and a bare mask are interchangeable operands."""
+    prog = SSSPProgram(0)
+    empty, vprops = _setup(prog, dgraph)
+    mask = jnp.zeros((dgraph.num_vertices,), bool).at[0].set(True)
+    a = message_plane.emit_and_combine(prog, dgraph.canonical, vprops, mask,
+                                       empty, frontier="sparse")
+    b = message_plane.emit_and_combine(prog, dgraph.canonical, vprops,
+                                       vcprog.make_frontier(mask), empty,
+                                       frontier="sparse")
+    assert records.tree_equal(a[0], b[0])
+
+
+def test_bad_frontier_mode_raises(dgraph):
+    prog = SSSPProgram(0)
+    empty, vprops = _setup(prog, dgraph)
+    active = jnp.ones((dgraph.num_vertices,), bool)
+    with pytest.raises(ValueError, match="frontier"):
+        message_plane.emit_and_combine(prog, dgraph.canonical, vprops,
+                                       active, empty, frontier="bogus")
+
+
+def test_general_monoid_falls_back_to_dense(dgraph):
+    """General (merge_message-only) programs run the dense scan under any
+    frontier mode — same results, no compaction arm."""
+
+    class GeneralSSSP(SSSPProgram):
+        monoid = "general"
+
+    prog = GeneralSSSP(0)
+    empty, vprops = _setup(prog, dgraph)
+    active = jnp.zeros((dgraph.num_vertices,), bool).at[0].set(True)
+    base = message_plane.emit_and_combine(prog, dgraph.canonical, vprops,
+                                          active, empty, frontier="dense")
+    out = message_plane.emit_and_combine(prog, dgraph.canonical, vprops,
+                                         active, empty, frontier="sparse")
+    assert records.tree_equal(out[0], base[0])
+
+
+# ---------------------------------------------------------------------------
+# Block-skip fused kernels (resident / scalar-prefetch), kernel level
+# ---------------------------------------------------------------------------
+
+def test_block_skip_kernel_bit_identical():
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(11)
+    E, V = 1 << 12, 2048
+    dst = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    src = np.clip(dst + rng.integers(-32, 33, E), 0, V - 1).astype(np.int32)
+    vprops = {"rank": jnp.asarray(rng.random(V), jnp.float32)}
+    active = jnp.asarray(rng.random(V) < 0.02)
+    srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+
+    def emit(s, d, sp, ep):
+        return jnp.bool_(True), {"rank": sp["rank"]}
+
+    for monoid in ("sum", "min"):
+        base = kops.gather_emit_combine(emit, monoid, srcj, dstj, vprops,
+                                        {}, active, V)
+        skip = kops.gather_emit_combine(emit, monoid, srcj, dstj, vprops,
+                                        {}, active, V, block_skip=True)
+        assert records.tree_equal(skip[0], base[0]), monoid
+        np.testing.assert_array_equal(np.asarray(skip[1]),
+                                      np.asarray(base[1]))
+
+    # scalar-prefetch variant with the bitmap as a SECOND prefetch operand
+    from repro.core.graph_device import compute_prefetch_windows
+    blocks, window = compute_prefetch_windows(src, V)
+    assert window > 0
+    pf = (jnp.asarray(blocks), window, 512)
+    base = kops.gather_emit_combine(emit, "sum", srcj, dstj, vprops, {},
+                                    active, V, prefetch=pf)
+    skip = kops.gather_emit_combine(emit, "sum", srcj, dstj, vprops, {},
+                                    active, V, prefetch=pf, block_skip=True)
+    assert records.tree_equal(skip[0], base[0])
+    np.testing.assert_array_equal(np.asarray(skip[1]), np.asarray(base[1]))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: engine × kernel × frontier (single device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("kernel", ["off", "on"])
+def test_engine_matrix_bit_identical(engine, kernel, kernel_graph):
+    base, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                         engine=engine, kernel=kernel, frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                            engine=engine, kernel=kernel, frontier=fr)
+        np.testing.assert_array_equal(
+            np.asarray(out["distance"]), np.asarray(base["distance"]),
+            err_msg=f"{engine}/kernel={kernel}/frontier={fr}")
+
+
+@pytest.mark.parametrize("kernel", ["off", "on"])
+def test_frontier_with_reorder_bit_identical(kernel, kernel_graph):
+    base, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                         engine="pushpull", kernel=kernel,
+                         reorder="none", frontier="dense")
+    for reorder in ("rcm", "degree"):
+        out, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                            engine="pushpull", kernel=kernel,
+                            reorder=reorder, frontier="sparse")
+        np.testing.assert_array_equal(
+            np.asarray(out["distance"]), np.asarray(base["distance"]),
+            err_msg=f"reorder={reorder}/kernel={kernel}")
+
+
+def test_pagerank_sum_monoid_engine_bitwise(kernel_graph):
+    """Float-sum monoid end to end: all-active rounds take the dense
+    fallback, the final zero-active round takes the compaction arm —
+    still bitwise equal."""
+    for fr in ("auto", "sparse"):
+        base, _ = run_vcprog(PageRankProgram(kernel_graph.num_vertices, 5),
+                             kernel_graph, max_iter=5, engine="pushpull",
+                             kernel="off", frontier="dense")
+        out, _ = run_vcprog(PageRankProgram(kernel_graph.num_vertices, 5),
+                            kernel_graph, max_iter=5, engine="pushpull",
+                            kernel="off", frontier=fr)
+        np.testing.assert_array_equal(np.asarray(out["rank"]),
+                                      np.asarray(base["rank"]))
+
+
+class PulseProgram(vcprog.VCProgram):
+    """Frontier pathology program: iteration 2 has has_msg-driven
+    processing with a ZERO-active frontier (vertices process their inbox
+    but deactivate), so the plane runs a whole superstep with an empty
+    workset before the loop terminates."""
+
+    monoid = "min"
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"seen": jnp.int32(vid == 0)}
+
+    def empty_message(self):
+        return {"mark": jnp.int32(2**31 - 1)}
+
+    def merge_message(self, m1, m2):
+        return {"mark": jnp.minimum(m1["mark"], m2["mark"])}
+
+    def vertex_compute(self, prop, msg, it):
+        seen = prop["seen"] | jnp.int32(msg["mark"] < 2**31 - 1)
+        return {"seen": seen}, (it == 1) & (prop["seen"] > 0)
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return src_prop["seen"] > 0, {"mark": jnp.int32(1)}
+
+
+def test_zero_active_superstep_runs_sparse(kernel_graph):
+    base, binfo = run_vcprog(PulseProgram(), kernel_graph, max_iter=5,
+                             engine="pregel", frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, info = run_vcprog(PulseProgram(), kernel_graph, max_iter=5,
+                               engine="pregel", frontier=fr)
+        assert info["iterations"] == binfo["iterations"]
+        np.testing.assert_array_equal(np.asarray(out["seen"]),
+                                      np.asarray(base["seen"]))
+
+
+# ---------------------------------------------------------------------------
+# Distributed: delta exchange × schedule × kernel, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_distributed_delta_exchange_matrix(schedule, small_uniform_graph):
+    g = small_uniform_graph
+    ref = np.asarray(sssp(g, 0, engine="pushpull", frontier="dense")[0])
+    for fr in ("auto", "sparse"):
+        for kernel in ("off", "on"):
+            out, info = run_vcprog_distributed(
+                SSSPProgram(0), g, max_iter=100, schedule=schedule,
+                kernel=kernel, frontier=fr)
+            assert info["frontier"] == fr
+            d = np.asarray(out["distance"])
+            d = np.where(d >= 3.4e38 * 0.5, np.inf, d)
+            np.testing.assert_array_equal(
+                d, ref, err_msg=f"{schedule}/{fr}/kernel={kernel}")
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_distributed_delta_sum_monoid_bitwise(schedule, small_uniform_graph):
+    g = small_uniform_graph
+    prog = lambda: PageRankProgram(g.num_vertices, 4)
+    base, _ = run_vcprog_distributed(prog(), g, max_iter=4,
+                                     schedule=schedule, kernel="off",
+                                     frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, _ = run_vcprog_distributed(prog(), g, max_iter=4,
+                                        schedule=schedule, kernel="off",
+                                        frontier=fr)
+        np.testing.assert_array_equal(np.asarray(out["rank"]),
+                                      np.asarray(base["rank"]))
+
+
+_SUBPROCESS_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import io as gio
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import SSSPProgram, sssp
+
+g = gio.uniform_graph(300, 2500, seed=2, weighted=True)
+ref = np.asarray(sssp(g, 0, engine="pushpull", frontier="dense")[0])
+out = {}
+for schedule in ("allgather", "ring", "push"):
+    for fr in ("auto", "sparse"):
+        vp, info = run_vcprog_distributed(SSSPProgram(0), g, max_iter=100,
+                                          schedule=schedule, frontier=fr)
+        d = np.asarray(vp["distance"])
+        d = np.where(d >= 1.7e38, np.inf, d)
+        out[f"{schedule}_{fr}"] = bool(
+            info["num_parts"] == 8
+            and np.array_equal(np.nan_to_num(d, posinf=1e30),
+                               np.nan_to_num(ref, posinf=1e30)))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_delta_8dev_subprocess():
+    """The delta exchange on a REAL 8-part mesh — compaction, the
+    pmax-uniform cond and the cross-part scatter reconstruction are all
+    trivial on the in-process 1-device mesh, so the multi-part behavior
+    needs a fresh interpreter (device count locks at backend init)."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    from conftest import subprocess_env
+
+    r = subprocess.run([_sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = _json.loads(line[len("RESULT:"):])
+    assert all(out.values()), out
+
+
+# ---------------------------------------------------------------------------
+# Knob threading: run_vcprog validation + UniGPS session/per-call
+# ---------------------------------------------------------------------------
+
+def test_run_vcprog_rejects_bad_frontier(kernel_graph):
+    with pytest.raises(ValueError, match="frontier"):
+        run_vcprog(SSSPProgram(0), kernel_graph, max_iter=2,
+                   frontier="nope")
+
+
+def test_frontier_knob_through_api(kernel_graph):
+    base, _ = sssp(kernel_graph, 0, engine="pushpull", frontier="dense")
+    u = repro.UniGPS(engine="pushpull", frontier="sparse")
+    d1, _ = u.sssp(kernel_graph, 0)                      # session default
+    d2, _ = u.sssp(kernel_graph, 0, frontier="auto")     # per-call wins
+    np.testing.assert_array_equal(d1, base)
+    np.testing.assert_array_equal(d2, base)

@@ -260,3 +260,151 @@ def test_packed_plus_reorder(graph):
     out, _ = run_vcprog(MixedStats(), graph, max_iter=4, engine="pushpull",
                         kernel="on", reorder="rcm")
     _assert_tree_equal(out, base, "packed+reorder")
+
+
+# ---------------------------------------------------------------------------
+# vector payloads: [V, D] / [E, D] leaves in the packed fused kernel
+# ---------------------------------------------------------------------------
+
+class VecStats(repro.VCProgram):
+    """Mixed D=1 / D=8 record: an 8-wide f32 sum leaf, an 8-wide f32 min
+    leaf, plus scalar min/sum leaves — the PackSpec D>1 lift (a vector
+    leaf occupies D consecutive slab columns of its (dtype, monoid)
+    group)."""
+
+    D = 8
+    monoid = {"vec": "sum", "vmin": "min", "lo": "min", "cnt": "sum"}
+
+    def init_vertex(self, vid, out_degree, vprop):
+        base = (vid % 11).astype(jnp.float32)
+        emb = base + jnp.arange(self.D, dtype=jnp.float32) * 0.25
+        return {"emb": emb, "val": base, "cnt": jnp.int32(0),
+                "lo": jnp.float32(INF),
+                "vec": jnp.zeros((self.D,), jnp.float32),
+                "vmin": jnp.full((self.D,), INF, jnp.float32)}
+
+    def empty_message(self):
+        return {"vec": jnp.zeros((self.D,), jnp.float32),
+                "vmin": jnp.full((self.D,), INF, jnp.float32),
+                "lo": jnp.float32(INF), "cnt": jnp.int32(0)}
+
+    def merge_message(self, a, b):
+        return {"vec": a["vec"] + b["vec"],
+                "vmin": jnp.minimum(a["vmin"], b["vmin"]),
+                "lo": jnp.minimum(a["lo"], b["lo"]),
+                "cnt": a["cnt"] + b["cnt"]}
+
+    def vertex_compute(self, prop, msg, it):
+        out = dict(prop)
+        out.update({k: msg[k] for k in ("vec", "vmin", "lo", "cnt")})
+        return out, it < 3
+
+    def emit_message(self, src, dst, sp, ep):
+        return sp["val"] < 10.0, {"vec": sp["emb"] * 0.5,
+                                  "vmin": sp["emb"] + 1.0,
+                                  "lo": sp["val"], "cnt": jnp.int32(1)}
+
+
+def test_pack_spec_vector_slots(dgraph):
+    prog = VecStats()
+    empty, vprops, _ = _setup(prog, dgraph)
+    monoids = message_plane.leaf_monoids(prog, empty)
+    spec = make_pack_spec(prog.emit_message, monoids, vprops,
+                          dgraph.canonical.eprops, dgraph.num_edges)
+    ncols = {}
+    for g in spec.msg_groups:
+        for s in g.slots:
+            ncols[(g.dtype, g.monoid, s.offset)] = s.ncols
+        # offsets tile the slab contiguously, width lane-aligned past them
+        total = sum(s.ncols for s in g.slots)
+        assert g.width % LANE_ALIGN == 0 and g.width >= total
+        assert sorted(s.offset for s in g.slots) == \
+            [sum(x.ncols for x in sorted(g.slots, key=lambda y: y.offset)[:i])
+             for i in range(len(g.slots))]
+    assert ("float32", "sum", 0) in ncols and ncols[("float32", "sum", 0)] == 8
+    # vp groups carry the 8-wide emb + vec/vmin and the scalars
+    f32 = [g for g in spec.vp_groups if g.dtype == "float32"][0]
+    assert sum(s.ncols for s in f32.slots) == 8 * 3 + 2  # emb, vec, vmin, lo, val
+
+
+@pytest.mark.parametrize("multileaf", ["auto", "packed"])
+def test_vector_payload_packed_equals_unfused(multileaf, dgraph):
+    prog = VecStats()
+    empty, vprops, active = _setup(prog, dgraph)
+    base, bhm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=False)
+    assert message_plane.fused_applicable(prog, dgraph.canonical, vprops,
+                                          multileaf)
+    inbox, hm = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=True,
+        multileaf=multileaf)
+    _assert_tree_equal(inbox, base, f"vector multileaf={multileaf}")
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+
+
+def test_vector_payload_perleaf_not_fusable(dgraph):
+    """The per-leaf scalar launches cannot carry vector leaves — the gate
+    must refuse (and the plane must fall back to the unfused path, not
+    raise)."""
+    prog = VecStats()
+    empty, vprops, active = _setup(prog, dgraph)
+    assert not message_plane.fused_applicable(prog, dgraph.canonical,
+                                              vprops, "perleaf")
+    base, _ = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=False)
+    out, _ = message_plane.emit_and_combine(
+        prog, dgraph.canonical, vprops, active, empty, kernel_on=True,
+        multileaf="perleaf")
+    _assert_tree_equal(out, base, "perleaf fallback")
+
+
+def test_vector_payload_with_prefetch_and_frontier():
+    """Vector slabs under the scalar-prefetch windows AND the frontier
+    block-skip bitmap, vs the unfused dense pass."""
+    rng = np.random.default_rng(5)
+    V, E = 2048, 12000
+    dst = rng.integers(0, V, E).astype(np.int32)
+    src = np.clip(dst + rng.integers(-40, 41, E), 0, V - 1).astype(np.int32)
+    g = repro.core.graph.from_edges(src, dst, num_vertices=V)
+    dg = build_device_graph(g)
+    assert dg.canonical.prefetch_window > 0
+    prog = VecStats()
+    empty, vprops, _ = _setup(prog, dg)
+    active = jnp.asarray(rng.random(V) < 0.03)
+    base, bhm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=False,
+        frontier="dense")
+    for fr in ("dense", "auto"):
+        out, hm = message_plane.emit_and_combine(
+            prog, dg.canonical, vprops, active, empty, kernel_on=True,
+            frontier=fr)
+        _assert_tree_equal(out, base, f"vector prefetch frontier={fr}")
+        np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+    # unfused sparse workset with vector messages, still bitwise
+    out, hm = message_plane.emit_and_combine(
+        prog, dg.canonical, vprops, active, empty, kernel_on=False,
+        frontier="sparse")
+    _assert_tree_equal(out, base, "vector sparse workset")
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(bhm))
+
+
+@pytest.mark.parametrize("engine", ["pregel", "gas", "pushpull", "callback"])
+def test_vector_payload_engines(engine, graph):
+    """Mixed D=1/D=8 equivalence across engines (satellite): kernel on
+    (packed, vector slabs) == kernel off == pushpull baseline."""
+    base, _ = run_vcprog(VecStats(), graph, max_iter=4, engine="pushpull",
+                         kernel="off")
+    for kernel in ("off", "on"):
+        out, _ = run_vcprog(VecStats(), graph, max_iter=4, engine=engine,
+                            kernel=kernel)
+        _assert_tree_equal(out, base, f"vector {engine}/kernel={kernel}")
+
+
+@pytest.mark.parametrize("schedule", ["ring", "push"])
+def test_vector_payload_distributed(schedule, graph):
+    base, _ = run_vcprog(VecStats(), graph, max_iter=4, engine="pushpull",
+                         kernel="off")
+    out, _ = run_vcprog_distributed(VecStats(), graph, max_iter=4,
+                                    schedule=schedule, kernel="on",
+                                    frontier="auto")
+    _assert_tree_equal(out, base, f"vector distributed/{schedule}")
