@@ -44,17 +44,23 @@ class UniGPS:
     vertices). "auto" makes per-superstep cost track the frontier with a
     dense fallback above the crossover density; every mode is
     bit-identical to "dense".
+
+    prefetch: "auto"|"on"|"off" — the scalar-prefetch fused kernels
+    (windowed src slabs instead of VMEM-resident vprops; for the
+    distributed engine, the per-bucket window tables). "off" pins the
+    resident variant everywhere; bit-identical either way.
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
                  use_kernel: bool | None = None, reorder: str = "none",
-                 frontier: str = "dense"):
+                 frontier: str = "dense", prefetch: str = "auto"):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
             self.kernel = "off"
         self.reorder = reorder
         self.frontier = frontier
+        self.prefetch = prefetch
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -82,13 +88,14 @@ class UniGPS:
     def _kernel_kw(self, kw: dict) -> dict:
         """Uniform per-call override handling: every operator (and
         `vcprog`) accepts the same `kernel=`/`use_kernel=`/`reorder=`/
-        `frontier=` keywords that `run_vcprog` does, defaulting to the
-        session-level knobs. Unknown keywords are rejected here rather
-        than silently dropped."""
+        `frontier=`/`prefetch=` keywords that `run_vcprog` does,
+        defaulting to the session-level knobs. Unknown keywords are
+        rejected here rather than silently dropped."""
         out = {"kernel": kw.pop("kernel", self.kernel),
                "use_kernel": kw.pop("use_kernel", None),
                "reorder": kw.pop("reorder", self.reorder),
-               "frontier": kw.pop("frontier", self.frontier)}
+               "frontier": kw.pop("frontier", self.frontier),
+               "prefetch": kw.pop("prefetch", self.prefetch)}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

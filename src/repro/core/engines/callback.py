@@ -57,9 +57,13 @@ class CallbackEngine:
 
     # Phase 3 + Phase 1 on the host ----------------------------------------
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on, frontier="dense"):
+                         kernel_on, frontier="dense", prefetch="auto"):
         V = graph.num_vertices
-        # strip the nested canonical alias so the operand list stays flat
+        # strip the nested canonical alias so the operand list stays flat;
+        # prefetch metadata goes with it (the host-side eager plane is the
+        # paper's IPC analogue, not a kernel path — `prefetch` is resolved
+        # for validation but the stripped layout always runs resident)
+        message_plane.resolve_prefetch_mode(prefetch)
         layout = dataclasses.replace(graph.canonical, canonical=None,
                                      prefetch_blocks=None, prefetch_window=0)
 

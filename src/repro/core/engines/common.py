@@ -27,7 +27,8 @@ def prepare_device_graph(g: PropertyGraph,
 
 
 def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
-                  kernel_on: bool, frontier: str = "dense"):
+                  kernel_on: bool, frontier: str = "dense",
+                  prefetch: str = "auto"):
     V = graph.num_vertices
     empty = jax.tree.map(jnp.asarray, program.empty_message())
 
@@ -56,7 +57,7 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
         front = vcprog.make_frontier(active)
         inbox, has_msg, extra = engine.emit_and_combine(
             graph, program, vprops, front, extra, empty, kernel_on,
-            frontier)
+            frontier, prefetch)
         return vprops, active, inbox, has_msg, extra
 
     state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
@@ -70,14 +71,15 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
 
 @functools.lru_cache(maxsize=64)
 def _jitted_runner(engine_name: str, program_key, max_iter: int,
-                   kernel_on: bool, frontier: str = "dense"):
+                   kernel_on: bool, frontier: str = "dense",
+                   prefetch: str = "auto"):
     from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
     engine = ENGINES[engine_name]
     program = program_key.program
 
     def run(graph: DeviceGraph):
         return _run_compiled(program, graph, max_iter, engine, kernel_on,
-                             frontier)
+                             frontier, prefetch)
 
     # DeviceGraph's static fields (num_vertices/num_edges/...) live in the
     # pytree structure, so jax.jit keys its own cache on graph shape.
@@ -109,7 +111,7 @@ class _ProgramKey:
 def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
                use_kernel: bool | None = None, reorder: str = "none",
-               frontier: str = "dense",
+               frontier: str = "dense", prefetch: str = "auto",
                gdev: DeviceGraph | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
@@ -129,21 +131,26 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     active-edge compaction with a dense fallback); every mode is
     bit-identical to "dense".
 
+    prefetch: "auto" (default) | "on" | "off" — the scalar-prefetch
+    fused variant (message_plane.resolve_prefetch_mode). "off" pins the
+    vprops-resident kernels; for the distributed engine the knob also
+    controls the per-bucket window-table build. Bit-identical either way.
+
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
     """
     frontier = message_plane.resolve_frontier_mode(frontier)
+    prefetch = message_plane.resolve_prefetch_mode(prefetch)
     if engine == "distributed":
         from . import distributed
         return distributed.run_vcprog_distributed(
             program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
-            reorder=reorder, frontier=frontier)
+            reorder=reorder, frontier=frontier, prefetch=prefetch)
     if gdev is None:
         gdev = prepare_device_graph(graph, reorder=reorder)
-    kernel_on = message_plane.resolve_kernel_mode(
-        use_kernel if use_kernel is not None else kernel)
+    kernel_on = message_plane.resolve_kernel_arg(kernel, use_kernel)
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
-                            kernel_on, frontier)
+                            kernel_on, frontier, prefetch)
     vprops, iters, num_active = runner(gdev)
     return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}
 

@@ -20,7 +20,12 @@ Every bucket is an :class:`~repro.core.graph_device.EdgeLayout` (local
 gather/combine indices, global emit ids, valid-slot mask, precomputed
 per-bucket SegmentMeta), so each bucket's emit→combine goes through
 `core/message_plane.py` exactly like the single-device engines — with
-`kernel_on` the per-bucket plane runs as ONE fused Pallas pass.
+`kernel_on` the per-bucket plane runs as ONE fused Pallas pass, and with
+`prefetch` on, `build_bucket_prefetch` attaches per-(part, bucket)
+scalar-prefetch window tables so that pass DMAs two `window`-row src
+slabs per edge block instead of holding the remote part's vprops
+VMEM-resident (per-bucket resident fallback where the window would be
+part-sized; see docs/perf.md "Distributed prefetch").
 
 Semantics are identical to the single-device engines (tests assert
 equality); the user program is the same VCProgram object — cross-platform
@@ -188,7 +193,10 @@ def bucket_prefetch_windows(sg: Dict[str, Any]) -> np.ndarray:
     scalar-prefetch window of every (dst-part, src-owner-bucket)'s local
     src run ([P, B] int64; 0 = resident fallback, i.e. the slab pair
     would cover at least the whole part). The partition-aware reorderer
-    ("rcm:part") exists to shrink these."""
+    ("rcm:part") exists to shrink these. Computed on the PADDED slot
+    arrays with the valid mask — the exact layout the per-bucket
+    prefetch kernels stream, so sentinel dst pads can never widen a
+    reported window."""
     from ..graph_device import compute_prefetch_windows
 
     v_pp = sg["v_per_part"]
@@ -197,11 +205,67 @@ def bucket_prefetch_windows(sg: Dict[str, Any]) -> np.ndarray:
     out = np.zeros((Pn, B), np.int64)
     for dp in range(Pn):
         for b in range(B):
-            # the bucket's own (dst-sorted) edge order — what a
-            # per-bucket prefetch variant would actually stream
-            s = srcl[dp, b][mask[dp, b]]
-            _, out[dp, b] = compute_prefetch_windows(s, v_pp)
+            _, out[dp, b] = compute_prefetch_windows(srcl[dp, b], v_pp,
+                                                     valid=mask[dp, b])
     return out
+
+
+def build_bucket_prefetch(srcl: np.ndarray, mask: np.ndarray, v_pp: int,
+                          shared: bool = False):
+    """Per-(dst-part, src-owner-bucket) scalar-prefetch window tables.
+
+    Returns ``(blocks [P, B, n_blocks] int32, windows tuple[int] of len
+    B)``. shard_map traces ONE program for every device, so the STATIC
+    slab width of bucket b must be shared by all dst-parts: windows[b]
+    is the power-of-two covering the widest block span of bucket b on
+    ANY part (the per-part variation lives in the traced block table).
+    ``shared=True`` collapses further to one window for every bucket —
+    the ring schedule visits buckets with a traced index, so even the
+    per-bucket static split is unavailable there.
+
+    windows[b] == 0 is bucket b's RESIDENT fallback: some part's bucket
+    b needs a slab pair at least as large as the part's vertex range
+    (or, under ``shared``, any bucket does). Empty buckets never force a
+    fallback — they carry no span requirement and read whatever window
+    their bucket column settled on (every slot is invalid, so the slabs
+    are DMA'd and ignored).
+    """
+    from ..graph_device import (PREFETCH_BLOCK_E, min_prefetch_window,
+                                prefetch_block_bounds)
+
+    Pn, B, L = srcl.shape
+    nb = max(-(-L // PREFETCH_BLOCK_E), 1)
+    # ONE bounds scan per (part, bucket); windows and block tables both
+    # derive from it (and bucket_prefetch_windows reports the same scan)
+    bounds = [[prefetch_block_bounds(srcl[dp, b], valid=mask[dp, b])
+               for b in range(B)] for dp in range(Pn)]
+    windows = []
+    for b in range(B):
+        w_b, resident = 0, False
+        for dp in range(Pn):
+            bd = bounds[dp][b]
+            if bd is None:  # empty bucket: no span requirement
+                continue
+            w = min_prefetch_window(int((bd[1] - bd[0]).max()) + 1, v_pp)
+            if w == 0:
+                resident = True  # real edges, span too wide
+            w_b = max(w_b, w)
+        windows.append(0 if resident else w_b)
+    if shared:
+        resident = any(w == 0 and mask[:, b].any()
+                       for b, w in enumerate(windows))
+        w_all = 0 if resident else max(windows, default=0)
+        windows = [w_all] * B
+    blocks = np.zeros((Pn, B, nb), np.int32)
+    for b in range(B):
+        if windows[b] == 0:
+            continue
+        for dp in range(Pn):
+            bd = bounds[dp][b]
+            if bd is not None:  # empty buckets keep a zero table
+                lo = bd[0]
+                blocks[dp, b, :lo.shape[0]] = lo // windows[b]
+    return blocks, tuple(int(w) for w in windows)
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +298,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                           unroll_buckets: bool = False,
                           skip_buckets: bool = False,
                           kernel_on: bool = False,
-                          frontier: str = "dense"):
+                          frontier: str = "dense",
+                          prefetch_windows=None):
     """One Algorithm-1 iteration as a shard_map-able local function.
 
     Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
@@ -247,11 +312,36 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
     non-empty partial-inbox rows — and threads the same mode into every
     bucket's message plane. "auto" falls back to the dense exchange when
     any part's frontier exceeds the static capacity K (decided with ONE
-    pmax so every device takes the same branch); "sparse" uses K = v_pp
-    (always exact). All modes are bit-identical.
+    pmax so every device takes the same branch); "sparse" uses the
+    always-exact capacity (>= v_pp). All modes are bit-identical.
+
+    prefetch_windows (len-B tuple of ints, or None) are the per-bucket
+    STATIC scalar-prefetch slab widths from `build_bucket_prefetch`; the
+    traced per-(part, bucket) block tables ride
+    ``edges["bucket_pf_blocks"]``. With windows attached, every bucket's
+    plane pass runs the scalar-prefetch fused kernel (and its block-skip
+    / packed shapes) — DMA'ing two `window`-row src slabs per edge block
+    instead of keeping the remote part's vprops VMEM-resident — with a
+    per-bucket resident fallback where windows[b] == 0. The allgather
+    and push schedules unroll their bucket loop so each bucket's static
+    window specializes its own kernel; the ring schedule visits buckets
+    with a traced index and therefore requires ONE shared window
+    (build with shared=True).
     """
     frontier = message_plane.resolve_frontier_mode(frontier)
-    K = v_pp if frontier == "sparse" else workset_capacity(v_pp)
+    K = (workset_capacity(v_pp, 1.0) if frontier == "sparse"
+         else workset_capacity(v_pp))
+    if prefetch_windows is not None:
+        prefetch_windows = tuple(int(w) for w in prefetch_windows)
+        if len(prefetch_windows) != num_parts:
+            raise ValueError(
+                f"prefetch_windows has {len(prefetch_windows)} entries "
+                f"for {num_parts} buckets")
+        if schedule == "ring" and len(set(prefetch_windows)) > 1:
+            raise ValueError(
+                "the ring schedule indexes buckets with a traced id and "
+                "needs ONE shared prefetch window — build the tables "
+                "with build_bucket_prefetch(..., shared=True)")
 
     def local_step(it, vprops, active, inbox, has_msg, edges):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
@@ -270,7 +360,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
         inbox0 = records.tree_tile(empty, v_pp)
         has0 = jnp.zeros((v_pp,), bool)
 
-        def bucket_at(b):
+        def bucket_at(b, pf_window: int = 0):
             if "bucket_last_edge" in edges:  # precomputed (host-side)
                 meta = vcprog.SegmentMeta(
                     last_edge=edges["bucket_last_edge"][b],
@@ -289,6 +379,9 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             # fallback for hand-built edges dicts)
             src_ids = edges.get("edge_src_uid", edges["edge_src_global"])
             dst_ids = edges.get("edge_dst_uid", edges["edge_dst_global"])
+            pf_blocks = (edges["bucket_pf_blocks"][b]
+                         if pf_window and "bucket_pf_blocks" in edges
+                         else None)
             return bucket_layout(
                 src_local=edges["edge_src_local"][b],
                 src_global=src_ids[b],
@@ -296,7 +389,9 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 dst_global=dst_ids[b],
                 eprops=jax.tree.map(lambda a: a[b], edges["eprops"]),
                 mask=edges["edge_mask"][b],
-                seg_meta=meta, v_per_part=v_pp)
+                seg_meta=meta, v_per_part=v_pp,
+                prefetch_blocks=pf_blocks,
+                prefetch_window=pf_window if pf_blocks is not None else 0)
 
         def bucket_plane(bk, src_props_part, active_part):
             """One bucket's whole message plane (fused when kernel_on;
@@ -345,20 +440,25 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             def ag_run(part_props):
                 """Scan the P src buckets; part_props(b) yields bucket b's
                 (remote props, remote active)."""
-                def body(carry, b):
+                def body(carry, b, pf_w=0):
                     inbox, has_msg = carry
                     vp_b, act_b = part_props(b)
-                    b_inbox, b_has = bucket_plane(bucket_at(b), vp_b, act_b)
+                    b_inbox, b_has = bucket_plane(bucket_at(b, pf_w), vp_b,
+                                                  act_b)
                     return _merge_partial(program, inbox, has_msg, b_inbox,
                                           b_has), None
 
-                if unroll_buckets:
+                if unroll_buckets or prefetch_windows is not None:
                     # python loop: every bucket appears in the HLO, so the
                     # dry-run's cost_analysis counts all P buckets (a
-                    # lax.scan body is counted once regardless of trips)
+                    # lax.scan body is counted once regardless of trips) —
+                    # and each bucket's STATIC prefetch window specializes
+                    # its own fused kernel (resident where windows[b]==0)
                     carry = (inbox0, has0)
                     for b in range(num_parts):
-                        carry, _ = body(carry, jnp.int32(b))
+                        pf_w = (prefetch_windows[b]
+                                if prefetch_windows is not None else 0)
+                        carry, _ = body(carry, b, pf_w)
                     return carry
                 return jax.lax.scan(body, (inbox0, has0),
                                     jnp.arange(num_parts))[0]
@@ -394,6 +494,11 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             pperm = lambda t: jax.tree.map(
                 lambda a: jax.lax.ppermute(a, AXIS, perm), t)
 
+            # the hop's bucket id is data (it depends on axis_index), so
+            # every bucket shares ONE static window (shared=True tables)
+            ring_pf_w = (prefetch_windows[0]
+                         if prefetch_windows is not None else 0)
+
             def ring_run(payload0, reconstruct):
                 """Rotate `payload0` around the ring; reconstruct(payload)
                 yields the (props, active) of the part it currently
@@ -402,7 +507,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     inbox, has_msg, payload = carry
                     b = (my - r) % num_parts    # whose props we hold now
                     vp_b, act_b = reconstruct(payload)
-                    b_inbox, b_has = bucket_plane(bucket_at(b), vp_b, act_b)
+                    b_inbox, b_has = bucket_plane(bucket_at(b, ring_pf_w),
+                                                  vp_b, act_b)
                     inbox, has_msg = _merge_partial(program, inbox, has_msg,
                                                     b_inbox, b_has)
                     # rotate to the next neighbour (overlaps with compute)
@@ -443,12 +549,25 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             # partials. Wire = V·msg_bytes (vs the ring's V·prop_bytes) and
             # one collective launch instead of P permute steps.
             # edges here are the transposed (src-part major) view.
-            def part_body(carry, b):
-                one, oneh = bucket_plane(bucket_at(b), vprops, active)
-                return carry, (one, oneh)
+            if unroll_buckets or prefetch_windows is not None:
+                # python loop (see ag_run): per-bucket STATIC prefetch
+                # windows specialize each bucket's fused kernel
+                outs = []
+                for b in range(num_parts):
+                    pf_w = (prefetch_windows[b]
+                            if prefetch_windows is not None else 0)
+                    outs.append(bucket_plane(bucket_at(b, pf_w), vprops,
+                                             active))
+                partials = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *[o[0] for o in outs])
+                phas = jnp.stack([o[1] for o in outs])
+            else:
+                def part_body(carry, b):
+                    one, oneh = bucket_plane(bucket_at(b), vprops, active)
+                    return carry, (one, oneh)
 
-            _, (partials, phas) = jax.lax.scan(
-                part_body, (inbox0, has0), jnp.arange(num_parts))
+                _, (partials, phas) = jax.lax.scan(
+                    part_body, (inbox0, has0), jnp.arange(num_parts))
             # partials: [P, v_pp, ...] — row b = my messages for part b
             a2a = lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
                                                concat_axis=0, tiled=False)
@@ -511,11 +630,13 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
                             num_parts: int, mesh: Mesh, max_iter: int,
                             schedule: str = "ring",
                             kernel_on: bool = False,
-                            frontier: str = "dense"):
+                            frontier: str = "dense",
+                            prefetch_windows=None):
     """jit(shard_map(full Algorithm-1 loop)) over mesh axis AXIS."""
     local_step = make_distributed_step(program, v_pp, num_parts, schedule,
                                        kernel_on=kernel_on,
-                                       frontier=frontier)
+                                       frontier=frontier,
+                                       prefetch_windows=prefetch_windows)
 
     vspec = P(AXIS)
     espec = P(AXIS)
@@ -570,15 +691,26 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            kernel: str | bool = "auto",
                            use_kernel: bool | None = None,
                            reorder: str = "none",
-                           frontier: str = "dense"):
+                           frontier: str = "dense",
+                           prefetch: str = "auto"):
+    """Distributed Algorithm-1 entry point (one part per mesh device).
+
+    prefetch ("auto"|"on"|"off"): per-bucket scalar-prefetch window
+    tables for the fused bucket planes. "auto" builds and attaches them
+    whenever the kernels are on (the unfused paths never consult them);
+    "on" forces the build; "off" keeps every bucket vprops-resident.
+    Buckets whose required slab pair would be resident-sized keep a
+    per-bucket resident fallback (window 0); the result is bit-identical
+    in every mode.
+    """
     if mesh is None:
         dev = np.asarray(jax.devices())
         mesh = Mesh(dev.reshape(-1), (AXIS,))
     Pn = num_parts or mesh.devices.size
     assert Pn == mesh.devices.size, "one part per device"
-    kernel_on = message_plane.resolve_kernel_mode(
-        use_kernel if use_kernel is not None else kernel)
+    kernel_on = message_plane.resolve_kernel_arg(kernel, use_kernel)
     frontier = message_plane.resolve_frontier_mode(frontier)
+    prefetch = message_plane.resolve_prefetch_mode(prefetch)
 
     sg = build_sharded_graph(graph, Pn, reorder=reorder)
     v_pp = sg["v_per_part"]
@@ -594,9 +726,20 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                         for k, v in sg["eprops"].items()}
         sg["edge_src_local"] = sg["edge_src_global"] % v_pp
 
+    # per-bucket scalar-prefetch tables — built AFTER the push transpose
+    # so they describe the exact bucket-local src runs the kernels stream
+    pf_blocks, pf_windows = None, None
+    if prefetch == "on" or (prefetch == "auto" and kernel_on):
+        pf_blocks, pf_windows = build_bucket_prefetch(
+            sg["edge_src_local"], sg["edge_mask"], v_pp,
+            shared=(schedule == "ring"))
+        if not any(pf_windows):
+            pf_blocks = pf_windows = None  # every bucket resident
+
     runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
                                      schedule, kernel_on=kernel_on,
-                                     frontier=frontier)
+                                     frontier=frontier,
+                                     prefetch_windows=pf_windows)
 
     # initial vertex props: the input props (init_vertex runs on device)
     vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
@@ -613,6 +756,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         "bucket_has_edge": jnp.asarray(sg["bucket_has_edge"]),
         "eprops": jax.tree.map(jnp.asarray, sg["eprops"]),
     }
+    if pf_blocks is not None:
+        edges["bucket_pf_blocks"] = jnp.asarray(pf_blocks)
     vprops, active = runner(vprops0, active0,
                             jnp.asarray(sg["out_degree"]),
                             jnp.asarray(sg["vertex_valid"]),
@@ -626,4 +771,5 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
     return host, {"schedule": schedule, "num_parts": Pn,
                   "kernel_on": kernel_on, "reorder": reorder,
-                  "frontier": frontier}
+                  "frontier": frontier, "prefetch": prefetch,
+                  "prefetch_windows": pf_windows}

@@ -33,13 +33,13 @@ class GASEngine:
         return (store, valid)
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on, frontier="dense"):
+                         kernel_on, frontier="dense", prefetch="auto"):
         layout = graph.canonical
         if kernel_on and message_plane.fused_applicable(program, layout,
                                                         vprops):
             inbox, has_msg = message_plane.emit_and_combine(
                 program, layout, vprops, active, empty, kernel_on=True,
-                frontier=frontier)
+                frontier=frontier, prefetch=prefetch)
             return inbox, has_msg, extra
 
         # SCATTER: evaluate emit for every edge (canonical order), store

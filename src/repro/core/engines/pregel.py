@@ -20,8 +20,8 @@ class PregelEngine:
         return ()
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on, frontier="dense"):
+                         kernel_on, frontier="dense", prefetch="auto"):
         inbox, has_msg = message_plane.emit_and_combine(
             program, graph.src_sorted, vprops, active, empty,
-            kernel_on=kernel_on, frontier=frontier)
+            kernel_on=kernel_on, frontier=frontier, prefetch=prefetch)
         return inbox, has_msg, extra

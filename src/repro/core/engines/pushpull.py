@@ -31,7 +31,7 @@ class PushPullEngine:
         return ()
 
     def emit_and_combine(self, graph, program, vprops, active, extra, empty,
-                         kernel_on, frontier="dense"):
+                         kernel_on, frontier="dense", prefetch="auto"):
         mask = vcprog.frontier_mask(active)
         active_out_edges = jnp.sum(jnp.where(mask, graph.out_degree, 0))
         use_push = active_out_edges < (graph.num_edges / self.alpha)
@@ -39,12 +39,12 @@ class PushPullEngine:
         def push(_):
             return message_plane.emit_and_combine(
                 program, graph.src_sorted, vprops, active, empty,
-                kernel_on=kernel_on, frontier=frontier)
+                kernel_on=kernel_on, frontier=frontier, prefetch=prefetch)
 
         def pull(_):
             return message_plane.emit_and_combine(
                 program, graph.canonical, vprops, active, empty,
-                kernel_on=kernel_on, frontier=frontier)
+                kernel_on=kernel_on, frontier=frontier, prefetch=prefetch)
 
         inbox, has_msg = jax.lax.cond(use_push, push, pull, operand=None)
         return inbox, has_msg, extra

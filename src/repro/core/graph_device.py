@@ -54,12 +54,18 @@ def workset_capacity(num_items: int, frac: float = SPARSE_CAP_FRAC) -> int:
     """Static workset slot count for frontier-sparse compaction: a
     fraction of the dense size, sublane-aligned, at least one slot. Used
     for both the message plane's active-edge workset (num_items = E) and
-    the distributed delta exchange (num_items = v_per_part)."""
+    the distributed delta exchange (num_items = v_per_part).
+
+    ALWAYS 8-aligned: for tiny (n < 8) or unaligned n the capacity may
+    exceed n — the excess slots carry sentinel pads (`compact_indices`
+    fills them with the sentinel n, and every consumer drops the
+    sentinel), so callers can rely on sublane alignment unconditionally.
+    """
     n = int(num_items)
     if n <= 0:
         return 1
-    cap = -(-int(np.ceil(n * float(frac))) // 8) * 8
-    return int(min(max(cap, 8), n)) if n >= 8 else n
+    cap = max(-(-int(np.ceil(n * float(frac))) // 8) * 8, 8)
+    return int(min(cap, -(-n // 8) * 8))
 
 
 @jax.tree_util.register_dataclass
@@ -170,8 +176,51 @@ class DeviceGraph:
     num_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
 
 
+def prefetch_block_bounds(src: np.ndarray,
+                          block_e: int = PREFETCH_BLOCK_E,
+                          valid: np.ndarray | None = None):
+    """Per-edge-block [lo, hi] src bounds — the ONE host-side scan every
+    prefetch-window consumer derives from (`compute_prefetch_windows`,
+    `engines/distributed.build_bucket_prefetch`). `valid` marks real
+    slots of pre-padded layouts: invalid slots are forward-filled with
+    the nearest real src (leading pads backfill with the first real
+    one), so padding can never stretch a block's span. Returns
+    (lo [n_blocks], hi [n_blocks]) int64, or None when there is nothing
+    valid to bound (empty edge set / all-pad bucket)."""
+    src = np.asarray(src)
+    E = int(src.shape[0])
+    if E == 0:
+        return None
+    n_blocks = -(-E // block_e)
+    if valid is not None:
+        valid = np.asarray(valid, bool)
+        if not valid.any():
+            return None
+        pos = np.maximum.accumulate(np.where(valid, np.arange(E), -1))
+        src = np.where(pos >= 0, src[np.maximum(pos, 0)],
+                       src[int(valid.argmax())])
+    pad = n_blocks * block_e - E
+    # pad with the last real src id so padding never widens a window
+    src_p = np.concatenate([src, np.full(pad, src[-1], src.dtype)])
+    blocks = src_p.reshape(n_blocks, block_e)
+    return (blocks.min(axis=1).astype(np.int64),
+            blocks.max(axis=1).astype(np.int64))
+
+
+def min_prefetch_window(span: int, num_vertices: int) -> int:
+    """Smallest legal slab width for a block span: the power of two >=
+    `span`, or 0 (resident fallback) when the slab pair would reach the
+    vertex range."""
+    w = 8
+    while w < span:
+        w *= 2
+    return 0 if 2 * w >= num_vertices else w
+
+
 def compute_prefetch_windows(src: np.ndarray, num_vertices: int,
-                             block_e: int = PREFETCH_BLOCK_E):
+                             block_e: int = PREFETCH_BLOCK_E,
+                             valid: np.ndarray | None = None,
+                             window: int | None = None):
     """Host-side window metadata for the scalar-prefetch fused kernel.
 
     For each block of `block_e` edges, the kernel DMAs TWO adjacent
@@ -182,6 +231,19 @@ def compute_prefetch_windows(src: np.ndarray, num_vertices: int,
     q = src_min // W always covers [src_min, src_max] — no start-
     quantization penalty, arbitrary block index maps stay legal.
 
+    `valid` marks real edge slots of pre-padded layouts (distributed
+    buckets carry trailing sentinel-dst pads whose src values are
+    arbitrary): invalid slots are forward-filled with the nearest real
+    src id, so padding can never widen a window. All-invalid input means
+    no metadata.
+
+    `window` forces that slab width instead of deriving the minimal one —
+    the distributed planes share one static window across parts (and, for
+    the ring schedule, across buckets) because shard_map traces ONE
+    program for every device. A forced window that does not cover the
+    widest block span is refused (returns window 0) rather than silently
+    dropping the out-of-slab edges.
+
     Returns (block_idx [n_blocks] int32, window int). window == 0 means
     no useful metadata (empty edge set, or the window would be at least
     half the vertex range — the resident variant wins there).
@@ -191,19 +253,20 @@ def compute_prefetch_windows(src: np.ndarray, num_vertices: int,
     if E == 0 or num_vertices == 0:
         return np.zeros((1,), np.int32), 0
     n_blocks = -(-E // block_e)
-    pad = n_blocks * block_e - E
-    # pad with the last real src id so padding never widens a window
-    src_p = np.concatenate([src, np.full(pad, src[-1], src.dtype)])
-    blocks = src_p.reshape(n_blocks, block_e)
-    lo = blocks.min(axis=1).astype(np.int64)
-    hi = blocks.max(axis=1).astype(np.int64)
+    bounds = prefetch_block_bounds(src, block_e, valid)
+    if bounds is None:
+        return np.zeros((n_blocks,), np.int32), 0
+    lo, hi = bounds
 
     span = int((hi - lo).max()) + 1
-    w = 8
-    while w < span:
-        w *= 2
-    if 2 * w >= num_vertices:
-        return np.zeros((1,), np.int32), 0  # slab pair >= resident set
+    if window is None:
+        w = min_prefetch_window(span, num_vertices)
+    elif int(window) < span:
+        w = 0  # forced window cannot cover the widest block — refuse
+    else:
+        w = int(window) if 2 * int(window) < num_vertices else 0
+    if w == 0:
+        return np.zeros((n_blocks,), np.int32), 0  # resident fallback
     return (lo // w).astype(np.int32), int(w)
 
 
@@ -273,16 +336,23 @@ def build_device_graph(g: PropertyGraph,
 
 
 def bucket_layout(src_local, src_global, dst_local, dst_global, eprops,
-                  mask, seg_meta, v_per_part: int) -> EdgeLayout:
+                  mask, seg_meta, v_per_part: int,
+                  prefetch_blocks=None, prefetch_window: int = 0
+                  ) -> EdgeLayout:
     """EdgeLayout over ONE distributed src-owner bucket of local in-edges.
 
     The bucket is combine-ordered already (dst-local ascending with
     sentinel pads), padded to the common slot count L, and emits with
-    global endpoint ids.
+    global endpoint ids. `prefetch_blocks`/`prefetch_window` attach the
+    bucket's scalar-prefetch window table (see
+    `engines/distributed.build_bucket_prefetch`); window 0 — or no table
+    — is the bucket's resident fallback.
     """
     return EdgeLayout(
         src=src_local, dst=dst_local, eprops=eprops,
         valid_mask=mask, seg_meta=seg_meta,
         src_ids=src_global, dst_ids=dst_global,
+        prefetch_blocks=prefetch_blocks if prefetch_window else None,
         num_segments=int(v_per_part),
-        num_edges=int(dst_local.shape[0]))
+        num_edges=int(dst_local.shape[0]),
+        prefetch_window=int(prefetch_window))

@@ -51,6 +51,7 @@ from .vcprog import Record, RecordBatch, SegmentMeta, VCProgram, \
 _MODES = ("auto", "fused", "unfused")
 _MULTILEAF = ("auto", "packed", "perleaf")
 _FRONTIER = ("auto", "dense", "sparse")
+_PREFETCH = ("auto", "on", "off")
 _NAMED = ("sum", "min", "max")
 
 
@@ -111,7 +112,10 @@ def resolve_kernel_mode(kernel) -> bool:
 
     "auto" picks the Pallas kernels on TPU and the XLA segment ops on CPU
     (where the kernels would run in interpret mode — a correctness path,
-    not a fast path). Booleans are accepted as a legacy alias.
+    not a fast path). Booleans are accepted as a legacy alias. This is
+    THE canonical resolver (``vcprog.resolve_kernel_mode`` is a
+    compatibility delegate); anything else raises a ValueError rather
+    than falling through to an implicit mode.
     """
     if kernel is None:
         kernel = "auto"
@@ -122,6 +126,35 @@ def resolve_kernel_mode(kernel) -> bool:
     if kernel in ("on", "off"):
         return kernel == "on"
     raise ValueError(f"kernel must be 'auto'|'on'|'off', got {kernel!r}")
+
+
+def resolve_kernel_arg(kernel, use_kernel) -> bool:
+    """Resolve the public (kernel=, use_kernel=) argument pair: the
+    legacy boolean alias wins when given. One place for the precedence
+    rule every entry point (run_vcprog, run_vcprog_distributed, the
+    UniGPS session) used to re-implement."""
+    return resolve_kernel_mode(
+        use_kernel if use_kernel is not None else kernel)
+
+
+def resolve_prefetch_mode(prefetch) -> str:
+    """Validate the scalar-prefetch knob ("auto"|"on"|"off"; None="auto").
+
+    "auto" lets the fused dispatch use whatever window metadata the
+    layout carries (and lets the distributed builder attach per-bucket
+    tables whenever the kernels are on); "off" ignores the metadata —
+    every fused pass runs vprops-resident (the bench/verification
+    baseline); "on" forces the distributed builder to attach tables even
+    when the kernels are off (at the plane itself it behaves like
+    "auto": a layout without metadata — e.g. a bucket whose window would
+    be resident-sized — still falls back to resident). Unknown strings
+    raise."""
+    if prefetch is None:
+        return "auto"
+    if prefetch not in _PREFETCH:
+        raise ValueError(
+            f"prefetch must be one of {_PREFETCH}, got {prefetch!r}")
+    return prefetch
 
 
 # ---------------------------------------------------------------------------
@@ -437,7 +470,8 @@ def _per_leaf_fused(program: VCProgram, layout: EdgeLayout, vprops, active,
 def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
                         active, empty: Record, multileaf: str = "auto",
                         block_skip: bool = False,
-                        has_vec: bool | None = None):
+                        has_vec: bool | None = None,
+                        use_prefetch: bool = True):
     """Phases 3+1 as ONE streamed pass: gather src props, evaluate emit,
     and fold into per-vertex inboxes inside a single Pallas kernel — no
     E-sized message materialization in HBM. `layout` must be the
@@ -457,7 +491,8 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
     from .graph_device import PREFETCH_BLOCK_E
 
     prefetch = None
-    if layout.prefetch_window and layout.prefetch_blocks is not None:
+    if (use_prefetch and layout.prefetch_window
+            and layout.prefetch_blocks is not None):
         prefetch = (layout.prefetch_blocks, layout.prefetch_window,
                     PREFETCH_BLOCK_E)
 
@@ -498,7 +533,7 @@ def _fused_emit_combine(program: VCProgram, layout: EdgeLayout, vprops,
 def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
                      empty: Record, *, kernel_on: bool = False,
                      mode: str = "auto", multileaf: str = "auto",
-                     frontier: str = "dense"
+                     frontier: str = "dense", prefetch: str = "auto"
                      ) -> Tuple[RecordBatch, jnp.ndarray]:
     """Run the whole message plane (Phase 3 + Phase 1) for one iteration.
 
@@ -536,6 +571,11 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
     is the flagged scan, whose cost is structural, and re-deriving its
     tree shape per superstep would cost more than it saves.
 
+    prefetch ("auto"|"on"|"off") gates the scalar-prefetch fused variant:
+    "off" ignores the layout's window metadata (every fused pass runs
+    vprops-resident — the verification/bench baseline), the other modes
+    use it whenever the layout carries it. Bit-identical either way.
+
     Returns (inbox [num_segments] record batch, has_msg [num_segments]).
     """
     if mode not in _MODES:
@@ -544,6 +584,7 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
         raise ValueError(
             f"multileaf must be one of {_MULTILEAF}, got {multileaf!r}")
     frontier = resolve_frontier_mode(frontier)
+    prefetch = resolve_prefetch_mode(prefetch)
     want_fused = mode == "fused" or (mode == "auto" and kernel_on)
     if want_fused:
         cv0 = layout.combine_view
@@ -556,7 +597,8 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
             return _fused_emit_combine(program, cv0, vprops, active, empty,
                                        multileaf,
                                        block_skip=frontier != "dense",
-                                       has_vec=has_vec)
+                                       has_vec=has_vec,
+                                       use_prefetch=prefetch != "off")
     if mode == "fused":
         raise ValueError(
             "mode='fused' but the program/layout pair is not fusable "

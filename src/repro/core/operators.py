@@ -66,11 +66,13 @@ class PageRankProgram(vcprog.VCProgram):
 def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
              engine: str = "pushpull", kernel: str = "auto",
              use_kernel: bool | None = None,
-             reorder: str = "none", frontier: str = "dense"):
+             reorder: str = "none", frontier: str = "dense",
+             prefetch: str = "auto"):
     prog = PageRankProgram(graph.num_vertices, num_iters, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     return np.asarray(vprops["rank"]), info
 
 
@@ -110,11 +112,13 @@ class SSSPProgram(vcprog.VCProgram):
 def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
          engine: str = "pushpull", kernel: str = "auto",
          use_kernel: bool | None = None,
-         reorder: str = "none", frontier: str = "dense"):
+         reorder: str = "none", frontier: str = "dense",
+         prefetch: str = "auto"):
     prog = SSSPProgram(root)
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     dist = np.asarray(vprops["distance"])
     return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
 
@@ -148,11 +152,13 @@ class CCProgram(vcprog.VCProgram):
 def connected_components(graph: PropertyGraph, max_iter: int = 200,
                          engine: str = "pushpull", kernel: str = "auto",
                          use_kernel: bool | None = None,
-                         reorder: str = "none", frontier: str = "dense"):
+                         reorder: str = "none", frontier: str = "dense",
+                         prefetch: str = "auto"):
     prog = CCProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     return np.asarray(vprops["label"]), info
 
 
@@ -191,11 +197,13 @@ class BFSProgram(vcprog.VCProgram):
 def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         engine: str = "pushpull", kernel: str = "auto",
         use_kernel: bool | None = None,
-        reorder: str = "none", frontier: str = "dense"):
+        reorder: str = "none", frontier: str = "dense",
+        prefetch: str = "auto"):
     prog = BFSProgram(root)
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     depth = np.asarray(vprops["depth"]).astype(np.int64)
     return np.where(depth >= 2**31 - 1, -1, depth), info
 
@@ -230,12 +238,14 @@ def personalized_pagerank(graph: PropertyGraph, source: int,
                           num_iters: int = 20, damping: float = 0.85,
                           engine: str = "pushpull", kernel: str = "auto",
                           use_kernel: bool | None = None,
-                          reorder: str = "none", frontier: str = "dense"):
+                          reorder: str = "none", frontier: str = "dense",
+                          prefetch: str = "auto"):
     prog = PersonalizedPageRankProgram(graph.num_vertices, num_iters,
                                        source, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     return np.asarray(vprops["rank"]), info
 
 
@@ -267,10 +277,12 @@ class DegreeProgram(vcprog.VCProgram):
 
 def degrees(graph: PropertyGraph, engine: str = "pushpull",
             kernel: str = "auto", use_kernel: bool | None = None,
-            reorder: str = "none", frontier: str = "dense"):
+            reorder: str = "none", frontier: str = "dense",
+            prefetch: str = "auto"):
     prog = DegreeProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
-                              reorder=reorder, frontier=frontier)
+                              reorder=reorder, frontier=frontier,
+                              prefetch=prefetch)
     return (np.asarray(vprops["out_degree"]),
             np.asarray(vprops["in_degree"])), info

@@ -177,8 +177,12 @@ def segment_combine(program: VCProgram, msgs, dst, valid, num_segments, empty,
 
 
 def resolve_kernel_mode(kernel: str | bool | None) -> bool:
-    """Resolve the tri-state kernel knob to a concrete on/off (delegates
-    to :mod:`repro.core.message_plane`)."""
+    """Resolve the tri-state kernel knob to a concrete on/off.
+
+    Pure delegate — :func:`repro.core.message_plane.resolve_kernel_mode`
+    is the ONE canonical resolver (this alias only exists for historical
+    `vcprog.resolve_kernel_mode` call sites); unknown strings raise a
+    ValueError there rather than falling through."""
     from . import message_plane
     return message_plane.resolve_kernel_mode(kernel)
 

@@ -38,6 +38,15 @@ Two variants share the kernel body:
     the ROADMAP's "DMA only the src rows an edge block needs" variant:
     VMEM holds O(window) vertex rows instead of O(V).
 
+Sentinel-padded (bucket) layouts compose with both variants and with
+block-skip: the window tables MUST be built with the pad slots masked
+(`compute_prefetch_windows(..., valid=mask)` forward-fills pads, and
+`engines/distributed.build_bucket_prefetch` does this per bucket), so a
+pad's arbitrary src value never widens a slab; at run time a pad row is
+dead three ways — `valid` vetoes it, a src outside the DMA'd slab pair
+fails the `in_win` check, and `_block_active` multiplies the frontier
+bitmap by `valid` so an all-pad block never sets its any_active bit.
+
 Combine: sum uses a one-hot matvec on the MXU; min/max use a 2-D masked
 select [BE, BV] + reduce (the payload per leaf is scalar, so no 3-D
 intermediate exists and the full block_e=512 applies). Integer payloads

@@ -1,0 +1,517 @@
+"""Per-bucket scalar-prefetch in the distributed planes.
+
+Units for the pad-masked window machinery (sentinel dst-padded bucket
+slots must never widen a prefetch window or set a block-skip bitmap
+bit), the per-bucket window-table builder (empty / single-edge /
+resident-fallback buckets, the shared-window collapse the ring schedule
+needs), and the end-to-end schedule × kernel × reorder × frontier
+matrix asserted bit-identical to the resident path — in-process on the
+1-device mesh here, on a REAL 8-part mesh in the slow subprocess test.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import io as gio
+from repro.core import message_plane, records, vcprog
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import (build_bucket_prefetch,
+                                            build_sharded_graph,
+                                            bucket_prefetch_windows,
+                                            run_vcprog_distributed)
+from repro.core.graph import from_edges
+from repro.core.graph_device import (PREFETCH_BLOCK_E, bucket_layout,
+                                     compute_prefetch_windows)
+from repro.core.operators import PageRankProgram, SSSPProgram
+
+
+# ---------------------------------------------------------------------------
+# compute_prefetch_windows: pad masking + forced windows
+# ---------------------------------------------------------------------------
+
+def _padded_band_bucket(e_real=700, v=4096, pad=324, pad_src=0):
+    """A banded src run (span 512 per 512-edge block) with trailing
+    invalid pad slots whose src value is adversarial (0 — maximally far
+    from the tail of the real run)."""
+    src = np.concatenate([np.arange(e_real, dtype=np.int64) % v,
+                          np.full(pad, pad_src, np.int64)])
+    valid = np.concatenate([np.ones(e_real, bool), np.zeros(pad, bool)])
+    return src, valid
+
+
+def test_pads_do_not_widen_windows():
+    """Regression (sentinel-padded buckets): an unmasked pad-heavy tail
+    stretches a mixed real+pad block's span; the valid mask forward-fills
+    pads so the window matches the unpadded run's."""
+    src, valid = _padded_band_bucket()
+    _, w_clean = compute_prefetch_windows(src[valid], 4096)
+    _, w_masked = compute_prefetch_windows(src, 4096, valid=valid)
+    _, w_unmasked = compute_prefetch_windows(src, 4096)
+    assert w_clean == 512
+    assert w_masked == 512          # pads never widen
+    assert w_unmasked > w_masked    # the bug the mask fixes
+
+
+def test_all_pad_bucket_has_no_metadata():
+    src, valid = _padded_band_bucket()
+    blocks, w = compute_prefetch_windows(src, 4096,
+                                         valid=np.zeros_like(valid))
+    assert w == 0 and blocks.shape[0] == -(-len(src) // PREFETCH_BLOCK_E)
+
+
+def test_leading_pads_backfill():
+    """Leading invalid slots mirror the FIRST real src (there is no
+    preceding one to forward-fill from)."""
+    src = np.array([9, 7, 100, 101, 102, 103], np.int64)
+    valid = np.array([False, False, True, True, True, True])
+    blocks, w = compute_prefetch_windows(src, 4096, valid=valid,
+                                         block_e=4)
+    assert w == 8  # span 4, not 97
+    np.testing.assert_array_equal(blocks, [100 // 8, 102 // 8])
+
+
+def test_forced_window_refuses_undersized():
+    src = np.arange(1024, dtype=np.int64)
+    _, w = compute_prefetch_windows(src, 8192, window=64)
+    assert w == 0  # span 512 per block; a 64-slab pair would drop edges
+    blocks, w = compute_prefetch_windows(src, 8192, window=1024)
+    assert w == 1024
+    np.testing.assert_array_equal(blocks, [0, 0])
+
+
+def test_block_active_ignores_pads():
+    """Regression: a block of nothing but sentinel-padded slots whose
+    (arbitrary) src values point at frontier vertices must NOT set its
+    any_active bit — block-skip would otherwise run dead bucket tails."""
+    from repro.kernels.fused_gather_emit import _block_active
+
+    E, be = 1024, 512
+    src = np.zeros(E, np.int32)           # pads point at vertex 0...
+    src[:be] = 1                          # real edges read vertex 1
+    valid = np.concatenate([np.ones(be, bool), np.zeros(be, bool)])
+    active = jnp.zeros(8, bool).at[0].set(True)   # ...which IS active
+    pad_e = lambda a, fill: a
+    bits = np.asarray(_block_active(active, jnp.asarray(src),
+                                    jnp.asarray(valid), pad_e, 2, be))
+    np.testing.assert_array_equal(bits, [0, 0])
+    bits = np.asarray(_block_active(jnp.ones(8, bool), jnp.asarray(src),
+                                    jnp.asarray(valid), pad_e, 2, be))
+    np.testing.assert_array_equal(bits, [1, 0])  # pad block still dead
+
+
+# ---------------------------------------------------------------------------
+# build_bucket_prefetch: per-bucket tables, fallbacks, shared collapse
+# ---------------------------------------------------------------------------
+
+def _toy_buckets():
+    """[P=2, B=2, L=8] with: banded buckets, an EMPTY bucket (0,1) and a
+    SINGLE-EDGE bucket (1,1)."""
+    v_pp = 64
+    srcl = np.zeros((2, 2, 8), np.int32)
+    mask = np.zeros((2, 2, 8), bool)
+    srcl[0, 0] = np.arange(8)            # banded
+    mask[0, 0] = True
+    srcl[1, 0, :4] = np.arange(4) + 16   # banded, trailing pads
+    mask[1, 0, :4] = True
+    # (0, 1) stays empty; (1, 1) holds one edge
+    srcl[1, 1, 0] = 3
+    mask[1, 1, 0] = True
+    return srcl, mask, v_pp
+
+
+def test_build_bucket_prefetch_shapes_and_fallbacks():
+    srcl, mask, v_pp = _toy_buckets()
+    blocks, windows = build_bucket_prefetch(srcl, mask, v_pp)
+    assert blocks.shape == (2, 2, 1) and len(windows) == 2
+    # bucket 0: both parts banded -> shared-over-parts window 8
+    assert windows[0] == 8
+    # bucket 1: empty on part 0 + single edge on part 1 -> window 8 (the
+    # empty bucket never forces a fallback)
+    assert windows[1] == 8
+    np.testing.assert_array_equal(blocks[:, :, 0],
+                                  [[0, 0], [2, 0]])
+
+    # a wide bucket (span >= v_pp/2 on ONE part) forces that bucket's
+    # resident fallback without touching its neighbours
+    srcl[1, 0, :4] = [0, 63, 0, 63]
+    blocks, windows = build_bucket_prefetch(srcl, mask, v_pp)
+    assert windows == (0, 8)
+    assert (blocks[:, 0] == 0).all()
+
+    # shared=True (ring): one window everywhere, and any resident bucket
+    # poisons the whole mesh to resident
+    _, shared = build_bucket_prefetch(srcl, mask, v_pp, shared=True)
+    assert shared == (0, 0)
+    srcl, mask, v_pp = _toy_buckets()
+    _, shared = build_bucket_prefetch(srcl, mask, v_pp, shared=True)
+    assert shared == (8, 8)
+
+
+def test_bucket_metric_matches_padded_layout():
+    """bucket_prefetch_windows (the rcm:part locality metric) reports the
+    window of the PADDED slot run the kernels stream — pads masked."""
+    g = gio.part_community_graph(2, 256, degree=16, cross_edges=0, seed=5)
+    sg = build_sharded_graph(g, 2, reorder="rcm:part")
+    metric = bucket_prefetch_windows(sg)
+    _, windows = build_bucket_prefetch(sg["edge_src_local"],
+                                       sg["edge_mask"], sg["v_per_part"])
+    assert metric[0, 0] > 0
+    for b in range(2):
+        per_part = [metric[dp, b] for dp in range(2)]
+        assert windows[b] == max(per_part)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: one bucket EdgeLayout, prefetch × block-skip × pads
+# ---------------------------------------------------------------------------
+
+def test_bucket_layout_prefetch_bit_identical():
+    """One sentinel-padded bucket through the plane: resident vs
+    scalar-prefetch (and ×block-skip) are bitwise equal, thin frontier
+    included."""
+    rng = np.random.default_rng(3)
+    v_pp, e_real, L = 512, 3000, 3072
+    dst = np.sort(rng.integers(0, v_pp, e_real))
+    src = np.clip(dst + rng.integers(-16, 17, e_real), 0, v_pp - 1)
+    srcl = np.zeros(L, np.int32)
+    dstl = np.full(L, v_pp, np.int32)          # sentinel dst pads
+    mask = np.zeros(L, bool)
+    srcl[:e_real], dstl[:e_real], mask[:e_real] = src, dst, True
+    meta = vcprog.make_segment_meta(jnp.asarray(dstl), v_pp,
+                                    valid=jnp.asarray(mask))
+    blocks, window = compute_prefetch_windows(srcl, v_pp, valid=mask)
+    assert window > 0
+
+    def layout(pf):
+        return bucket_layout(
+            src_local=jnp.asarray(srcl), src_global=jnp.asarray(srcl),
+            dst_local=jnp.asarray(dstl), dst_global=jnp.asarray(dstl),
+            eprops={}, mask=jnp.asarray(mask), seg_meta=meta,
+            v_per_part=v_pp,
+            prefetch_blocks=jnp.asarray(blocks) if pf else None,
+            prefetch_window=window if pf else 0)
+
+    prog = SSSPProgram(0)
+    empty = {"distance": jnp.float32(3.4e38)}
+    vprops = {"vid": jnp.arange(v_pp, dtype=jnp.int32),
+              "distance": jnp.where(jnp.arange(v_pp) == 0, 0.0,
+                                    3.4e38).astype(jnp.float32)}
+    for dens in (0.02, 1.0):
+        active = (jnp.asarray(rng.random(v_pp) < dens) if dens < 1
+                  else jnp.ones(v_pp, bool))
+        for frontier in ("dense", "sparse"):
+            base = message_plane.emit_and_combine(
+                prog, layout(False), vprops, active, empty,
+                kernel_on=True, frontier=frontier)
+            out = message_plane.emit_and_combine(
+                prog, layout(True), vprops, active, empty,
+                kernel_on=True, frontier=frontier)
+            assert records.tree_equal(out[0], base[0]), (dens, frontier)
+            np.testing.assert_array_equal(np.asarray(out[1]),
+                                          np.asarray(base[1]))
+
+
+class _TwoLeaf(vcprog.VCProgram):
+    """Mixed-monoid record — the packed+prefetch bucket shape."""
+
+    monoid = {"dist": "min", "count": "sum"}
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"dist": jnp.where(vid == 0, 0.0, 3.4e38).astype(
+            jnp.float32), "count": jnp.int32(vid == 0)}
+
+    def empty_message(self):
+        return {"dist": jnp.float32(3.4e38), "count": jnp.int32(0)}
+
+    def merge_message(self, a, b):
+        return {"dist": jnp.minimum(a["dist"], b["dist"]),
+                "count": a["count"] + b["count"]}
+
+    def vertex_compute(self, prop, msg, it):
+        better = msg["dist"] < prop["dist"]
+        return ({"dist": jnp.minimum(prop["dist"], msg["dist"]),
+                 "count": prop["count"] + msg["count"]},
+                jnp.where(it == 1, prop["dist"] < 1.0, better))
+
+    def emit_message(self, src, dst, sp, ep):
+        return sp["dist"] < 3.4e38, {"dist": sp["dist"] + 1.0,
+                                     "count": jnp.int32(1)}
+
+
+@pytest.fixture(scope="module")
+def banded_part_graph():
+    return gio.part_community_graph(1, 512, degree=16, cross_edges=0,
+                                    seed=7)
+
+
+# ---------------------------------------------------------------------------
+# End to end (in-process mesh): schedule × frontier × prefetch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_distributed_prefetch_matrix(schedule, banded_part_graph):
+    """Per-bucket prefetch vs resident, bit-identical across frontier
+    modes (PageRank float-sum bitwise + capped-iteration SSSP), with the
+    windows actually attached (info reports them)."""
+    g = banded_part_graph
+    for frontier in ("dense", "auto", "sparse"):
+        base, binfo = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, 3), g, max_iter=3,
+            schedule=schedule, kernel="on", reorder="rcm:part",
+            frontier=frontier, prefetch="off")
+        out, info = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, 3), g, max_iter=3,
+            schedule=schedule, kernel="on", reorder="rcm:part",
+            frontier=frontier, prefetch="on")
+        assert binfo["prefetch_windows"] is None
+        assert info["prefetch_windows"] is not None
+        assert any(w > 0 for w in info["prefetch_windows"])
+        np.testing.assert_array_equal(np.asarray(out["rank"]),
+                                      np.asarray(base["rank"]),
+                                      err_msg=f"{schedule}/{frontier}")
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_distributed_prefetch_sssp_frontier_auto(schedule,
+                                                 banded_part_graph):
+    g = banded_part_graph
+    base, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=6,
+                                     schedule=schedule, kernel="on",
+                                     reorder="rcm:part", frontier="auto",
+                                     prefetch="off")
+    out, info = run_vcprog_distributed(SSSPProgram(0), g, max_iter=6,
+                                       schedule=schedule, kernel="on",
+                                       reorder="rcm:part", frontier="auto",
+                                       prefetch="auto")
+    assert info["prefetch_windows"] is not None  # auto + kernel_on builds
+    np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                  np.asarray(base["distance"]))
+
+
+def test_distributed_prefetch_packed_multileaf(banded_part_graph):
+    """Mixed-monoid record: the bucket planes take the PACKED+prefetch
+    fused shape — still bitwise equal to resident."""
+    g = banded_part_graph
+    base, _ = run_vcprog_distributed(_TwoLeaf(), g, max_iter=4,
+                                     schedule="ring", kernel="on",
+                                     reorder="rcm:part", prefetch="off")
+    out, info = run_vcprog_distributed(_TwoLeaf(), g, max_iter=4,
+                                       schedule="ring", kernel="on",
+                                       reorder="rcm:part", prefetch="on")
+    assert info["prefetch_windows"] is not None
+    for k in ("dist", "count"):
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(base[k]))
+
+
+def test_prefetch_tables_inert_on_unfused_path(banded_part_graph):
+    """prefetch="on" forces the table build even with the kernels off;
+    the unfused bucket paths never consult the tables — bit-identical."""
+    g = banded_part_graph
+    base, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=6,
+                                     schedule="allgather", kernel="off",
+                                     reorder="rcm:part", prefetch="off")
+    out, info = run_vcprog_distributed(SSSPProgram(0), g, max_iter=6,
+                                       schedule="allgather", kernel="off",
+                                       reorder="rcm:part", prefetch="on")
+    assert info["prefetch_windows"] is not None  # "on" builds regardless
+    np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                  np.asarray(base["distance"]))
+
+
+def test_prefetch_off_matches_unwindowed(banded_part_graph):
+    """prefetch="off" through the SINGLE-device plane: the resident
+    kernel on a windowed DeviceGraph equals the prefetch run."""
+    g = banded_part_graph
+    base, _ = run_vcprog(SSSPProgram(0), g, max_iter=20, engine="pushpull",
+                         kernel="on", reorder="rcm", prefetch="off")
+    out, _ = run_vcprog(SSSPProgram(0), g, max_iter=20, engine="pushpull",
+                        kernel="on", reorder="rcm", prefetch="auto")
+    np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                  np.asarray(base["distance"]))
+
+
+def test_run_vcprog_rejects_bad_prefetch(banded_part_graph):
+    with pytest.raises(ValueError, match="prefetch"):
+        run_vcprog(SSSPProgram(0), banded_part_graph, max_iter=2,
+                   prefetch="sometimes")
+    with pytest.raises(ValueError, match="prefetch"):
+        run_vcprog_distributed(SSSPProgram(0), banded_part_graph,
+                               max_iter=2, prefetch=True)
+
+
+def test_ring_requires_shared_windows():
+    from repro.core.engines.distributed import make_distributed_step
+
+    with pytest.raises(ValueError, match="shared"):
+        make_distributed_step(SSSPProgram(0), 64, 2, schedule="ring",
+                              prefetch_windows=(8, 16))
+    with pytest.raises(ValueError, match="entries"):
+        make_distributed_step(SSSPProgram(0), 64, 2, schedule="allgather",
+                              prefetch_windows=(8,))
+
+
+# ---------------------------------------------------------------------------
+# Tiny graphs: E < 8 and v_per_part < 8 through the sparse machinery
+# ---------------------------------------------------------------------------
+
+def _tiny_graph():
+    return from_edges([0, 1, 2, 3, 0], [1, 2, 3, 4, 5], 6,
+                      edge_props={"weight":
+                                  np.ones(5, np.float32)})
+
+
+@pytest.mark.parametrize("kernel", ["off", "on"])
+def test_tiny_graph_frontier_compaction(kernel):
+    """E=5 < 8: the workset capacity exceeds E (8-aligned) and the
+    sparse arm must still be exact."""
+    g = _tiny_graph()
+    base, _ = run_vcprog(SSSPProgram(0), g, max_iter=10, engine="pushpull",
+                         kernel=kernel, frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, _ = run_vcprog(SSSPProgram(0), g, max_iter=10,
+                            engine="pushpull", kernel=kernel, frontier=fr)
+        np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                      np.asarray(base["distance"]))
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_tiny_graph_delta_exchange(schedule):
+    """v_per_part=6 < 8: the delta-exchange capacity K=8 > v_pp (sentinel
+    slots dropped on scatter) — still bit-identical to dense."""
+    g = _tiny_graph()
+    base, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=10,
+                                     schedule=schedule, kernel="off",
+                                     frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, _ = run_vcprog_distributed(SSSPProgram(0), g, max_iter=10,
+                                        schedule=schedule, kernel="off",
+                                        frontier=fr)
+        np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                      np.asarray(base["distance"]))
+
+
+# ---------------------------------------------------------------------------
+# Knob threading + resolver validation (satellites)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_knob_through_api(banded_part_graph):
+    import repro
+
+    g = banded_part_graph
+    base, _ = repro.UniGPS(engine="pushpull").sssp(g, 0, max_iter=20)
+    u = repro.UniGPS(engine="pushpull", kernel="on", prefetch="off")
+    d1, _ = u.sssp(g, 0, max_iter=20)                     # session default
+    d2, _ = u.sssp(g, 0, max_iter=20, prefetch="auto")    # per-call wins
+    np.testing.assert_array_equal(d1, base)
+    np.testing.assert_array_equal(d2, base)
+    with pytest.raises(ValueError, match="prefetch"):
+        u.sssp(g, 0, max_iter=2, prefetch="never")
+
+
+def test_resolvers_reject_unknowns():
+    """The canonical resolvers (and the vcprog compatibility delegate)
+    raise on unknown strings instead of silently falling through."""
+    for bad in ("fused", "ON", 3):
+        with pytest.raises(ValueError):
+            message_plane.resolve_kernel_mode(bad)
+        with pytest.raises(ValueError):
+            vcprog.resolve_kernel_mode(bad)  # the delegate, same rules
+    with pytest.raises(ValueError):
+        message_plane.resolve_frontier_mode("thin")
+    with pytest.raises(ValueError):
+        message_plane.resolve_prefetch_mode("windowed")
+    assert message_plane.resolve_prefetch_mode(None) == "auto"
+    assert message_plane.resolve_kernel_arg("on", None) is True
+    assert message_plane.resolve_kernel_arg("on", False) is False  # alias wins
+
+
+def test_callback_engine_threads_frontier(kernel_graph):
+    """The callback engine ships the session frontier mode through its
+    pure_callback plane call — sparse/auto equal dense end to end."""
+    base, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                         engine="callback", frontier="dense")
+    for fr in ("auto", "sparse"):
+        out, _ = run_vcprog(SSSPProgram(0), kernel_graph, max_iter=60,
+                            engine="callback", frontier=fr)
+        np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                      np.asarray(base["distance"]))
+
+
+# ---------------------------------------------------------------------------
+# The real 8-part mesh (acceptance criterion) — subprocess, slow lane
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import io as gio
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import PageRankProgram
+
+# graph A — per-part banded communities + a few uniform cross edges:
+# diagonal buckets get real windows, several off-diagonal buckets take
+# the per-bucket resident fallback (allgather/push unroll per bucket).
+# graph B — no cross edges: every bucket column shares one window, so
+# the ring schedule's shared-window prefetch genuinely engages too.
+g_mixed = gio.part_community_graph(8, 256, degree=16, cross_edges=16,
+                                   seed=5)
+g_band = gio.part_community_graph(8, 256, degree=16, cross_edges=0,
+                                  seed=5)
+out = {}
+for schedule, g in (("allgather", g_mixed), ("push", g_mixed),
+                    ("ring", g_band)):
+    runs = {}
+    for pf in ("off", "on"):
+        vp, info = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, 3), g, max_iter=3,
+            schedule=schedule, kernel="on", reorder="rcm:part",
+            frontier="auto", prefetch=pf)
+        runs[pf] = (np.asarray(vp["rank"]), info)
+    info_on = runs["on"][1]
+    ok = bool(np.array_equal(runs["on"][0], runs["off"][0]))
+    windows = info_on["prefetch_windows"]
+    out[schedule] = {
+        "bit_identical": ok,
+        "num_parts": info_on["num_parts"],
+        "windows": list(windows) if windows else None,
+    }
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_prefetch_8dev_subprocess():
+    """Per-bucket scalar-prefetch on a REAL 8-part mesh: bit-identical
+    to the resident path for every schedule, with genuinely windowed
+    buckets on allgather/push (per-bucket fallback included). The
+    in-process mesh has one device, so the multi-part window sharing
+    (one static window per bucket across ALL dst-parts) only exists
+    here."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    from conftest import subprocess_env
+
+    r = subprocess.run([_sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = _json.loads(line[len("RESULT:"):])
+    for schedule, res in out.items():
+        assert res["bit_identical"], (schedule, res)
+        assert res["num_parts"] == 8
+    # allgather/push attach per-bucket windows with at least one real
+    # window AND at least one per-bucket resident fallback on the
+    # mixed graph; ring's shared window engages on the band graph
+    for schedule in ("allgather", "push"):
+        ws = out[schedule]["windows"]
+        assert ws is not None and any(w > 0 for w in ws), (schedule, ws)
+        assert any(w == 0 for w in ws), (schedule, ws)  # per-bucket fallback
+    ws = out["ring"]["windows"]
+    assert ws is not None and len(set(ws)) == 1 and ws[0] > 0, ws

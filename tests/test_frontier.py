@@ -37,11 +37,25 @@ def test_make_frontier_counts_once():
 
 def test_workset_capacity_bounds():
     assert workset_capacity(0) == 1
-    assert workset_capacity(4) == 4
     assert workset_capacity(1000, 1.0) == 1000
     cap = workset_capacity(1000)
     assert cap % 8 == 0 and cap >= SPARSE_CAP_FRAC * 1000
     assert workset_capacity(1000, 0.0001) == 8  # floor
+
+
+def test_workset_capacity_always_aligned():
+    """Tiny (n < 8) and unaligned n still get a sublane-aligned capacity
+    (>= n; the excess slots carry sentinel pads) — the kernels and the
+    distributed delta exchange rely on the alignment unconditionally."""
+    for n in (1, 4, 7):
+        assert workset_capacity(n) == 8          # tiny-graph path
+        assert workset_capacity(n, 1.0) == 8
+    assert workset_capacity(12, 1.0) == 16       # unaligned exact capacity
+    assert workset_capacity(9) == 8
+    for n in (1, 4, 7, 9, 12, 100, 1000):
+        for frac in (0.0001, 0.125, 0.9, 1.0):
+            cap = workset_capacity(n, frac)
+            assert cap % 8 == 0 and cap >= min(n * frac, n)
 
 
 @pytest.mark.parametrize("n,cap", [(0, 1), (7, 7), (64, 16), (64, 64)])
