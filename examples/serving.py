@@ -1,6 +1,12 @@
-"""Batched serving example: prefill + KV-cache greedy decode on a reduced
-qwen3 (GQA + qk_norm) and a reduced recurrentgemma (RG-LRU hybrid — O(1)
-state, the long-context family), through the serve-step builders.
+"""Batched graph-query serving: the production shape ROADMAP item 1
+targets — many concurrent queries of the SAME operator (landmark
+distances, personalized PageRank recommendations, multi-source BFS)
+answered by ONE lane-packed execution instead of a Python loop.
+
+Each request batch becomes the `sources=` axis: Q query lanes ride the
+packed message-plane slabs, so every superstep costs one O(E) pass
+regardless of Q, and per-lane results are bit-identical to running the
+queries one at a time.
 
     PYTHONPATH=src python examples/serving.py
 """
@@ -9,54 +15,63 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import models as M
-from repro.configs import get_config, smoke
-from repro.launch.mesh import make_host_mesh
-from repro.train import step as TS
+import repro
+from repro.core import io as gio
 
 
-def serve_demo(arch: str, batch=4, prompt_len=24, gen_len=24):
-    cfg = smoke(get_config(arch)).replace(dtype="float32")
-    mesh = make_host_mesh()
-    key = jax.random.PRNGKey(0)
-    params, _ = M.init_model(cfg, key)
-    max_len = prompt_len + gen_len
-
-    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
-    prefill = jax.jit(lambda p, t: TS.make_prefill_step(cfg, mesh,
-                                                        max_len)(p, t))
-    serve = jax.jit(TS.make_serve_step(cfg, mesh), donate_argnums=(2,))
-
-    logits, state = prefill(params, prompt)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    outs = [tok]
+def serve_landmarks(unigps, g, batch):
+    """Distance-oracle table: one batched SSSP run per request batch."""
     t0 = time.time()
-    for _ in range(gen_len - 1):
-        logits, state = serve(params, tok, state)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs.append(tok)
-    tok.block_until_ready()
+    L, info = unigps.landmark_distances(g, batch)
     dt = time.time() - t0
-    gen = np.stack([np.asarray(t) for t in outs], 1)
+    print(f"  landmark_distances Q={len(batch):2d} {dt*1e3:8.1f} ms  "
+          f"({dt*1e3/len(batch):6.1f} ms/query, iters={info['iterations']})")
+    return L
 
-    # teacher-forcing check: decode path == full forward on the same tokens
-    full = jnp.concatenate([prompt, jnp.asarray(gen)], axis=1)
-    ref_logits, _, _ = M.forward(params, cfg, full)
-    ref_last = np.argmax(np.asarray(ref_logits[:, -2]), -1)
-    assert np.array_equal(ref_last, gen[:, -1]), "decode != forward"
 
-    print(f"{arch:22s} batch={batch} {dt*1e3/max(gen_len-1,1):6.1f} ms/tok  "
-          f"sample={gen[0][:10].tolist()}")
+def serve_recommendations(unigps, g, users, num_iters=10):
+    """PPR personalization vectors for a batch of users in one run."""
+    t0 = time.time()
+    P, info = unigps.personalized_pagerank(g, sources=users,
+                                           num_iters=num_iters)
+    dt = time.time() - t0
+    print(f"  personalized_ppr   Q={len(users):2d} {dt*1e3:8.1f} ms  "
+          f"({dt*1e3/len(users):6.1f} ms/query)")
+    return P
 
 
 def main():
-    serve_demo("qwen3-14b")            # dense GQA + qk_norm, KV cache
-    serve_demo("recurrentgemma-9b")    # RG-LRU hybrid, recurrent state
-    serve_demo("xlstm-350m")           # mLSTM/sLSTM, O(1) state
+    unigps = repro.UniGPS()
+    g = gio.rmat_graph(12, edge_factor=8, seed=7, weighted=True)
+    print(f"serving graph: |V|={g.num_vertices} |E|={g.num_edges}")
+
+    hubs = np.argsort(-g.out_degree)[:32].tolist()
+
+    # warm the compiled runners (one compile per batch width)
+    serve_landmarks(unigps, g, hubs[:8])
+    serve_recommendations(unigps, g, hubs[:8])
+    print("-- warm --")
+
+    # request batches of different widths reuse the one-pass plane
+    L8 = serve_landmarks(unigps, g, hubs[:8])
+    serve_landmarks(unigps, g, hubs[:8])
+
+    users = hubs[8:16]
+    P = serve_recommendations(unigps, g, users)
+
+    # per-lane answers match solo queries exactly (lane bit-identity)
+    solo, _ = unigps.sssp(g, root=hubs[0])
+    assert np.array_equal(L8[0], solo, equal_nan=True), "lane != solo query"
+
+    # top-k recommendations per user from the PPR lanes
+    print("top-3 recommendations per user:")
+    for i, user in enumerate(users[:4]):
+        scores = P[i].copy()
+        scores[user] = -np.inf  # don't recommend the user to themselves
+        top = np.argsort(-scores)[:3]
+        print(f"  user {user:6d} -> {top.tolist()}")
     print("OK")
 
 

@@ -103,10 +103,15 @@ class UniGPS:
     # -- VCProg API (paper Fig. 3 `unigps.vcprog(...)`) ---------------------
     def vcprog(self, graph: PropertyGraph, user_program: VCProgram,
                max_iter: int = 100, engine: Optional[str] = None,
-               output_file: Optional[str] = None, **kw):
+               output_file: Optional[str] = None, batch: int | None = None,
+               **kw):
+        """`user_program` may be one program, a sequence of programs (one
+        query lane each), or one program with `batch=Q` — batched lanes
+        share every O(E) plane pass and return [V, Q] leaves."""
         eng = engine or self.engine
         vprops, info = run_vcprog(user_program, graph, max_iter=max_iter,
-                                  engine=eng, **self._kernel_kw(kw))
+                                  engine=eng, batch=batch,
+                                  **self._kernel_kw(kw))
         if output_file:
             host = {k: np.asarray(v) for k, v in vprops.items()}
             gio.save_vertex_table(host, output_file)
@@ -125,13 +130,33 @@ class UniGPS:
 
     def sssp(self, graph, root: int = 0, max_iter: int = 100,
              engine: Optional[str] = None, output_file: Optional[str] = None,
-             **kw):
+             sources=None, **kw):
         dist, info = operators.sssp(graph, root, max_iter,
                                     engine=engine or self.engine,
-                                    **self._kernel_kw(kw))
+                                    sources=sources, **self._kernel_kw(kw))
         if output_file:
-            gio.save_vertex_table({"distance": dist}, output_file)
+            table = ({"distance": dist} if sources is None else
+                     {f"distance_{r}": dist[i]
+                      for i, r in enumerate(sources)})
+            gio.save_vertex_table(table, output_file)
         return dist, info
+
+    def landmark_distances(self, graph, landmarks, max_iter: int = 100,
+                           engine: Optional[str] = None, **kw):
+        """[Q, V] distances from Q landmark roots in ONE batched SSSP
+        run — the multi-source serving entry point."""
+        return operators.landmark_distances(graph, landmarks, max_iter,
+                                            engine=engine or self.engine,
+                                            **self._kernel_kw(kw))
+
+    def personalized_pagerank(self, graph, source: int | None = None,
+                              num_iters: int = 20, damping: float = 0.85,
+                              engine: Optional[str] = None, sources=None,
+                              **kw):
+        return operators.personalized_pagerank(
+            graph, source, num_iters, damping,
+            engine=engine or self.engine, sources=sources,
+            **self._kernel_kw(kw))
 
     def connected_components(self, graph, max_iter: int = 200,
                              engine: Optional[str] = None,
@@ -144,10 +169,10 @@ class UniGPS:
         return labels, info
 
     def bfs(self, graph, root: int = 0, max_iter: int = 100,
-            engine: Optional[str] = None, **kw):
+            engine: Optional[str] = None, sources=None, **kw):
         return operators.bfs(graph, root, max_iter,
                              engine=engine or self.engine,
-                             **self._kernel_kw(kw))
+                             sources=sources, **self._kernel_kw(kw))
 
     def degrees(self, graph, engine: Optional[str] = None, **kw):
         return operators.degrees(graph, engine=engine or self.engine,

@@ -53,8 +53,13 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
                                                   process, it)
         # the frontier is first-class from here on: engines consume the
         # mask (push/pull heuristic, the plane's per-edge flags); the
-        # distributed engine additionally dispatches on the count
-        front = vcprog.make_frontier(active)
+        # distributed engine additionally dispatches on the count. For
+        # batched programs `active` is already the OR across lanes (the
+        # adapter's scalar is_active), and the per-lane masks ride along
+        # so the union-driven dispatch stays inspectable per lane
+        lanes = (vprops["_lane_act"] > 0
+                 if isinstance(program, vcprog.BatchedProgram) else None)
+        front = vcprog.make_frontier(active, lane_mask=lanes)
         inbox, has_msg, extra = engine.emit_and_combine(
             graph, program, vprops, front, extra, empty, kernel_on,
             frontier, prefetch)
@@ -112,12 +117,21 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
                use_kernel: bool | None = None, reorder: str = "none",
                frontier: str = "dense", prefetch: str = "auto",
-               gdev: DeviceGraph | None = None):
+               gdev: DeviceGraph | None = None, batch: int | None = None):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
     kernel: "auto" (default) picks the fused/segment Pallas kernels on TPU
     and the XLA segment ops on CPU; "on"/"off" force a path. `use_kernel`
     is the legacy boolean alias and wins when given.
+
+    batch: the multi-query axis. `program` may be a SEQUENCE of same-class
+    programs (one query lane each), or `batch=Q` replicates one program
+    across Q lanes — either way the lanes execute as ONE
+    :class:`~repro.core.vcprog.BatchedProgram` whose record leaves carry a
+    trailing [Q] lane axis, so every message-plane pass covers all Q
+    queries in one O(E) sweep (the packed fused kernel streams the lanes
+    as slab columns). Returned vprops leaves are [V, Q]; per-lane values
+    are bit-identical to Q sequential runs and `info["batch"] = Q`.
 
     reorder: "none" (default) | "rcm" | "degree" | "auto" — host-side
     vertex reordering for gather locality (core/reorder.py). Results are
@@ -145,14 +159,22 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
         from . import distributed
         return distributed.run_vcprog_distributed(
             program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
-            reorder=reorder, frontier=frontier, prefetch=prefetch)
+            reorder=reorder, frontier=frontier, prefetch=prefetch,
+            batch=batch)
+    program = vcprog.as_batched(program, batch)
     if gdev is None:
         gdev = prepare_device_graph(graph, reorder=reorder)
     kernel_on = message_plane.resolve_kernel_arg(kernel, use_kernel)
     runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
                             kernel_on, frontier, prefetch)
     vprops, iters, num_active = runner(gdev)
-    return vprops, {"iterations": int(iters), "active_at_end": int(num_active)}
+    info = {"iterations": int(iters), "active_at_end": int(num_active)}
+    if isinstance(program, vcprog.BatchedProgram):
+        # un-wrap the lane axis: the user sees the base record with [V, Q]
+        # leaves (the `_lane_act` bookkeeping column stays internal)
+        vprops = vprops["p"]
+        info["batch"] = program.num_lanes
+    return vprops, info
 
 
 # Registered by the engine modules at import time (see package __init__).

@@ -354,7 +354,13 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
         process = active | has_msg
         vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                               process, it)
-        front = vcprog.make_frontier(active)
+        # batched programs: `active` is the OR across lanes already; the
+        # per-lane masks ride the frontier so the delta-exchange payloads
+        # (which gather whole [Q]-lane rows of the union frontier) stay
+        # inspectable per lane
+        lanes = (vprops["_lane_act"] > 0
+                 if isinstance(program, vcprog.BatchedProgram) else None)
+        front = vcprog.make_frontier(active, lane_mask=lanes)
 
         # Phases 3+1: emit along in-edges, reading remote src props
         inbox0 = records.tree_tile(empty, v_pp)
@@ -692,7 +698,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            use_kernel: bool | None = None,
                            reorder: str = "none",
                            frontier: str = "dense",
-                           prefetch: str = "auto"):
+                           prefetch: str = "auto",
+                           batch: int | None = None):
     """Distributed Algorithm-1 entry point (one part per mesh device).
 
     prefetch ("auto"|"on"|"off"): per-bucket scalar-prefetch window
@@ -702,7 +709,14 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     Buckets whose required slab pair would be resident-sized keep a
     per-bucket resident fallback (window 0); the result is bit-identical
     in every mode.
+
+    batch / program-sequence: same contract as `run_vcprog` — Q query
+    lanes execute as one BatchedProgram over [v_pp, Q] local state, so
+    every bucket plane pass AND every delta-exchange hop carries all Q
+    lanes at once (the compacted frontier payloads gather whole [Q]-lane
+    rows). Result leaves are [V, Q]; `info["batch"] = Q`.
     """
+    program = vcprog.as_batched(program, batch)
     if mesh is None:
         dev = np.asarray(jax.devices())
         mesh = Mesh(dev.reshape(-1), (AXIS,))
@@ -769,7 +783,13 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     if sg["inv_perm"] is not None:
         # un-permute: row old_id of the result lives at new_id=inv_perm[old]
         host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
-    return host, {"schedule": schedule, "num_parts": Pn,
-                  "kernel_on": kernel_on, "reorder": reorder,
-                  "frontier": frontier, "prefetch": prefetch,
-                  "prefetch_windows": pf_windows}
+    info = {"schedule": schedule, "num_parts": Pn,
+            "kernel_on": kernel_on, "reorder": reorder,
+            "frontier": frontier, "prefetch": prefetch,
+            "prefetch_windows": pf_windows}
+    if isinstance(program, vcprog.BatchedProgram):
+        # un-wrap the lane axis: the user sees the base record with [V, Q]
+        # leaves (the `_lane_act` bookkeeping column stays internal)
+        host = host["p"]
+        info["batch"] = program.num_lanes
+    return host, info

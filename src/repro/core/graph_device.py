@@ -68,6 +68,19 @@ def workset_capacity(num_items: int, frac: float = SPARSE_CAP_FRAC) -> int:
     return int(min(cap, -(-n // 8) * 8))
 
 
+def lane_slab_width(num_lanes: int) -> int:
+    """Slab columns Q query lanes occupy in the packed fused kernel:
+    a batched scalar leaf is a [V, Q] record leaf, so its PackSlot takes
+    `ncols = Q` and the group slab pads to the sublane quantum
+    (kernels.fused_gather_emit.LANE_ALIGN). Per-launch slab work is
+    therefore flat in Q up to the alignment width and grows in aligned
+    steps after — the quantity the batched-bench rows and the
+    Q-crossover guidance in docs/perf.md are stated against."""
+    from ..kernels.fused_gather_emit import LANE_ALIGN
+    q = max(int(num_lanes), 1)
+    return -(-q // LANE_ALIGN) * LANE_ALIGN
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EdgeLayout:

@@ -35,6 +35,18 @@ compacts the active edge set into a static-capacity workset with a dense
 fallback above the crossover — pushpull's push/pull density heuristic
 promoted into the dispatcher, inherited by every engine. All modes are
 bit-identical to dense.
+
+Batched multi-query execution rides this plane for free: a
+:class:`~repro.core.vcprog.BatchedProgram` stores Q query lanes as a
+trailing axis on every record leaf ([V, Q] vprops, [E, Q] messages), so
+``_has_vector_leaves`` routes it to the PACKED fused kernel where the
+lanes stream as slab columns — ONE pass over the edge layout per
+superstep regardless of Q. The frontier the plane consumes is the
+OR-across-lanes union (``vcprog.frontier_mask``), so block-skip and
+sparse compaction keep every block/edge that ANY unconverged lane still
+needs; converged lanes emit exact monoid identities, so their folds are
+per-lane no-ops and each lane's result stays bit-identical to its own
+sequential run.
 """
 from __future__ import annotations
 

@@ -23,6 +23,28 @@ from .graph import PropertyGraph
 INF = float(3.4e38)
 
 
+def _validate_root(graph: PropertyGraph, root, name: str = "root") -> int:
+    """Bounds-check a source vertex id. A silent out-of-range root used
+    to yield an all-inf/-1 result (no vertex ever activates); batched
+    multi-source calls must fail loudly instead, per entry."""
+    r = int(root)
+    if r < 0 or r >= graph.num_vertices:
+        raise ValueError(
+            f"{name}={r} is out of bounds for a graph with "
+            f"{graph.num_vertices} vertices")
+    return r
+
+
+def _validate_sources(graph: PropertyGraph, sources, name: str = "sources"):
+    """Bounds-check every entry of a multi-source list (ValueError names
+    the offending entry). Returns the entries as python ints."""
+    sources = list(sources)
+    if not sources:
+        raise ValueError(f"{name} must contain at least one vertex id")
+    return [_validate_root(graph, s, name=f"{name}[{i}]")
+            for i, s in enumerate(sources)]
+
+
 # ---------------------------------------------------------------------------
 # PageRank (paper Fig. 8 "PR")
 # ---------------------------------------------------------------------------
@@ -113,14 +135,40 @@ def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
          engine: str = "pushpull", kernel: str = "auto",
          use_kernel: bool | None = None,
          reorder: str = "none", frontier: str = "dense",
-         prefetch: str = "auto"):
-    prog = SSSPProgram(root)
+         prefetch: str = "auto", sources=None):
+    """Bellman-Ford distances. `sources=[r0, r1, ...]` runs Q=len(sources)
+    queries as lanes of ONE batched program — one O(E) plane pass per
+    superstep total — and returns a [Q, V] distance matrix (row i = the
+    distances `sssp(root=sources[i])` would return, bit-identical)."""
+    if sources is not None:
+        roots = _validate_sources(graph, sources)
+        progs = [SSSPProgram(r) for r in roots]
+        vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
+                                  engine=engine, kernel=kernel,
+                                  use_kernel=use_kernel, reorder=reorder,
+                                  frontier=frontier, prefetch=prefetch)
+        dist = np.asarray(vprops["distance"]).T  # [V, Q] -> [Q, V]
+        return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
+    prog = SSSPProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
                               prefetch=prefetch)
     dist = np.asarray(vprops["distance"])
     return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
+
+
+def landmark_distances(graph: PropertyGraph, landmarks, max_iter: int = 100,
+                       engine: str = "pushpull", kernel: str = "auto",
+                       use_kernel: bool | None = None,
+                       reorder: str = "none", frontier: str = "dense",
+                       prefetch: str = "auto"):
+    """[Q, V] shortest-path distances from Q landmark vertices, computed
+    by ONE batched SSSP run (the landmark table of embedding/oracle
+    methods — the serving shape ROADMAP item 1 targets)."""
+    return sssp(graph, max_iter=max_iter, engine=engine, kernel=kernel,
+                use_kernel=use_kernel, reorder=reorder, frontier=frontier,
+                prefetch=prefetch, sources=landmarks)
 
 
 # ---------------------------------------------------------------------------
@@ -198,8 +246,20 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         engine: str = "pushpull", kernel: str = "auto",
         use_kernel: bool | None = None,
         reorder: str = "none", frontier: str = "dense",
-        prefetch: str = "auto"):
-    prog = BFSProgram(root)
+        prefetch: str = "auto", sources=None):
+    """BFS depths. `sources=[r0, r1, ...]` batches Q root queries into
+    one lane-packed run and returns a [Q, V] depth matrix (row i
+    bit-identical to `bfs(root=sources[i])`; unreachable = -1)."""
+    if sources is not None:
+        roots = _validate_sources(graph, sources)
+        progs = [BFSProgram(r) for r in roots]
+        vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
+                                  engine=engine, kernel=kernel,
+                                  use_kernel=use_kernel, reorder=reorder,
+                                  frontier=frontier, prefetch=prefetch)
+        depth = np.asarray(vprops["depth"]).T.astype(np.int64)
+        return np.where(depth >= 2**31 - 1, -1, depth), info
+    prog = BFSProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
@@ -234,14 +294,29 @@ class PersonalizedPageRankProgram(PageRankProgram):
                 "out_degree": prop["out_degree"]}, it < self.num_iters
 
 
-def personalized_pagerank(graph: PropertyGraph, source: int,
+def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
                           num_iters: int = 20, damping: float = 0.85,
                           engine: str = "pushpull", kernel: str = "auto",
                           use_kernel: bool | None = None,
                           reorder: str = "none", frontier: str = "dense",
-                          prefetch: str = "auto"):
+                          prefetch: str = "auto", sources=None):
+    """PPR mass from one source, or — with `sources=[s0, s1, ...]` — a
+    [Q, V] matrix of Q personalization vectors from ONE batched run (the
+    recommendation-serving shape: one plane pass feeds every user)."""
+    if sources is not None:
+        srcs = _validate_sources(graph, sources)
+        progs = [PersonalizedPageRankProgram(graph.num_vertices, num_iters,
+                                             s, damping) for s in srcs]
+        vprops, info = run_vcprog(progs, graph, max_iter=num_iters,
+                                  engine=engine, kernel=kernel,
+                                  use_kernel=use_kernel, reorder=reorder,
+                                  frontier=frontier, prefetch=prefetch)
+        return np.asarray(vprops["rank"]).T, info  # [V, Q] -> [Q, V]
+    if source is None:
+        raise ValueError("personalized_pagerank needs source= or sources=")
     prog = PersonalizedPageRankProgram(graph.num_vertices, num_iters,
-                                       source, damping)
+                                       _validate_root(graph, source,
+                                                      name="source"), damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,

@@ -18,6 +18,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import records
 
@@ -68,23 +69,67 @@ class Frontier(NamedTuple):
 
       mask:  [V] bool — vertex is in the frontier.
       count: scalar int32 — jnp.sum(mask).
+
+    Batched (multi-query) execution adds the per-lane view — Q
+    independent query states riding the slab lanes of one plane pass
+    (:class:`BatchedProgram`):
+
+      lane_mask:  optional [V, Q] bool — vertex is on lane q's frontier.
+                  ``mask`` is then the OR across lanes: the union frontier
+                  that feeds every dispatch decision (block-skip bitmap,
+                  compaction, delta exchange) so no block any lane needs
+                  is ever skipped.
+      lane_count: optional [Q] int32 — per-lane popcounts (diagnostics +
+                  the per-lane convergence signal).
+
+    Both default to None (the pytree flattens them away for unbatched
+    programs, so carrying a Frontier through `lax.while_loop` state or
+    `pure_callback` operands is shape-stable either way).
     """
 
     mask: jnp.ndarray
     count: jnp.ndarray
+    lane_mask: Any = None
+    lane_count: Any = None
 
 
-def make_frontier(mask) -> Frontier:
-    """Wrap an active mask as a Frontier (count computed here, once)."""
+def make_frontier(mask, lane_mask=None) -> Frontier:
+    """Wrap an active mask as a Frontier (count computed here, once).
+
+    `lane_mask` ([V, Q] bool) attaches the per-lane view of a batched
+    frontier; `mask` may then be None — the union mask is derived as the
+    OR across lanes. When both are given, `mask` must already BE that
+    union (the engines pass the `active` array whose per-vertex value is
+    ``any(lane)`` by construction — see :class:`BatchedProgram`).
+    """
     if isinstance(mask, Frontier):
         return mask
+    lane_count = None
+    if lane_mask is not None:
+        lane_mask = jnp.asarray(lane_mask).astype(bool)
+        lane_count = jnp.sum(lane_mask.astype(jnp.int32), axis=0)
+        if mask is None:
+            mask = jnp.any(lane_mask, axis=-1)  # union = OR across lanes
     mask = jnp.asarray(mask).astype(bool)
-    return Frontier(mask=mask, count=jnp.sum(mask.astype(jnp.int32)))
+    return Frontier(mask=mask, count=jnp.sum(mask.astype(jnp.int32)),
+                    lane_mask=lane_mask, lane_count=lane_count)
 
 
 def frontier_mask(active) -> jnp.ndarray:
-    """The bare [V] bool mask of a Frontier-or-mask value."""
-    return active.mask if isinstance(active, Frontier) else active
+    """The bare [V] bool (union) mask of a Frontier-or-mask value.
+    A raw [V, Q] per-lane mask is OR-reduced across lanes, so every
+    plane-side consumer (edge flags, block-skip bitmaps, push/pull
+    heuristics) sees the batched union without special-casing."""
+    mask = active.mask if isinstance(active, Frontier) else active
+    if getattr(mask, "ndim", 1) > 1:
+        mask = jnp.any(mask.reshape(mask.shape[0], -1), axis=1)
+    return mask
+
+
+def frontier_lanes(active):
+    """The optional [V, Q] per-lane mask of a Frontier-or-mask value
+    (None for unbatched frontiers and bare masks)."""
+    return active.lane_mask if isinstance(active, Frontier) else None
 
 
 def frontier_count(active) -> jnp.ndarray:
@@ -154,6 +199,204 @@ class VCProgram:
                      ) -> Tuple[Any, Record]:
         """Returns (is_emit, msg) for the out-edge (src, dst)."""
         raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-query execution: Q query states as slab lanes
+# ---------------------------------------------------------------------------
+
+class BatchedProgram(VCProgram):
+    """Q same-class VCPrograms executed as ONE program over lane-stacked
+    state — the `batch=` axis of `run_vcprog`.
+
+    The graph is NOT replicated: every record leaf grows a trailing lane
+    axis ([V] -> [V, Q], [E] -> [E, Q]) and the message plane streams the
+    lanes as slab columns of the packed fused kernel (PackSlot.ncols = Q),
+    so the resident, scalar-prefetch, packed and block-skip variants each
+    make ONE pass over the edge layout per superstep regardless of Q —
+    GraphX's data-parallel-over-graph-parallel framing.
+
+    Lane semantics (each lane bit-identical to its own sequential run):
+
+      * vertex state  ``{"p": <base record, [Q]-per-vertex leaves>,
+        "_lane_act": [Q] int32}`` — `_lane_act` is lane q's `active` bit
+        (int32, not bool, so it packs into the kernels' int slabs).
+      * messages      ``{"m": <base record, [Q] leaves>, "_lane_msg":
+        [Q] int32}`` — `_lane_msg` folds with MAX (identity 0), so lane
+        q's inbox bit reproduces the sequential per-lane `has_msg`.
+      * emit          lane q emits iff its own is_emit AND its own
+        `_lane_act`; non-emitting lanes contribute the base program's
+        EXACT empty message (the monoid identity), so folding them is a
+        no-op per lane. The scalar is_emit returned to the plane is the
+        OR across lanes — the union frontier machinery (emit veto,
+        block-skip bitmap, sparse compaction, delta exchange) needs no
+        lane awareness.
+      * compute       lane q processes iff its own `_lane_act | _lane_msg`;
+        a CONVERGED lane is masked out (keeps its old record, stays
+        inactive) instead of exiting the shared `lax.while_loop` — the
+        loop terminates when every lane has converged (the scalar
+        is_active is again the OR across lanes).
+
+    Constructor attributes are split host-side into lane-invariant values
+    (set concretely on the per-lane clones) and per-lane values (stacked
+    into [Q] arrays and vmapped as traced scalars), so `SSSPProgram(root)`
+    lanes differ only in the traced `root`. Everything stored on `self`
+    is hashable — repeated batched operator calls reuse the jit cache
+    exactly like unbatched ones (`engines.common._ProgramKey`).
+    """
+
+    def __init__(self, programs):
+        programs = tuple(programs)
+        if not programs:
+            raise ValueError("BatchedProgram needs at least one program")
+        cls = type(programs[0])
+        if any(type(p) is not cls for p in programs):
+            raise TypeError(
+                "all batched programs must be the same class, got "
+                f"{sorted({type(p).__name__ for p in programs})}")
+        keys = sorted(programs[0].__dict__)
+        for p in programs:
+            if sorted(p.__dict__) != keys:
+                raise ValueError(
+                    "batched programs must have identical attribute sets")
+        common, lane_attrs = [], []
+        for k in keys:
+            vals = [p.__dict__[k] for p in programs]
+            try:
+                same = all(bool(v == vals[0]) for v in vals[1:])
+            except (TypeError, ValueError):
+                same = False
+            if same:
+                common.append((k, vals[0]))
+            else:
+                try:
+                    np.asarray(vals, dtype=np.asarray(vals[0]).dtype)
+                except (TypeError, ValueError) as e:
+                    raise TypeError(
+                        f"per-lane attribute {k!r} must be numeric to ride "
+                        f"the lane vmap, got {vals!r}") from e
+                lane_attrs.append((k, tuple(vals)))
+        self._cls = cls
+        self._q = len(programs)
+        self._common = tuple(common)
+        self._lane_attrs = tuple(lane_attrs)
+
+    @property
+    def num_lanes(self) -> int:
+        return self._q
+
+    def _lane_program(self, values):
+        """A base-class clone whose per-lane attributes are `values` (one
+        per entry of `_lane_attrs`; concrete for host-side calls, traced
+        scalars inside the lane vmap)."""
+        p = object.__new__(self._cls)
+        for k, v in self._common:
+            setattr(p, k, v)
+        for (k, _), v in zip(self._lane_attrs, values):
+            setattr(p, k, v)
+        return p
+
+    def _vmap_lanes(self, method: str, in_axes: Tuple, *args):
+        """Run a base-program method once per lane via vmap. Lane ids are
+        always a mapped operand, so the vmap has a batch axis even when
+        every attribute is lane-invariant (outputs that do not depend on
+        the lane broadcast to [Q] for free)."""
+        attr_arrs = tuple(jnp.asarray(vals)
+                          for _, vals in self._lane_attrs)
+
+        def one(_lane, attr_vals, *a):
+            return getattr(self._lane_program(attr_vals), method)(*a)
+
+        return jax.vmap(one, in_axes=(0, 0) + in_axes)(
+            jnp.arange(self._q), attr_arrs, *args)
+
+    # -- monoid: mirror the batched message record ------------------------
+    @property
+    def monoid(self):
+        base = self._lane_program([v[0] for _, v in self._lane_attrs])
+        m = base.monoid
+        if isinstance(m, str):
+            if m not in ("sum", "min", "max"):
+                return "general"
+            m = jax.tree.map(lambda _: m, base.empty_message())
+        # `_lane_msg` folds with MAX over {0, 1}: identity 0 = "no message
+        # for this lane", so lane has-msg bits survive any fold order
+        return {"m": m, "_lane_msg": "max"}
+
+    # -- the five VCProgram methods, lane-vmapped -------------------------
+    def init_vertex(self, vid, out_degree, vprop):
+        props = self._vmap_lanes("init_vertex", (None, None, None),
+                                 vid, out_degree, vprop)
+        # every lane starts active, mirroring the engines' active0 = ones
+        return {"p": props, "_lane_act": jnp.ones((self._q,), jnp.int32)}
+
+    def empty_message(self):
+        return {"m": self._vmap_lanes("empty_message", ()),
+                "_lane_msg": jnp.zeros((self._q,), jnp.int32)}
+
+    def merge_message(self, m1, m2):
+        return {"m": self._vmap_lanes("merge_message", (0, 0),
+                                      m1["m"], m2["m"]),
+                "_lane_msg": jnp.maximum(m1["_lane_msg"], m2["_lane_msg"])}
+
+    def vertex_compute(self, prop, msg, it):
+        # lane q processes iff ITS OWN active|has_msg — the union process
+        # mask the engine applies is a superset, and lanes it includes
+        # spuriously are frozen right here (converged lanes keep their
+        # record and stay inactive; the sequential runs do exactly this
+        # via their own process masks)
+        process = (prop["_lane_act"] > 0) | (msg["_lane_msg"] > 0)
+        new_p, is_act = self._vmap_lanes("vertex_compute", (0, 0, None),
+                                         prop["p"], msg["m"], it)
+        new_p = records.tree_where(process, new_p, prop["p"])
+        new_act = process & is_act.astype(bool)
+        # scalar is_active = OR across lanes: the vertex stays in the
+        # union frontier (and the while_loop keeps running) until every
+        # lane at every vertex has converged
+        return ({"p": new_p, "_lane_act": new_act.astype(jnp.int32)},
+                jnp.any(new_act))
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        lane_act = src_prop["_lane_act"] > 0
+        is_emit, msg = self._vmap_lanes("emit_message", (None, None, 0, None),
+                                        src, dst, src_prop["p"], edge_prop)
+        emit = is_emit.astype(bool) & lane_act
+        # converged / non-emitting lanes contribute the EXACT identity, so
+        # the combine is a per-lane no-op for them (bit-identical to the
+        # lane's own sequential pass, which masks the same slots the same
+        # way before its segment fold)
+        empty = self._vmap_lanes("empty_message", ())
+        msg = records.tree_where(emit, msg, empty)
+        return jnp.any(emit), {"m": msg,
+                               "_lane_msg": emit.astype(jnp.int32)}
+
+
+def as_batched(program, batch=None):
+    """Normalize `run_vcprog`'s (program, batch=) argument pair.
+
+    A sequence of programs becomes a :class:`BatchedProgram` (one lane
+    each); `batch=Q` with a single program replicates it across Q lanes
+    (identical queries — the bench shape). Returns the program unchanged
+    when no batching was requested."""
+    if isinstance(program, (list, tuple)):
+        program = BatchedProgram(program)
+        if batch is not None and int(batch) != program.num_lanes:
+            raise ValueError(
+                f"batch={batch} does not match the {program.num_lanes} "
+                "programs given")
+        return program
+    if batch is None:
+        return program
+    q = int(batch)
+    if q < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if isinstance(program, BatchedProgram):
+        if program.num_lanes != q:
+            raise ValueError(
+                f"batch={q} does not match the BatchedProgram's "
+                f"{program.num_lanes} lanes")
+        return program
+    return BatchedProgram((program,) * q)
 
 
 # ---------------------------------------------------------------------------

@@ -260,7 +260,16 @@ def fusable(emit_fn, monoid, vprops, eprops, num_edges: int,
 def _block_active(active, src, valid, pad_e, n_e: int, be: int):
     """Per-edge-block frontier bitmap [n_e] int32: does any edge in the
     block have an active src (and a valid slot)? Computed on device each
-    superstep — one cheap [E] int gather + a blocked max."""
+    superstep — one cheap [E] int gather + a blocked max.
+
+    `active` may carry trailing query-lane axes ([V, Q] per-lane masks
+    from a batched run): lanes are OR-reduced first, so the bitmap keeps
+    a block live whenever ANY lane still needs it — the union bitmap is
+    a superset of every per-lane bitmap, so block-skip never drops a
+    block some lane's frontier touches."""
+    active = jnp.asarray(active)
+    if active.ndim > 1:
+        active = active.reshape(active.shape[0], -1).max(axis=1)
     flag = jnp.take(active.astype(jnp.int32), src.astype(jnp.int32), axis=0)
     if valid is not None:
         flag = flag * valid.astype(jnp.int32)
@@ -442,6 +451,7 @@ class PackSlot(NamedTuple):
     leaf: int     # flat leaf index in the record
     offset: int   # first column in the group's slab
     ncols: int = 1  # columns occupied ([E]/[V] scalar leaf = 1, [.., D] = D)
+    vector: bool = False  # leaf rank: [N, D] (even D=1) vs plain [N]
 
 
 class PackGroup(NamedTuple):
@@ -459,7 +469,7 @@ class PackSpec(NamedTuple):
     msg_groups: Tuple[PackGroup, ...]
 
 
-def _pack_groups(keys, ncols) -> Tuple[PackGroup, ...]:
+def _pack_groups(keys, ncols, vectors) -> Tuple[PackGroup, ...]:
     order = {}
     for i, k in enumerate(keys):
         order.setdefault(k, []).append(i)
@@ -467,7 +477,8 @@ def _pack_groups(keys, ncols) -> Tuple[PackGroup, ...]:
     for (dtype, monoid), idxs in order.items():
         slots, off = [], 0
         for i in idxs:
-            slots.append(PackSlot(leaf=i, offset=off, ncols=int(ncols[i])))
+            slots.append(PackSlot(leaf=i, offset=off, ncols=int(ncols[i]),
+                                  vector=bool(vectors[i])))
             off += int(ncols[i])
         out.append(PackGroup(
             dtype=dtype, monoid=monoid, width=_ceil_to(off, LANE_ALIGN),
@@ -496,10 +507,12 @@ def make_pack_spec(emit_fn, monoids, vprops, eprops, num_edges: int
             f"{len(msg_sds)} message leaves")
     return PackSpec(
         vp_groups=_pack_groups([(s.dtype.name, "") for s in vp_sds],
-                               [_leaf_cols(s) for s in vp_sds]),
+                               [_leaf_cols(s) for s in vp_sds],
+                               [len(s.shape) > 1 for s in vp_sds]),
         msg_groups=_pack_groups([(s.dtype.name, m)
                                  for s, m in zip(msg_sds, monoids)],
-                                [_leaf_cols(s) for s in msg_sds]))
+                                [_leaf_cols(s) for s in msg_sds],
+                                [len(s.shape) > 1 for s in msg_sds]))
 
 
 def _pack_cols(leaves, group: PackGroup, fill):
@@ -519,8 +532,9 @@ def _pack_cols(leaves, group: PackGroup, fill):
 
 
 def _unpack_slot(slab, slot: PackSlot):
-    """The slot's columns of a slab, in the leaf's own rank."""
-    if slot.ncols == 1:
+    """The slot's columns of a slab, in the leaf's own rank ([N, 1]
+    vector leaves — e.g. Q=1 batched lanes — stay 2-D)."""
+    if slot.ncols == 1 and not slot.vector:
         return slab[:, slot.offset]
     return slab[:, slot.offset:slot.offset + slot.ncols]
 

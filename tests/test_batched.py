@@ -1,0 +1,275 @@
+"""Batched multi-query execution (the `batch=` axis / `sources=` API).
+
+Lane semantics under test:
+  * Q=1 batched == unbatched, bitwise, on every engine x kernel x frontier
+  * every lane of a Q-lane run == its own sequential run, bitwise, on
+    every engine AND every distributed schedule x kernel x frontier
+  * staggered per-lane convergence freezes early lanes (the shared
+    while_loop runs to the slowest lane, converged lanes mask out)
+  * the unioned block-skip bitmap never drops a block any lane needs
+    (hypothesis property on `_block_active` with [V, Q] masks)
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import vcprog
+from repro.core.graph import from_edges
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import INF, SSSPProgram
+
+ENGINES = ["pregel", "gas", "pushpull", "callback"]
+SCHEDULES = ["allgather", "ring", "push"]
+ROOTS = [0, 5, 17, 33]
+
+
+def _sssp_post(host):
+    d = np.asarray(host["distance"]).T
+    return np.where(d >= INF * 0.5, np.inf, d)
+
+
+@pytest.fixture(scope="module")
+def seq_sssp(kernel_graph):
+    """Per-root sequential SSSP references (the bit-identity oracle)."""
+    u = repro.UniGPS()
+    return {r: u.sssp(kernel_graph, root=r)[0] for r in ROOTS}
+
+
+# ---------------------------------------------------------------------------
+# Q=1 batched == unbatched, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_q1_batched_matches_unbatched(kernel_graph, seq_sssp, engine):
+    g = kernel_graph
+    u = repro.UniGPS()
+    for kern in ("off", "on"):
+        for fr in ("dense", "auto", "sparse"):
+            D, info = u.sssp(g, sources=[0], engine=engine, kernel=kern,
+                             frontier=fr)
+            assert D.shape == (1, g.num_vertices)
+            assert info["batch"] == 1
+            np.testing.assert_array_equal(
+                D[0], seq_sssp[0],
+                err_msg=f"{engine}/kernel={kern}/frontier={fr}")
+
+
+# ---------------------------------------------------------------------------
+# every lane == its own sequential run, bitwise (single-device engines)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_lanes_match_sequential(kernel_graph, seq_sssp, engine):
+    g = kernel_graph
+    u = repro.UniGPS()
+    for kern in ("off", "on"):
+        D, info = u.sssp(g, sources=ROOTS, engine=engine, kernel=kern)
+        assert D.shape == (len(ROOTS), g.num_vertices)
+        assert info["batch"] == len(ROOTS)
+        for i, r in enumerate(ROOTS):
+            np.testing.assert_array_equal(
+                D[i], seq_sssp[r], err_msg=f"{engine}/kernel={kern}/root={r}")
+
+
+# ---------------------------------------------------------------------------
+# distributed schedules: lanes ride the delta exchange bit-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_distributed_lanes_match_sequential(kernel_graph, seq_sssp, schedule):
+    g = kernel_graph
+    for kern in ("off", "on"):
+        for fr in ("dense", "sparse"):
+            host, info = run_vcprog_distributed(
+                [SSSPProgram(r) for r in ROOTS], g, 100, schedule=schedule,
+                kernel=kern, frontier=fr)
+            assert info["batch"] == len(ROOTS)
+            D = _sssp_post(host)
+            for i, r in enumerate(ROOTS):
+                np.testing.assert_array_equal(
+                    D[i], seq_sssp[r],
+                    err_msg=f"{schedule}/kernel={kern}/frontier={fr}/root={r}")
+
+
+def test_distributed_engine_alias(kernel_graph, seq_sssp):
+    """engine="distributed" threads sources= through run_vcprog."""
+    D, info = repro.operators.sssp(kernel_graph, sources=ROOTS,
+                                   engine="distributed")
+    assert info["batch"] == len(ROOTS)
+    for i, r in enumerate(ROOTS):
+        np.testing.assert_array_equal(D[i], seq_sssp[r])
+
+
+# ---------------------------------------------------------------------------
+# sum monoid (PPR): lane independence in the packed accumulator
+# ---------------------------------------------------------------------------
+
+def test_ppr_lanes(kernel_graph):
+    g = kernel_graph
+    u = repro.UniGPS()
+    seq = [u.personalized_pagerank(g, source=r, kernel="off")[0]
+           for r in ROOTS]
+    # kernel-off: identical op order per lane -> bitwise
+    P, info = u.personalized_pagerank(g, sources=ROOTS, kernel="off")
+    assert info["batch"] == len(ROOTS)
+    for i in range(len(ROOTS)):
+        np.testing.assert_array_equal(P[i], seq[i])
+    # Q=1 batched vs a lane of the Q=4 run: same packed path -> bitwise
+    P1, _ = u.personalized_pagerank(g, sources=[ROOTS[0]], kernel="off")
+    np.testing.assert_array_equal(P1[0], P[0])
+    # kernel-on (packed MXU accumulation): numerically equal
+    Pk, _ = u.personalized_pagerank(g, sources=ROOTS, kernel="on")
+    for i in range(len(ROOTS)):
+        np.testing.assert_allclose(Pk[i], seq[i], rtol=1e-6, atol=1e-9)
+
+
+def test_bfs_and_landmarks(kernel_graph):
+    g = kernel_graph
+    u = repro.UniGPS()
+    bseq = [u.bfs(g, root=r)[0] for r in ROOTS]
+    B, _ = u.bfs(g, sources=ROOTS)
+    for i in range(len(ROOTS)):
+        np.testing.assert_array_equal(B[i], bseq[i])
+    dseq = np.stack([u.sssp(g, root=r)[0] for r in ROOTS])
+    L, info = u.landmark_distances(g, ROOTS)
+    assert L.shape == (len(ROOTS), g.num_vertices)
+    np.testing.assert_array_equal(L, dseq)
+
+
+# ---------------------------------------------------------------------------
+# staggered convergence: early lanes freeze, the loop runs to the slowest
+# ---------------------------------------------------------------------------
+
+def test_staggered_convergence_freezes_early_lanes():
+    # directed path 0 -> 1 -> ... -> 19: BFS from 18 converges in a couple
+    # of supersteps, BFS from 0 needs ~20 — one shared while_loop must run
+    # to the slowest lane while the early lane's depths stay frozen.
+    n = 20
+    g = from_edges(np.arange(n - 1), np.arange(1, n), n)
+    u = repro.UniGPS()
+    roots = [18, 0]
+    solo = [(u.bfs(g, root=r)[0], u.bfs(g, root=r)[1]["iterations"])
+            for r in roots]
+    assert solo[0][1] < solo[1][1]  # genuinely staggered
+    D, info = u.bfs(g, sources=roots)
+    for i in range(len(roots)):
+        np.testing.assert_array_equal(D[i], solo[i][0])
+    # the batched loop runs exactly as long as the slowest lane
+    assert info["iterations"] == max(it for _, it in solo)
+
+
+# ---------------------------------------------------------------------------
+# Frontier lane fields + batching plumbing units
+# ---------------------------------------------------------------------------
+
+def test_make_frontier_lane_fields():
+    import jax.numpy as jnp
+
+    lane = jnp.asarray([[True, False], [False, False], [True, True]])
+    f = vcprog.make_frontier(None, lane_mask=lane)
+    np.testing.assert_array_equal(np.asarray(f.mask), [True, False, True])
+    assert int(f.count) == 2
+    np.testing.assert_array_equal(np.asarray(f.lane_count), [2, 1])
+    # union mask via frontier_mask on a raw 2-D mask
+    np.testing.assert_array_equal(np.asarray(vcprog.frontier_mask(lane)),
+                                  [True, False, True])
+
+
+def test_as_batched_validation():
+    with pytest.raises(ValueError):
+        vcprog.as_batched(SSSPProgram(0), batch=0)
+    with pytest.raises(ValueError):
+        vcprog.as_batched([SSSPProgram(0), SSSPProgram(1)], batch=3)
+    bp = vcprog.as_batched(SSSPProgram(0), batch=4)
+    assert isinstance(bp, vcprog.BatchedProgram) and bp.num_lanes == 4
+    assert vcprog.as_batched(bp, batch=4) is bp
+    with pytest.raises(TypeError):
+        vcprog.BatchedProgram([SSSPProgram(0), repro.operators.CCProgram()])
+
+
+def test_root_bounds_validation(kernel_graph):
+    g = kernel_graph
+    u = repro.UniGPS()
+    for bad in (-1, g.num_vertices, 10**9):
+        with pytest.raises(ValueError):
+            u.sssp(g, root=bad)
+        with pytest.raises(ValueError):
+            u.bfs(g, root=bad)
+        with pytest.raises(ValueError):
+            u.personalized_pagerank(g, source=bad)
+    with pytest.raises(ValueError, match=r"sources\[1\]"):
+        u.bfs(g, sources=[0, g.num_vertices])
+    with pytest.raises(ValueError):
+        u.sssp(g, sources=[])
+    with pytest.raises(ValueError):
+        u.personalized_pagerank(g)  # neither source= nor sources=
+
+
+def test_vcprog_batch_kwarg(kernel_graph):
+    """UniGPS.vcprog(batch=Q) returns [V, Q] leaves of the base record."""
+    g = kernel_graph
+    u = repro.UniGPS()
+    progs = [SSSPProgram(r) for r in ROOTS]
+    vprops, info = u.vcprog(g, progs, max_iter=100)
+    assert info["batch"] == len(ROOTS)
+    assert set(vprops.keys()) == {"vid", "distance"}
+    assert vprops["distance"].shape == (g.num_vertices, len(ROOTS))
+    # replicate form: batch=Q with one program
+    vp2, info2 = u.vcprog(g, SSSPProgram(0), max_iter=100, batch=2)
+    assert info2["batch"] == 2
+    np.testing.assert_array_equal(np.asarray(vp2["distance"][:, 0]),
+                                  np.asarray(vp2["distance"][:, 1]))
+
+
+def test_lane_slab_width():
+    from repro.core.graph_device import lane_slab_width
+    from repro.kernels.fused_gather_emit import LANE_ALIGN
+
+    assert lane_slab_width(1) == LANE_ALIGN
+    assert lane_slab_width(LANE_ALIGN) == LANE_ALIGN
+    assert lane_slab_width(LANE_ALIGN + 1) == 2 * LANE_ALIGN
+    for q in range(1, 3 * LANE_ALIGN):
+        w = lane_slab_width(q)
+        assert w >= q and w % LANE_ALIGN == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: the union bitmap is a superset of every lane's
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+    def test_union_block_bitmap_superset(seed, q):
+        import jax.numpy as jnp
+        from repro.kernels.fused_gather_emit import _block_active
+
+        rng = np.random.default_rng(seed)
+        V, E, BE = 23, 70, 16
+        n_e = -(-E // BE)
+        src = rng.integers(0, V, E).astype(np.int32)
+        valid = rng.random(E) < 0.9
+        lanes = rng.random((V, q)) < 0.3
+
+        def pad_e(x, fill):
+            return jnp.concatenate(
+                [x, jnp.full((n_e * BE - E,), fill, x.dtype)])
+
+        union = np.asarray(_block_active(jnp.asarray(lanes), jnp.asarray(src),
+                                         jnp.asarray(valid), pad_e, n_e, BE))
+        for lane in range(q):
+            per = np.asarray(_block_active(jnp.asarray(lanes[:, lane]),
+                                           jnp.asarray(src),
+                                           jnp.asarray(valid), pad_e, n_e, BE))
+            # a block any lane needs is live in the union bitmap
+            assert np.all(union >= per)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_union_block_bitmap_superset():
+        pass
