@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import vcprog
 from repro.kernels import ops
 
 from .common import row, timeit
@@ -593,6 +594,122 @@ def bench_batched(quick: bool):
             "Q=1 (gate: <= 0.5x)")
 
 
+class _VecRankProgram(vcprog.VCProgram):
+    """PageRank-shaped D=8 VECTOR diffusion: the float-payload-dominated
+    exchange workload the wire-codec gates are calibrated on. Per wire
+    row: idx + vec[8] + out_degree = 40 B exact, 20 B fp16 (exactly 2x),
+    ~11 B q8ef (>3x) — PageRank's scalar payload is index-dominated and
+    would sit just under the 3x gate."""
+
+    monoid = "sum"
+    DIM = 8
+
+    def __init__(self, num_vertices: int, num_iters: int):
+        self.num_vertices = num_vertices
+        self.num_iters = num_iters
+
+    def init_vertex(self, vid, out_degree, vprop):
+        n = jnp.float32(self.num_vertices)
+        base = (jnp.arange(self.DIM, dtype=jnp.float32) + 1.0) / n
+        return {"vec": base, "out_degree": out_degree.astype(jnp.float32)}
+
+    def empty_message(self):
+        return {"vec": jnp.zeros((self.DIM,), jnp.float32)}
+
+    def merge_message(self, a, b):
+        return {"vec": a["vec"] + b["vec"]}
+
+    def vertex_compute(self, prop, msg, it):
+        n = jnp.float32(self.num_vertices)
+        new = jnp.where(it == 1, prop["vec"], 0.15 / n + 0.85 * msg["vec"])
+        return ({"vec": new, "out_degree": prop["out_degree"]},
+                it < self.num_iters)
+
+    def emit_message(self, src, dst, sp, ep):
+        deg = jnp.maximum(sp["out_degree"], 1.0)
+        return jnp.bool_(True), {"vec": sp["vec"] / deg}
+
+
+def bench_exchange(quick: bool):
+    """Wire codecs + overlapped schedules on the distributed ring: whole
+    VecRank runs per exchange mode (rows carry the MODELED per-superstep
+    wire bytes from info["bytes_exchanged"] — the byte column is the
+    backend-independent signal; CPU interpret timing only shows the
+    encode/decode cost is not pathological), plus overlap on/off.
+
+    Gates CI: fp16 must at least HALVE and q8ef must at least THIRD the
+    exact wire bytes on the float-vector payload, q8ef must stay within
+    PageRank-family tolerance, and the double-buffered schedules must
+    never lose to the barriered ones beyond the interpret-noise margin
+    (on real links overlap hides the exchange; interpret mode has no
+    async transfer, so equal-time is the expected outcome here)."""
+    from repro.core import io as gio
+    from repro.core.engines.distributed import run_vcprog_distributed
+
+    V = 256 if quick else 512
+    g = gio.uniform_graph(V, 8 * V, seed=13)
+    iters = 3
+
+    base = None
+    times, nbytes = {}, {}
+    for exch in ("exact", "fp16", "q8ef"):
+        fn = lambda: run_vcprog_distributed(
+            _VecRankProgram(V, iters), g, max_iter=iters, schedule="ring",
+            frontier="sparse", exchange=exch)
+        vp, info = fn()  # compile + correctness outside the timed region
+        b = info["bytes_exchanged"]
+        assert b["per_superstep"] == b["sparse_per_superstep"][exch]
+        nbytes[exch] = b["per_superstep"]
+        if exch == "exact":
+            base = np.asarray(vp["vec"])
+        else:
+            err = np.abs(np.asarray(vp["vec"]) - base).max()
+            if err > 2e-3:
+                raise AssertionError(f"{exch} drifted: {err}")
+        times[exch] = timeit(fn, iters=1, warmup=1)
+        row(f"kernel.fused_gec.exchange.{exch}", times[exch],
+            f"V={V};E={8*V};iters={iters};D={_VecRankProgram.DIM};"
+            f"schedule=ring;frontier=sparse;"
+            f"bytes_per_superstep={nbytes[exch]};"
+            f"reduction={nbytes['exact']/nbytes[exch]:.2f}x;"
+            f"backend={jax.default_backend()}")
+    if nbytes["fp16"] * 2 > nbytes["exact"]:
+        raise AssertionError(
+            f"fp16 wire bytes {nbytes['fp16']} not <= 0.5x exact "
+            f"{nbytes['exact']}")
+    if nbytes["q8ef"] * 3 > nbytes["exact"]:
+        raise AssertionError(
+            f"q8ef wire bytes {nbytes['q8ef']} not <= 1/3 exact "
+            f"{nbytes['exact']}")
+
+    # overlap on/off: bit-identical results, interleaved min-of-rounds
+    # (this pair gates CI on a noisy runner)
+    def run_ov(ov):
+        return lambda: run_vcprog_distributed(
+            _VecRankProgram(V, iters), g, max_iter=iters, schedule="ring",
+            frontier="sparse", overlap=ov)
+    r_on, r_off = run_ov(True), run_ov(False)
+    v_on, _ = r_on()
+    v_off, _ = r_off()
+    np.testing.assert_array_equal(np.asarray(v_on["vec"]),
+                                  np.asarray(v_off["vec"]))
+    t_ons, t_offs = [], []
+    for _ in range(3):
+        t_offs.append(timeit(r_off, iters=1, warmup=0))
+        t_ons.append(timeit(r_on, iters=1, warmup=0))
+    t_on, t_off = min(t_ons), min(t_offs)
+    row("kernel.fused_gec.distributed_ring.overlap.off", t_off,
+        f"V={V};E={8*V};iters={iters};barriered exchange")
+    row("kernel.fused_gec.distributed_ring.overlap.on", t_on,
+        f"V={V};E={8*V};iters={iters};double-buffered;"
+        f"speedup={t_off / max(t_on, 1e-12):.2f}x;"
+        f"backend={jax.default_backend()}")
+    if t_on >= 1.5 * t_off:
+        raise AssertionError(
+            f"double-buffered ring lost to the barriered exchange "
+            f"({t_on*1e6:.1f}us vs {t_off*1e6:.1f}us)")
+
+
 def main(quick: bool = False, E: int | None = None, V: int | None = None):
     E = E or (1 << 13 if quick else 1 << 17)
     V = V or max(E // 8, 64)
@@ -647,6 +764,7 @@ def main(quick: bool = False, E: int | None = None, V: int | None = None):
     bench_frontier_convergence(quick)
     bench_fused_engines(quick)
     bench_batched(quick)
+    bench_exchange(quick)
 
 
 if __name__ == "__main__":

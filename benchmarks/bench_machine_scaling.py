@@ -6,8 +6,12 @@ measured (documented in DESIGN.md). We report the two measurable halves:
   (a) measured: the distributed engine at P = 1..8 parts on fake host
       devices — per-part WORK (edges + vertices processed) must drop as
       1/P while results stay identical (the scaling *mechanism*);
-  (b) modeled: speedup = T1 / max(T1/P, wire(P)/link_bw) from the graph
-      roofline terms of the compiled dry-run (EXPERIMENTS §Roofline).
+  (b) modeled: speedup = T1 / max(T1/P, wire(P)/link_bw), where wire(P)
+      is the MEASURED per-superstep exchange payload the run reports in
+      info["bytes_exchanged"] (the same accounting the wire codecs
+      shrink), so the model shows what exchange compression buys at each
+      P: the exact and q8ef columns share T1/P and differ only in the
+      wire term (EXPERIMENTS §Roofline).
 """
 import json
 import subprocess
@@ -38,11 +42,14 @@ for P in (1, 2, 4, 8):
     t0 = time.time()
     vp, info = run_vcprog_distributed(PageRankProgram(g.num_vertices, 10),
                                       g, max_iter=10, mesh=mesh,
-                                      schedule="ring")
+                                      schedule="ring", frontier="sparse")
     dt = time.time() - t0
     err = float(np.abs(vp["rank"] - ref).max())
     work = int(sg["edge_mask"].sum(axis=(1, 2)).max())  # max edges/part
-    out.append(dict(P=P, seconds=dt, max_edges_per_part=work, err=err))
+    bts = info["bytes_exchanged"]
+    out.append(dict(P=P, seconds=dt, max_edges_per_part=work, err=err,
+                    wire_exact=bts["sparse_per_superstep"]["exact"],
+                    wire_q8ef=bts["sparse_per_superstep"]["q8ef"]))
 print("RESULT:" + json.dumps(out))
 """
 
@@ -57,12 +64,23 @@ def main():
         return
     data = json.loads([l for l in r.stdout.splitlines()
                        if l.startswith("RESULT:")][0][7:])
+    from repro.launch.roofline import LINK_BW
     e1 = data[0]["max_edges_per_part"]
+    t1, iters = data[0]["seconds"], 10
     for d in data:
         assert d["err"] < 1e-6
+        # modeled wall per run: perfect-compute 1/P scaling vs the wire
+        # term built from the MEASURED per-superstep exchange payload
+        model = {k: t1 / max(t1 / d["P"],
+                             iters * d[f"wire_{k}"] / LINK_BW)
+                 for k in ("exact", "q8ef")}
         row(f"fig8c.ring.P{d['P']}", d["seconds"],
             f"max_edges_per_part={d['max_edges_per_part']};"
-            f"work_scaling={e1/d['max_edges_per_part']:.2f}x")
+            f"work_scaling={e1/d['max_edges_per_part']:.2f}x;"
+            f"wire_exact_B={d['wire_exact']};"
+            f"wire_q8ef_B={d['wire_q8ef']};"
+            f"modeled_speedup_exact={model['exact']:.2f}x;"
+            f"modeled_speedup_q8ef={model['q8ef']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -49,11 +49,18 @@ class UniGPS:
     (windowed src slabs instead of VMEM-resident vprops; for the
     distributed engine, the per-bucket window tables). "off" pins the
     resident variant everywhere; bit-identical either way.
+
+    exchange: "exact"|"fp16"|"q8ef" — the wire codec of the distributed
+    delta exchange (repro.distributed.wire). "exact" (default) is
+    bit-identical; "fp16"/"q8ef" compress the float value leaves of the
+    sparse payloads (indices stay exact via u16/u24 bit-packing). Inert
+    for single-device engines.
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
                  use_kernel: bool | None = None, reorder: str = "none",
-                 frontier: str = "dense", prefetch: str = "auto"):
+                 frontier: str = "dense", prefetch: str = "auto",
+                 exchange: str = "exact"):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
@@ -61,6 +68,7 @@ class UniGPS:
         self.reorder = reorder
         self.frontier = frontier
         self.prefetch = prefetch
+        self.exchange = exchange
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -88,14 +96,15 @@ class UniGPS:
     def _kernel_kw(self, kw: dict) -> dict:
         """Uniform per-call override handling: every operator (and
         `vcprog`) accepts the same `kernel=`/`use_kernel=`/`reorder=`/
-        `frontier=`/`prefetch=` keywords that `run_vcprog` does,
-        defaulting to the session-level knobs. Unknown keywords are
+        `frontier=`/`prefetch=`/`exchange=` keywords that `run_vcprog`
+        does, defaulting to the session-level knobs. Unknown keywords are
         rejected here rather than silently dropped."""
         out = {"kernel": kw.pop("kernel", self.kernel),
                "use_kernel": kw.pop("use_kernel", None),
                "reorder": kw.pop("reorder", self.reorder),
                "frontier": kw.pop("frontier", self.frontier),
-               "prefetch": kw.pop("prefetch", self.prefetch)}
+               "prefetch": kw.pop("prefetch", self.prefetch),
+               "exchange": kw.pop("exchange", self.exchange)}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

@@ -117,7 +117,8 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                engine: str = "pushpull", kernel: str | bool = "auto",
                use_kernel: bool | None = None, reorder: str = "none",
                frontier: str = "dense", prefetch: str = "auto",
-               gdev: DeviceGraph | None = None, batch: int | None = None):
+               gdev: DeviceGraph | None = None, batch: int | None = None,
+               exchange: str = "exact", overlap: bool = True):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
     kernel: "auto" (default) picks the fused/segment Pallas kernels on TPU
@@ -150,17 +151,30 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     vprops-resident kernels; for the distributed engine the knob also
     controls the per-bucket window-table build. Bit-identical either way.
 
+    exchange: "exact" (default) | "fp16" | "q8ef" — the wire codec of
+    the distributed delta exchange (repro.distributed.wire): bit-packed
+    u16/u24 local indices plus fp16 or int8-error-feedback float value
+    leaves on the sparse payloads. "exact" is bit-identical; "q8ef" is
+    for tolerance-governed operators (PageRank-family). Single-device
+    engines have no exchange — the knob is validated and inert there.
+
+    overlap (default True): software-pipeline the distributed schedules
+    so the exchange hides behind the bucket plane passes; bit-identical
+    on/off and inert for single-device engines.
+
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
     """
+    from repro.distributed import wire
     frontier = message_plane.resolve_frontier_mode(frontier)
     prefetch = message_plane.resolve_prefetch_mode(prefetch)
+    exchange = wire.resolve_exchange_mode(exchange)
     if engine == "distributed":
         from . import distributed
         return distributed.run_vcprog_distributed(
             program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
             reorder=reorder, frontier=frontier, prefetch=prefetch,
-            batch=batch)
+            batch=batch, exchange=exchange, overlap=overlap)
     program = vcprog.as_batched(program, batch)
     if gdev is None:
         gdev = prepare_device_graph(graph, reorder=reorder)

@@ -43,6 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .. import message_plane, records, vcprog
 from ..graph import PropertyGraph, partition_graph
 from ..graph_device import bucket_layout, workset_capacity
+from repro.distributed import wire
 
 AXIS = "graph"
 
@@ -299,12 +300,37 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                           skip_buckets: bool = False,
                           kernel_on: bool = False,
                           frontier: str = "dense",
-                          prefetch_windows=None):
+                          prefetch_windows=None,
+                          exchange: str = "exact",
+                          overlap: bool = True):
     """One Algorithm-1 iteration as a shard_map-able local function.
 
     Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
     [B=P, L, ...] for this device's dst range. Returns updated local state
-    + global num_active.
+    + global num_active. With ``exchange="q8ef"`` and a sparse frontier
+    the step additionally threads the dense error-feedback state: pass it
+    as the trailing ``wire_err`` argument and it is returned (updated)
+    before the count — the legacy 6-arg/5-tuple shape is unchanged for
+    every other configuration.
+
+    exchange ("exact"|"fp16"|"q8ef", repro.distributed.wire) is the wire
+    codec applied to the delta-exchange payloads of all three schedules:
+    bit-packed u16/u24 local indices plus fp16 or int8-error-feedback
+    float leaves. "exact" (default) ships the PR-4 payloads verbatim and
+    is bit-identical. The codec only touches the SPARSE exchange — the
+    dense fallback always ships full-width rows.
+
+    overlap (default True) software-pipelines every schedule so the
+    exchange hides behind the bucket plane passes: the ring issues hop
+    h+1's ppermute BEFORE hop h's plane consumes its payload
+    (double-buffered carry), the allgather materializes bucket b+1's
+    slab (row select + codec decode) before bucket b's plane pass, and
+    the push decomposes its all_to_all into per-offset ppermutes issued
+    as soon as each bucket's partial is computed (received partials are
+    buffered and folded in canonical part order, so the monoid fold is
+    bit-identical to the all_to_all path). overlap=False keeps the
+    sequential compute-then-exchange shape; results are bit-identical
+    either way.
 
     frontier ("dense"|"auto"|"sparse") switches the schedules to delta
     exchange — allgather/ring rotate only the (indices, values) of active
@@ -329,6 +355,11 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
     (build with shared=True).
     """
     frontier = message_plane.resolve_frontier_mode(frontier)
+    codec = wire.get_codec(wire.resolve_exchange_mode(exchange))
+    overlap = bool(overlap)
+    # error feedback needs a loop-carried residual state; it exists only
+    # when the codec asks for it AND a sparse arm can run
+    carry_err = codec.error_feedback and frontier != "dense"
     K = (workset_capacity(v_pp, 1.0) if frontier == "sparse"
          else workset_capacity(v_pp))
     if prefetch_windows is not None:
@@ -343,9 +374,11 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 "needs ONE shared prefetch window — build the tables "
                 "with build_bucket_prefetch(..., shared=True)")
 
-    def local_step(it, vprops, active, inbox, has_msg, edges):
+    def local_step(it, vprops, active, inbox, has_msg, edges,
+                   wire_err=None):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
         my = jax.lax.axis_index(AXIS)
+        werr = wire_err if (carry_err and wire_err is not None) else {}
 
         # Phase 2: vertex_compute on the local slice. The local frontier
         # is first-class from here on: its popcount is computed once and
@@ -445,14 +478,16 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
         elif schedule == "allgather":
             def ag_run(part_props):
                 """Scan the P src buckets; part_props(b) yields bucket b's
-                (remote props, remote active)."""
-                def body(carry, b, pf_w=0):
-                    inbox, has_msg = carry
-                    vp_b, act_b = part_props(b)
-                    b_inbox, b_has = bucket_plane(bucket_at(b, pf_w), vp_b,
-                                                  act_b)
+                (remote props, remote active). With `overlap`, the loop
+                is software-pipelined double-buffered: bucket b+1's slab
+                is materialized (gather-row select + codec decode)
+                BEFORE bucket b's plane pass consumes the current
+                buffer, so the transfer/decode overlaps the fused
+                kernel. Values are identical either way."""
+                def plane(b, cur, inbox, has_msg, pf_w):
+                    b_inbox, b_has = bucket_plane(bucket_at(b, pf_w), *cur)
                     return _merge_partial(program, inbox, has_msg, b_inbox,
-                                          b_has), None
+                                          b_has)
 
                 if unroll_buckets or prefetch_windows is not None:
                     # python loop: every bucket appears in the HLO, so the
@@ -460,41 +495,66 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     # lax.scan body is counted once regardless of trips) —
                     # and each bucket's STATIC prefetch window specializes
                     # its own fused kernel (resident where windows[b]==0)
-                    carry = (inbox0, has0)
+                    inbox, has_msg = inbox0, has0
+                    cur = part_props(0)
                     for b in range(num_parts):
                         pf_w = (prefetch_windows[b]
                                 if prefetch_windows is not None else 0)
-                        carry, _ = body(carry, b, pf_w)
-                    return carry
+                        nxt = (part_props(b + 1)
+                               if overlap and b + 1 < num_parts else None)
+                        inbox, has_msg = plane(b, cur, inbox, has_msg, pf_w)
+                        if b + 1 < num_parts:
+                            cur = nxt if nxt is not None else part_props(b + 1)
+                    return inbox, has_msg
+                if overlap:
+                    def body(carry, b):
+                        inbox, has_msg, cur = carry
+                        nxt = part_props((b + 1) % num_parts)  # issued first
+                        inbox, has_msg = plane(b, cur, inbox, has_msg, 0)
+                        return (inbox, has_msg, nxt), None
+
+                    (inbox, has_msg, _), _ = jax.lax.scan(
+                        body, (inbox0, has0, part_props(0)),
+                        jnp.arange(num_parts))
+                    return inbox, has_msg
+
+                def body(carry, b):
+                    inbox, has_msg = carry
+                    return plane(b, part_props(b), inbox, has_msg, 0), None
+
                 return jax.lax.scan(body, (inbox0, has0),
                                     jnp.arange(num_parts))[0]
 
-            def ag_dense(_):
+            def ag_dense(werr):
                 all_vp = jax.lax.all_gather(vprops, AXIS)   # [P, v_pp, ...]
                 all_act = jax.lax.all_gather(active, AXIS)
-                return ag_run(lambda b: (records.tree_row(all_vp, b),
-                                         all_act[b]))
+                inbox, has_msg = ag_run(lambda b: (records.tree_row(all_vp, b),
+                                                   all_act[b]))
+                return inbox, has_msg, werr
 
-            def ag_sparse(_):
-                # delta exchange: gather only (indices, values) of each
-                # part's frontier — wire P·K·prop_bytes, not V·prop_bytes
+            def ag_sparse(werr):
+                # delta exchange: gather only the ENCODED (indices, values)
+                # of each part's frontier — wire P·codec(K·prop_bytes),
+                # not V·prop_bytes
                 idx, vals, _ = _compact_active(vprops, active, K, v_pp)
-                all_idx = jax.lax.all_gather(idx, AXIS)     # [P, K]
-                all_vals = jax.tree.map(
-                    lambda a: jax.lax.all_gather(a, AXIS), vals)
-                return ag_run(lambda b: _scatter_part(
-                    vprops, v_pp, all_idx[b],
-                    records.tree_row(all_vals, b)))
+                payload, werr = wire.encode_delta(codec, idx, vals, v_pp,
+                                                  err=werr)
+                all_wire = jax.tree.map(
+                    lambda a: jax.lax.all_gather(a, AXIS), payload)
+                inbox, has_msg = ag_run(lambda b: _scatter_part(
+                    vprops, v_pp, *wire.decode_delta(
+                        codec, records.tree_row(all_wire, b), vals, v_pp)))
+                return inbox, has_msg, werr
 
             if frontier == "dense":
-                inbox, has_msg = ag_dense(None)
+                inbox, has_msg, werr = ag_dense(werr)
             elif frontier == "sparse":
-                inbox, has_msg = ag_sparse(None)
+                inbox, has_msg, werr = ag_sparse(werr)
             else:
                 # one pmax so every device takes the same cond branch
                 fits = jax.lax.pmax(front.count, AXIS) <= K
-                inbox, has_msg = jax.lax.cond(fits, ag_sparse, ag_dense,
-                                              operand=None)
+                inbox, has_msg, werr = jax.lax.cond(fits, ag_sparse,
+                                                    ag_dense, werr)
         elif schedule == "ring":
             perm = [(i, (i + 1) % num_parts) for i in range(num_parts)]
             pperm = lambda t: jax.tree.map(
@@ -508,17 +568,23 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             def ring_run(payload0, reconstruct):
                 """Rotate `payload0` around the ring; reconstruct(payload)
                 yields the (props, active) of the part it currently
-                holds."""
+                holds. With `overlap`, hop h+1's ppermute is issued
+                BEFORE hop h's bucket plane consumes the payload
+                (double-buffered carry) so the rotation hides behind the
+                fused kernel; the rotated data is identical either
+                way."""
                 def body(carry, r):
                     inbox, has_msg, payload = carry
+                    nxt = pperm(payload) if overlap else None
                     b = (my - r) % num_parts    # whose props we hold now
                     vp_b, act_b = reconstruct(payload)
                     b_inbox, b_has = bucket_plane(bucket_at(b, ring_pf_w),
                                                   vp_b, act_b)
                     inbox, has_msg = _merge_partial(program, inbox, has_msg,
                                                     b_inbox, b_has)
-                    # rotate to the next neighbour (overlaps with compute)
-                    return (inbox, has_msg, pperm(payload)), None
+                    # rotate to the next neighbour
+                    nxt = nxt if overlap else pperm(payload)
+                    return (inbox, has_msg, nxt), None
 
                 if unroll_buckets:
                     carry = (inbox0, has0, payload0)
@@ -529,25 +595,30 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     body, (inbox0, has0, payload0), jnp.arange(num_parts))
                 return inbox, has_msg
 
-            def ring_dense(_):
-                return ring_run((vprops, active), lambda p: p)
+            def ring_dense(werr):
+                inbox, has_msg = ring_run((vprops, active), lambda p: p)
+                return inbox, has_msg, werr
 
-            def ring_sparse(_):
-                # rotate the compacted (indices, values) of the frontier —
-                # per-hop wire K·(prop_bytes + 4) instead of v_pp rows
+            def ring_sparse(werr):
+                # rotate the ENCODED compact (indices, values) of the
+                # frontier — per-hop wire codec(K·(prop_bytes + 4))
+                # instead of v_pp dense rows; encoded once by the owner,
+                # decoded by each receiving hop
                 idx, vals, _ = _compact_active(vprops, active, K, v_pp)
-                return ring_run((idx, vals),
-                                lambda p: _scatter_part(vprops, v_pp,
-                                                        p[0], p[1]))
+                payload, werr = wire.encode_delta(codec, idx, vals, v_pp,
+                                                  err=werr)
+                inbox, has_msg = ring_run(payload, lambda p: _scatter_part(
+                    vprops, v_pp, *wire.decode_delta(codec, p, vals, v_pp)))
+                return inbox, has_msg, werr
 
             if frontier == "dense":
-                inbox, has_msg = ring_dense(None)
+                inbox, has_msg, werr = ring_dense(werr)
             elif frontier == "sparse":
-                inbox, has_msg = ring_sparse(None)
+                inbox, has_msg, werr = ring_sparse(werr)
             else:
                 fits = jax.lax.pmax(front.count, AXIS) <= K
-                inbox, has_msg = jax.lax.cond(fits, ring_sparse, ring_dense,
-                                              operand=None)
+                inbox, has_msg, werr = jax.lax.cond(fits, ring_sparse,
+                                                    ring_dense, werr)
         elif schedule == "push":
             # §Perf (Gemini push mode): src props are LOCAL; combine
             # per-dst-part partial inboxes locally, exchange them with ONE
@@ -555,80 +626,144 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
             # partials. Wire = V·msg_bytes (vs the ring's V·prop_bytes) and
             # one collective launch instead of P permute steps.
             # edges here are the transposed (src-part major) view.
-            if unroll_buckets or prefetch_windows is not None:
-                # python loop (see ag_run): per-bucket STATIC prefetch
-                # windows specialize each bucket's fused kernel
-                outs = []
-                for b in range(num_parts):
-                    pf_w = (prefetch_windows[b]
-                            if prefetch_windows is not None else 0)
-                    outs.append(bucket_plane(bucket_at(b, pf_w), vprops,
-                                             active))
-                partials = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                        *[o[0] for o in outs])
-                phas = jnp.stack([o[1] for o in outs])
-            else:
-                def part_body(carry, b):
+            msg_tmpl = records.tree_tile(empty, K)  # decode dtype template
+
+            def sparse_payload(i_row, v_rows, e_row):
+                """Compact one partial-inbox row to its encoded delta."""
+                clip = jnp.minimum(i_row, max(v_pp - 1, 0))
+                v_o = jax.tree.map(lambda a: jnp.take(a, clip, axis=0),
+                                   v_rows)
+                return wire.encode_delta(codec, i_row, v_o, v_pp, err=e_row)
+
+            def sparse_fold(carry, w_row):
+                """Decode + scatter one received delta, monoid-merge it."""
+                i_row, v_row = wire.decode_delta(codec, w_row, msg_tmpl,
+                                                 v_pp)
+                part = jax.tree.map(
+                    lambda e, v: e.at[i_row].set(v, mode="drop"),
+                    records.tree_tile(empty, v_pp), v_row)
+                ph = jnp.zeros((v_pp,), bool).at[i_row].set(
+                    True, mode="drop")
+                return _merge_partial(program, carry[0], carry[1], part,
+                                      ph), None
+
+            # Software-pipelined exchange (offset decomposition of the
+            # all_to_all): at offset o every device computes its partial
+            # for dst part (my + o) and immediately issues the one-hop
+            # ppermute carrying it, so offset o+1's bucket plane runs
+            # while offset o's transfer is in flight. Received partials
+            # are buffered by their SENDER part id and folded in
+            # canonical 0..P-1 order — bit-identical to the all_to_all
+            # fold. The offset loop visits buckets with a TRACED id, so
+            # it is mutually exclusive with per-bucket static prefetch
+            # windows, and "auto"'s crossover cond inspects every
+            # partial row (a global barrier), so only the pinned
+            # frontier modes pipeline.
+            if overlap and prefetch_windows is None and frontier != "auto":
+                recv = []
+                for o in range(num_parts):
+                    b = (my + jnp.int32(o)) % num_parts
                     one, oneh = bucket_plane(bucket_at(b), vprops, active)
-                    return carry, (one, oneh)
-
-                _, (partials, phas) = jax.lax.scan(
-                    part_body, (inbox0, has0), jnp.arange(num_parts))
-            # partials: [P, v_pp, ...] — row b = my messages for part b
-            a2a = lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
-                                               concat_axis=0, tiled=False)
-
-            def push_dense(_):
-                ex = jax.tree.map(a2a, partials)
-                exh = a2a(phas)
-                return jax.lax.scan(_fold_partials(program), (inbox0, has0),
-                                    (ex, exh))[0]
-
-            def push_sparse(_):
-                # delta exchange of the partial inboxes: each [v_pp] row is
-                # mostly has_msg=False on a thin frontier — ship only its
-                # (indices, values) and rebuild the dense partial on the
-                # receiving side before the monoid fold
-                idx = jax.vmap(
-                    lambda m: message_plane.compact_indices(m, K)[0])(phas)
-                clip = jnp.minimum(idx, max(v_pp - 1, 0))
-                vals = jax.tree.map(
-                    lambda a: jax.vmap(
-                        lambda row, c: jnp.take(row, c, axis=0))(a, clip),
-                    partials)
-                ex_idx = a2a(idx)
-                ex_vals = jax.tree.map(a2a, vals)
-
-                def fold(carry, x):
-                    inbox_c, has_c = carry
-                    i_row, v_row = x
-                    part = jax.tree.map(
-                        lambda e, v: e.at[i_row].set(v, mode="drop"),
-                        records.tree_tile(empty, v_pp), v_row)
-                    ph = jnp.zeros((v_pp,), bool).at[i_row].set(
-                        True, mode="drop")
-                    return _merge_partial(program, inbox_c, has_c, part,
-                                          ph), None
-
-                return jax.lax.scan(fold, (inbox0, has0),
-                                    (ex_idx, ex_vals))[0]
-
-            if frontier == "dense":
-                inbox, has_msg = push_dense(None)
-            elif frontier == "sparse":
-                inbox, has_msg = push_sparse(None)
+                    if frontier == "sparse":
+                        i_o, _ = message_plane.compact_indices(oneh, K)
+                        e_row = (jax.tree.map(lambda e: e[b], werr)
+                                 if carry_err else None)
+                        w_o, e_row = sparse_payload(i_o, one, e_row)
+                        if carry_err:
+                            werr = jax.tree.map(
+                                lambda e, r: e.at[b].set(r), werr, e_row)
+                    else:
+                        w_o = (one, oneh)
+                    if o == 0:
+                        recv.append((my, w_o))
+                    else:
+                        perm_o = [(d, (d + o) % num_parts)
+                                  for d in range(num_parts)]
+                        recv.append(((my - jnp.int32(o)) % num_parts,
+                                     jax.tree.map(lambda a: jax.lax.ppermute(
+                                         a, AXIS, perm_o), w_o)))
+                buf = jax.tree.map(
+                    lambda a: jnp.zeros((num_parts,) + a.shape, a.dtype),
+                    recv[0][1])
+                for s, w in recv:
+                    buf = jax.tree.map(lambda bb, a: bb.at[s].set(a), buf, w)
+                fold = (sparse_fold if frontier == "sparse"
+                        else lambda c, x: (_merge_partial(
+                            program, c[0], c[1], x[0], x[1]), None))
+                (inbox, has_msg), _ = jax.lax.scan(fold, (inbox0, has0), buf)
             else:
-                rows = jnp.sum(phas.astype(jnp.int32), axis=1)  # [P]
-                fits = jax.lax.pmax(jnp.max(rows), AXIS) <= K
-                inbox, has_msg = jax.lax.cond(fits, push_sparse, push_dense,
-                                              operand=None)
+                if unroll_buckets or prefetch_windows is not None:
+                    # python loop (see ag_run): per-bucket STATIC prefetch
+                    # windows specialize each bucket's fused kernel
+                    outs = []
+                    for b in range(num_parts):
+                        pf_w = (prefetch_windows[b]
+                                if prefetch_windows is not None else 0)
+                        outs.append(bucket_plane(bucket_at(b, pf_w), vprops,
+                                                 active))
+                    partials = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *[o[0] for o in outs])
+                    phas = jnp.stack([o[1] for o in outs])
+                else:
+                    def part_body(carry, b):
+                        one, oneh = bucket_plane(bucket_at(b), vprops,
+                                                 active)
+                        return carry, (one, oneh)
+
+                    _, (partials, phas) = jax.lax.scan(
+                        part_body, (inbox0, has0), jnp.arange(num_parts))
+                # partials: [P, v_pp, ...] — row b = my messages for part b
+                a2a = lambda a: jax.lax.all_to_all(a, AXIS, split_axis=0,
+                                                   concat_axis=0,
+                                                   tiled=False)
+
+                def push_dense(werr):
+                    ex = jax.tree.map(a2a, partials)
+                    exh = a2a(phas)
+                    inbox, has_msg = jax.lax.scan(
+                        _fold_partials(program), (inbox0, has0), (ex, exh))[0]
+                    return inbox, has_msg, werr
+
+                def push_sparse(werr):
+                    # delta exchange of the partial inboxes: each [v_pp]
+                    # row is mostly has_msg=False on a thin frontier —
+                    # ship only its ENCODED (indices, values) and rebuild
+                    # the dense partial on the receiving side before the
+                    # monoid fold
+                    idx = jax.vmap(
+                        lambda m: message_plane.compact_indices(m, K)[0])(
+                        phas)
+                    if carry_err:
+                        enc, werr = jax.vmap(sparse_payload)(idx, partials,
+                                                             werr)
+                    else:
+                        enc, _ = jax.vmap(
+                            lambda i, v: sparse_payload(i, v, None))(
+                            idx, partials)
+                    ex_wire = jax.tree.map(a2a, enc)
+                    inbox, has_msg = jax.lax.scan(sparse_fold,
+                                                  (inbox0, has0), ex_wire)[0]
+                    return inbox, has_msg, werr
+
+                if frontier == "dense":
+                    inbox, has_msg, werr = push_dense(werr)
+                elif frontier == "sparse":
+                    inbox, has_msg, werr = push_sparse(werr)
+                else:
+                    rows = jnp.sum(phas.astype(jnp.int32), axis=1)  # [P]
+                    fits = jax.lax.pmax(jnp.max(rows), AXIS) <= K
+                    inbox, has_msg, werr = jax.lax.cond(
+                        fits, push_sparse, push_dense, werr)
         else:
             raise ValueError(schedule)
 
         num_active = jax.lax.psum(front.count, AXIS)
         num_msg = jax.lax.psum(jnp.sum(has_msg.astype(jnp.int32)), AXIS)
+        if carry_err:
+            return vprops, active, inbox, has_msg, werr, num_active + num_msg
         return vprops, active, inbox, has_msg, num_active + num_msg
 
+    local_step.carries_wire_err = carry_err
     return local_step
 
 
@@ -637,12 +772,16 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
                             schedule: str = "ring",
                             kernel_on: bool = False,
                             frontier: str = "dense",
-                            prefetch_windows=None):
+                            prefetch_windows=None,
+                            exchange: str = "exact",
+                            overlap: bool = True):
     """jit(shard_map(full Algorithm-1 loop)) over mesh axis AXIS."""
     local_step = make_distributed_step(program, v_pp, num_parts, schedule,
                                        kernel_on=kernel_on,
                                        frontier=frontier,
-                                       prefetch_windows=prefetch_windows)
+                                       prefetch_windows=prefetch_windows,
+                                       exchange=exchange, overlap=overlap)
+    carry_err = local_step.carries_wire_err
 
     vspec = P(AXIS)
     espec = P(AXIS)
@@ -658,22 +797,39 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
         inbox = records.tree_tile(empty, v_pp)
         has_msg = jnp.zeros((v_pp,), bool)
         active = active & valid
+        # q8ef error-feedback residual: the allgather/ring schedules ship
+        # vertex-property payloads (state over the local vprops record);
+        # push ships per-dst-part partial-inbox payloads (state over
+        # [P, v_pp] message records)
+        werr0 = None
+        if carry_err:
+            werr0 = wire.init_error_state(
+                jax.tree.map(lambda a: jnp.zeros(
+                    (num_parts, v_pp) + jnp.shape(a), jnp.asarray(a).dtype),
+                    empty)
+                if schedule == "push" else vprops)
 
         def cond(state):
-            it, _, _, _, _, n = state
-            return (it <= max_iter) & (n > 0)
+            return (state[0] <= max_iter) & (state[-1] > 0)
 
         def body(state):
-            it, vprops, active, inbox, has_msg, _ = state
+            it, vprops, active, inbox, has_msg = state[:5]
+            if carry_err:
+                vprops, active, inbox, has_msg, werr, n = local_step(
+                    it, vprops, active & valid, inbox, has_msg, edges,
+                    state[5])
+                return (it + 1, vprops, active & valid, inbox, has_msg,
+                        werr, n)
             vprops, active, inbox, has_msg, n = local_step(
                 it, vprops, active & valid, inbox, has_msg, edges)
-            active = active & valid
-            return (it + 1, vprops, active, inbox, has_msg, n)
+            return (it + 1, vprops, active & valid, inbox, has_msg, n)
 
         # bootstrap count so iteration 1 always runs
         n0 = jnp.int32(1)
-        state = (jnp.int32(1), vprops, active, inbox, has_msg, n0)
-        _, vprops, active, _, _, _ = jax.lax.while_loop(cond, body, state)
+        state = (jnp.int32(1), vprops, active, inbox, has_msg) + (
+            (werr0, n0) if carry_err else (n0,))
+        state = jax.lax.while_loop(cond, body, state)
+        vprops, active = state[1], state[2]
         ex = lambda t: jax.tree.map(lambda a: a[None], t)
         return ex(vprops), ex(active)
 
@@ -690,6 +846,50 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
 # Public entry point
 # ---------------------------------------------------------------------------
 
+def _exchange_bytes_info(program, sg, schedule: str, frontier: str,
+                         exchange: str):
+    """Host-side per-superstep wire-byte model of the exchange (bytes per
+    device), with the roofline conventions (launch/roofline.py): an
+    all-gather counts output bytes, a permute / all_to_all counts
+    operand bytes — under all of which every schedule moves P payloads
+    per superstep. Derived with jax.eval_shape from the exact templates
+    the schedules ship (vertex-property rows for allgather/ring,
+    message-record rows for push), so the numbers track the wire
+    arrays bit-for-byte. For frontier="auto" the sparse numbers are
+    reported (the crossover's intended arm; its dense fallback costs
+    `dense_per_superstep`). Every codec's sparse size is included so
+    benches and CI gates can compare without extra runs."""
+    Pn, v_pp = sg["num_parts"], sg["v_per_part"]
+    K = (workset_capacity(v_pp, 1.0) if frontier == "sparse"
+         else workset_capacity(v_pp))
+    canon = lambda dt: jnp.zeros((), dt).dtype
+    SDS = jax.ShapeDtypeStruct
+    vp_in = jax.tree.map(
+        lambda a: SDS((v_pp,) + np.shape(a)[2:], canon(a.dtype)),
+        sg["vprops_in"])
+    vp_t = jax.eval_shape(
+        lambda i, o, p: jax.vmap(program.init_vertex)(i, o, p),
+        SDS((v_pp,), jnp.int32),
+        SDS((v_pp,), canon(sg["out_degree"].dtype)), vp_in)
+    msg_t = jax.tree.map(
+        lambda a: SDS((v_pp,) + jnp.shape(a), jnp.asarray(a).dtype),
+        program.empty_message())
+    # dense exchange: full-width rows + 1 active/has_msg flag byte each
+    tmpl = msg_t if schedule == "push" else vp_t
+    dense = Pn * v_pp * (wire.record_row_nbytes(tmpl) + 1)
+    sparse = {c: Pn * wire.payload_nbytes(c, K, v_pp, tmpl)
+              for c in wire.CODECS}
+    return {
+        "per_superstep": int(dense if frontier == "dense"
+                             else sparse[exchange]),
+        "exact_per_superstep": int(dense if frontier == "dense"
+                                   else sparse["exact"]),
+        "dense_per_superstep": int(dense),
+        "sparse_per_superstep": {k: int(v) for k, v in sparse.items()},
+        "capacity": int(K),
+    }
+
+
 def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            max_iter: int, mesh: Optional[Mesh] = None,
                            num_parts: Optional[int] = None,
@@ -699,7 +899,9 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            reorder: str = "none",
                            frontier: str = "dense",
                            prefetch: str = "auto",
-                           batch: int | None = None):
+                           batch: int | None = None,
+                           exchange: str = "exact",
+                           overlap: bool = True):
     """Distributed Algorithm-1 entry point (one part per mesh device).
 
     prefetch ("auto"|"on"|"off"): per-bucket scalar-prefetch window
@@ -715,6 +917,21 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     every bucket plane pass AND every delta-exchange hop carries all Q
     lanes at once (the compacted frontier payloads gather whole [Q]-lane
     rows). Result leaves are [V, Q]; `info["batch"] = Q`.
+
+    exchange ("exact"|"fp16"|"q8ef"): the wire codec applied to the
+    sparse delta-exchange payloads (repro.distributed.wire) — bit-packed
+    u16/u24 local indices plus fp16 or int8-error-feedback float value
+    leaves. "exact" (default) is bit-identical; "q8ef" is for
+    tolerance-governed operators (PageRank-family) and carries its
+    per-vertex residual through the superstep loop. Takes effect with a
+    sparse frontier; the dense exchange always ships full-width rows.
+
+    overlap (default True): software-pipeline every schedule so the
+    exchange hides behind the bucket plane passes (double-buffered ring
+    carry, pipelined allgather decode, per-offset push ppermutes).
+    Bit-identical on/off. `info["bytes_exchanged"]` reports the modeled
+    per-superstep wire bytes per device (exact vs codec-compressed vs
+    dense) for benches and CI gates.
     """
     program = vcprog.as_batched(program, batch)
     if mesh is None:
@@ -725,6 +942,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     kernel_on = message_plane.resolve_kernel_arg(kernel, use_kernel)
     frontier = message_plane.resolve_frontier_mode(frontier)
     prefetch = message_plane.resolve_prefetch_mode(prefetch)
+    exchange = wire.resolve_exchange_mode(exchange)
+    overlap = bool(overlap)
 
     sg = build_sharded_graph(graph, Pn, reorder=reorder)
     v_pp = sg["v_per_part"]
@@ -753,7 +972,8 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
                                      schedule, kernel_on=kernel_on,
                                      frontier=frontier,
-                                     prefetch_windows=pf_windows)
+                                     prefetch_windows=pf_windows,
+                                     exchange=exchange, overlap=overlap)
 
     # initial vertex props: the input props (init_vertex runs on device)
     vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
@@ -786,7 +1006,10 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     info = {"schedule": schedule, "num_parts": Pn,
             "kernel_on": kernel_on, "reorder": reorder,
             "frontier": frontier, "prefetch": prefetch,
-            "prefetch_windows": pf_windows}
+            "prefetch_windows": pf_windows,
+            "exchange": exchange, "overlap": overlap,
+            "bytes_exchanged": _exchange_bytes_info(
+                program, sg, schedule, frontier, exchange)}
     if isinstance(program, vcprog.BatchedProgram):
         # un-wrap the lane axis: the user sees the base record with [V, Q]
         # leaves (the `_lane_act` bookkeeping column stays internal)

@@ -89,12 +89,12 @@ def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
              engine: str = "pushpull", kernel: str = "auto",
              use_kernel: bool | None = None,
              reorder: str = "none", frontier: str = "dense",
-             prefetch: str = "auto"):
+             prefetch: str = "auto", exchange: str = "exact"):
     prog = PageRankProgram(graph.num_vertices, num_iters, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     return np.asarray(vprops["rank"]), info
 
 
@@ -135,7 +135,8 @@ def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
          engine: str = "pushpull", kernel: str = "auto",
          use_kernel: bool | None = None,
          reorder: str = "none", frontier: str = "dense",
-         prefetch: str = "auto", sources=None):
+         prefetch: str = "auto", sources=None,
+         exchange: str = "exact"):
     """Bellman-Ford distances. `sources=[r0, r1, ...]` runs Q=len(sources)
     queries as lanes of ONE batched program — one O(E) plane pass per
     superstep total — and returns a [Q, V] distance matrix (row i = the
@@ -146,14 +147,14 @@ def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch)
+                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
         dist = np.asarray(vprops["distance"]).T  # [V, Q] -> [Q, V]
         return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
     prog = SSSPProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     dist = np.asarray(vprops["distance"])
     return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
 
@@ -162,13 +163,13 @@ def landmark_distances(graph: PropertyGraph, landmarks, max_iter: int = 100,
                        engine: str = "pushpull", kernel: str = "auto",
                        use_kernel: bool | None = None,
                        reorder: str = "none", frontier: str = "dense",
-                       prefetch: str = "auto"):
+                       prefetch: str = "auto", exchange: str = "exact"):
     """[Q, V] shortest-path distances from Q landmark vertices, computed
     by ONE batched SSSP run (the landmark table of embedding/oracle
     methods — the serving shape ROADMAP item 1 targets)."""
     return sssp(graph, max_iter=max_iter, engine=engine, kernel=kernel,
                 use_kernel=use_kernel, reorder=reorder, frontier=frontier,
-                prefetch=prefetch, sources=landmarks)
+                prefetch=prefetch, sources=landmarks, exchange=exchange)
 
 
 # ---------------------------------------------------------------------------
@@ -201,12 +202,12 @@ def connected_components(graph: PropertyGraph, max_iter: int = 200,
                          engine: str = "pushpull", kernel: str = "auto",
                          use_kernel: bool | None = None,
                          reorder: str = "none", frontier: str = "dense",
-                         prefetch: str = "auto"):
+                         prefetch: str = "auto", exchange: str = "exact"):
     prog = CCProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     return np.asarray(vprops["label"]), info
 
 
@@ -246,7 +247,8 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         engine: str = "pushpull", kernel: str = "auto",
         use_kernel: bool | None = None,
         reorder: str = "none", frontier: str = "dense",
-        prefetch: str = "auto", sources=None):
+        prefetch: str = "auto", sources=None,
+         exchange: str = "exact"):
     """BFS depths. `sources=[r0, r1, ...]` batches Q root queries into
     one lane-packed run and returns a [Q, V] depth matrix (row i
     bit-identical to `bfs(root=sources[i])`; unreachable = -1)."""
@@ -256,14 +258,14 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch)
+                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
         depth = np.asarray(vprops["depth"]).T.astype(np.int64)
         return np.where(depth >= 2**31 - 1, -1, depth), info
     prog = BFSProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     depth = np.asarray(vprops["depth"]).astype(np.int64)
     return np.where(depth >= 2**31 - 1, -1, depth), info
 
@@ -299,7 +301,8 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
                           engine: str = "pushpull", kernel: str = "auto",
                           use_kernel: bool | None = None,
                           reorder: str = "none", frontier: str = "dense",
-                          prefetch: str = "auto", sources=None):
+                          prefetch: str = "auto", sources=None,
+         exchange: str = "exact"):
     """PPR mass from one source, or — with `sources=[s0, s1, ...]` — a
     [Q, V] matrix of Q personalization vectors from ONE batched run (the
     recommendation-serving shape: one plane pass feeds every user)."""
@@ -310,7 +313,7 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
         vprops, info = run_vcprog(progs, graph, max_iter=num_iters,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch)
+                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
         return np.asarray(vprops["rank"]).T, info  # [V, Q] -> [Q, V]
     if source is None:
         raise ValueError("personalized_pagerank needs source= or sources=")
@@ -320,7 +323,7 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     return np.asarray(vprops["rank"]), info
 
 
@@ -353,11 +356,11 @@ class DegreeProgram(vcprog.VCProgram):
 def degrees(graph: PropertyGraph, engine: str = "pushpull",
             kernel: str = "auto", use_kernel: bool | None = None,
             reorder: str = "none", frontier: str = "dense",
-            prefetch: str = "auto"):
+            prefetch: str = "auto", exchange: str = "exact"):
     prog = DegreeProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch)
+                              prefetch=prefetch, exchange=exchange)
     return (np.asarray(vprops["out_degree"]),
             np.asarray(vprops["in_degree"])), info

@@ -6,6 +6,13 @@ each replica quantizes (grad + carried error) to int8 with a shared scale
 (psum-max), all-reduces the int8 payload (8.25x fewer bytes on the wire
 than f32, 4.1x vs bf16), dequantizes, and carries the quantization residual
 into the next step. Error feedback keeps the scheme unbiased over time.
+
+This is a thin delegate over the shared q8 core in
+:mod:`repro.distributed.wire` — the same quantize/dequantize/error-feedback
+math the graph schedules' ``exchange="q8ef"`` delta codec uses. The only
+difference is the scale agreement: gradients all-reduce, so the scale is
+shared across replicas with a pmax; delta payloads are point-to-point, so
+each payload ships its own scalar scale instead.
 """
 from __future__ import annotations
 
@@ -13,6 +20,8 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from . import wire
 
 
 def compressed_psum(grad, err, axis_name: str) -> Tuple[Any, Any]:
@@ -22,9 +31,9 @@ def compressed_psum(grad, err, axis_name: str) -> Tuple[Any, Any]:
         g32 = g.astype(jnp.float32) + e
         amax = jnp.max(jnp.abs(g32))
         amax = jax.lax.pmax(amax, axis_name)         # shared scale
-        scale = jnp.maximum(amax, 1e-12) / 127.0
-        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
-        new_e = g32 - q.astype(jnp.float32) * scale  # residual
+        scale = wire.q8_scale(amax)
+        q = wire.q8_quantize(g32, scale)
+        new_e = g32 - wire.q8_dequantize(q, scale)   # residual
         qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
         n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
         mean = (qsum.astype(jnp.float32) * scale) / n.astype(jnp.float32)
@@ -38,4 +47,4 @@ def compressed_psum(grad, err, axis_name: str) -> Tuple[Any, Any]:
 
 
 def init_error_state(params):
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return wire.init_error_state(params)

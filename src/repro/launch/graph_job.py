@@ -86,8 +86,15 @@ def build_iteration(prog, v_pp, num_parts, mesh, schedule,
                     skip_buckets=False):
     """One Algorithm-1 iteration (not the full while loop) — the unit the
     roofline is reported per."""
+    # overlap=False pins the scan/all_to_all exchange shape: the cost
+    # calibration solves `cost = outside + P·body` from the (full, skip)
+    # pair of lowers, which needs both variants to share ONE exchange
+    # structure (the pipelined push would trade its all_to_all for P-1
+    # ppermutes and unroll the scan). Overlap is modeled downstream by
+    # Roofline(overlap=...), not in the per-op counts.
     local = D.make_distributed_step(prog, v_pp, num_parts, schedule,
-                                    skip_buckets=skip_buckets)
+                                    skip_buckets=skip_buckets,
+                                    overlap=False)
     from jax.sharding import PartitionSpec as P
     spec = P(D.AXIS)
 

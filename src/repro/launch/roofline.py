@@ -104,6 +104,15 @@ class Roofline:
     chips: int
     model_flops: float         # 6·N·D analytic, whole model
     collectives: Dict[str, Dict[str, float]]
+    # wire-codec model: the HLO above is lowered with exchange="exact";
+    # a codec shrinks only the wire term (HBM cost of encode/decode is
+    # noise next to the plane pass). wire.payload_nbytes(codec)/exact
+    # gives the ratio to plug in here (e.g. fp16 ≈ 0.5, q8ef ≈ 0.3).
+    wire_codec_ratio: float = 1.0
+    # overlap model: the double-buffered schedules hide the exchange
+    # behind the bucket plane passes, so the step is max(local, wire)
+    # instead of local + wire. See step_s.
+    overlap: bool = True
 
     @property
     def compute_s(self) -> float:
@@ -115,7 +124,18 @@ class Roofline:
 
     @property
     def collective_s(self) -> float:
-        return self.wire_bytes / LINK_BW
+        return self.wire_bytes * self.wire_codec_ratio / LINK_BW
+
+    @property
+    def step_s(self) -> float:
+        """Modeled per-step wall time. With overlap (the double-buffered
+        schedules) the exchange hides behind compute: max of the terms.
+        Without it the collective serializes after the local phase:
+        max(compute, memory) + collective."""
+        local = max(self.compute_s, self.memory_s)
+        if self.overlap:
+            return max(local, self.collective_s)
+        return local + self.collective_s
 
     @property
     def bottleneck(self) -> str:
@@ -130,11 +150,11 @@ class Roofline:
 
     @property
     def roofline_fraction(self) -> float:
-        """useful-FLOPs time / achievable step time (max of the terms) —
-        the MFU-style score the perf loop drives up. Step time is modeled
-        as max(terms), i.e. perfect overlap of compute/memory/collectives;
-        no-overlap would be the sum — both are reported in EXPERIMENTS."""
-        t = max(self.compute_s, self.memory_s, self.collective_s)
+        """useful-FLOPs time / achievable step time — the MFU-style score
+        the perf loop drives up. Step time is `step_s`: max(local, wire)
+        under the overlapped schedules (the default), local + wire
+        otherwise — both variants are reported in EXPERIMENTS."""
+        t = self.step_s
         return (self.model_flops / (self.chips * PEAK_FLOPS)) / t if t else 0.0
 
     def to_dict(self) -> dict:
@@ -144,6 +164,9 @@ class Roofline:
             "model_flops": self.model_flops,
             "compute_s": self.compute_s, "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "wire_codec_ratio": self.wire_codec_ratio,
+            "overlap": self.overlap,
+            "step_s": self.step_s,
             "bottleneck": self.bottleneck,
             "useful_compute_ratio": self.useful_compute_ratio,
             "roofline_fraction": self.roofline_fraction,
@@ -151,7 +174,8 @@ class Roofline:
         }
 
 
-def analyze(compiled, chips: int, model_flops: float) -> Roofline:
+def analyze(compiled, chips: int, model_flops: float,
+            wire_codec_ratio: float = 1.0, overlap: bool = True) -> Roofline:
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older jax returns [dict]
         cost = cost[0]
@@ -160,4 +184,5 @@ def analyze(compiled, chips: int, model_flops: float) -> Roofline:
     colls = parse_collectives(compiled.as_text())
     wire = sum(d["wire_bytes"] for d in colls.values())
     return Roofline(flops=flops, hbm_bytes=hbm, wire_bytes=wire, chips=chips,
-                    model_flops=model_flops, collectives=colls)
+                    model_flops=model_flops, collectives=colls,
+                    wire_codec_ratio=wire_codec_ratio, overlap=overlap)

@@ -1,0 +1,468 @@
+"""Wire codecs for the distributed delta exchange (repro.distributed.wire):
+index bit-packing round-trips (u16/u24, exact through the 2^16/2^24
+boundaries), fp16/q8ef bounded-error properties, error-feedback
+unbiasedness over time, the schedule × exchange end-to-end matrix
+(exact bitwise, lossy bounded), the overlap knob (bit-identical on/off),
+knob threading through run_vcprog / operators / UniGPS, and the
+bytes_exchanged accounting that bench_machine_scaling consumes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import io as gio
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import (CCProgram, PageRankProgram, SSSPProgram,
+                                  pagerank, sssp)
+from repro.distributed import wire
+
+# ---------------------------------------------------------------------------
+# Codec registry + resolver
+# ---------------------------------------------------------------------------
+
+
+def test_codec_registry():
+    assert set(wire.CODECS) == {"exact", "fp16", "q8ef"}
+    assert wire.CODECS["exact"].lossless
+    assert not wire.CODECS["exact"].packs_indices
+    assert wire.CODECS["fp16"].packs_indices
+    assert wire.CODECS["q8ef"].error_feedback
+    assert not wire.CODECS["fp16"].error_feedback
+
+
+def test_resolve_exchange_mode():
+    assert wire.resolve_exchange_mode(None) == "exact"
+    assert wire.resolve_exchange_mode("exact") == "exact"
+    assert wire.resolve_exchange_mode("q8ef") == "q8ef"
+    for bad in ("q8", "FP16", True, 1.5):
+        with pytest.raises(ValueError, match="exchange"):
+            wire.resolve_exchange_mode(bad)
+
+
+# ---------------------------------------------------------------------------
+# Index packing: exact round-trip through the u16/u24 tier boundaries.
+# hypothesis is an optional dev dependency — the seeded sweep below covers
+# the same boundary + random-draw space deterministically when it is absent.
+# ---------------------------------------------------------------------------
+
+_IDX_TIERS = [(100, 16), (0xFFFF, 16), (0xFFFF + 1, 24),
+              (1 << 20, 24), (0xFFFFFF, 24), (0xFFFFFF + 1, 32),
+              (1 << 26, 32)]
+
+
+@pytest.mark.parametrize("v_pp,width", _IDX_TIERS)
+def test_index_width_tiers(v_pp, width):
+    assert wire.index_width(v_pp) == width
+
+
+@pytest.mark.parametrize("v_pp,width", _IDX_TIERS)
+def test_index_pack_round_trip(v_pp, width):
+    """Round-trip is exact for every representable id INCLUDING the
+    sentinel v_pp itself (pad rows ship it on the wire)."""
+    rng = np.random.default_rng(v_pp % 9973)
+    ids = np.unique(np.concatenate([
+        np.array([0, 1, v_pp - 1, v_pp]),           # boundaries + sentinel
+        rng.integers(0, v_pp + 1, size=256),
+    ])).astype(np.int32)
+    packed = wire.pack_indices(jnp.asarray(ids), v_pp)
+    if width == 16:
+        assert packed.dtype == jnp.uint16
+    elif width == 24:
+        assert packed.dtype == jnp.uint8 and packed.shape == ids.shape + (3,)
+    else:
+        assert packed.dtype == jnp.int32
+    back = wire.unpack_indices(packed, v_pp)
+    assert back.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(back), ids)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(deadline=None, max_examples=30)
+    @given(v_pp=st.integers(1, 1 << 25), seed=st.integers(0, 2**31 - 1))
+    def test_property_index_round_trip(v_pp, seed):
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, v_pp + 1, size=64).astype(np.int32)
+        back = wire.unpack_indices(
+            wire.pack_indices(jnp.asarray(ids), v_pp), v_pp)
+        np.testing.assert_array_equal(np.asarray(back), ids)
+except ImportError:  # pragma: no cover — seeded sweep above covers it
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Value codecs: encode/decode round-trip properties (seeded sweeps)
+# ---------------------------------------------------------------------------
+
+def _payload(rng, K, v_pp, shape=(), scale=1.0):
+    n = rng.integers(1, K + 1)
+    idx = np.full(K, v_pp, np.int32)
+    idx[:n] = np.sort(rng.choice(v_pp, size=n, replace=False))
+    vals = (rng.standard_normal((K,) + shape) * scale).astype(np.float32)
+    return jnp.asarray(idx), jnp.asarray(vals), n
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("shape", [(), (8,)])
+def test_exact_codec_is_identity(seed, shape):
+    rng = np.random.default_rng(seed)
+    idx, vals, n = _payload(rng, 24, 100, shape)
+    codec = wire.get_codec("exact")
+    w, err = wire.encode_delta(codec, idx, (vals,), 100)
+    out_i, (out_v,) = wire.decode_delta(codec, w, (vals,), 100)
+    assert err is None
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(out_v), np.asarray(vals))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fp16_bounded_relative_error(seed):
+    """fp16 leaf error ≤ 2^-11 relative (half-precision mantissa), ids
+    exact; int leaves pass through untouched."""
+    rng = np.random.default_rng(100 + seed)
+    idx, vals, n = _payload(rng, 32, 5000, (), scale=10.0 ** rng.integers(-3, 4))
+    ivals = jnp.asarray(rng.integers(-9, 9, size=32).astype(np.int32))
+    codec = wire.get_codec("fp16")
+    w, err = wire.encode_delta(codec, idx, (vals, ivals), 5000)
+    out_i, (out_v, out_iv) = wire.decode_delta(codec, w, (vals, ivals), 5000)
+    assert err is None
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(out_iv), np.asarray(ivals))
+    v, o = np.asarray(vals)[:n], np.asarray(out_v)[:n]
+    assert np.all(np.abs(o - v) <= np.abs(v) * 2.0 ** -10 + 1e-30)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_q8_bounded_absolute_error(seed):
+    """One q8 encode/decode: |err| ≤ scale/2 = max|x|/254 per element
+    (valid rows; pad rows decode to 0 and are dropped by the scatter)."""
+    rng = np.random.default_rng(200 + seed)
+    v_pp, K = 3000, 40
+    idx, vals, n = _payload(rng, K, v_pp, (4,), scale=3.0)
+    codec = wire.get_codec("q8ef")
+    err0 = wire.init_error_state(({"x": jnp.zeros((v_pp, 4))},))
+    w, err1 = wire.encode_delta(codec, idx, ({"x": vals},), v_pp, err=err0)
+    out_i, (dec,) = wire.decode_delta(codec, w, ({"x": vals},), v_pp)
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(idx))
+    v = np.asarray(vals)[:n]
+    o = np.asarray(dec["x"])[:n]
+    amax = np.abs(v).max()
+    assert np.all(np.abs(o - v) <= amax / wire.Q8_LEVELS / 2 + 1e-6)
+    # the residual lands exactly on the touched vertices
+    res = np.asarray(err1[0]["x"])
+    touched = np.asarray(idx)[:n]
+    np.testing.assert_allclose(res[touched], v - o, rtol=0, atol=1e-6)
+    mask = np.ones(v_pp, bool)
+    mask[touched] = False
+    assert np.all(res[mask] == 0.0)
+
+
+def test_q8_error_feedback_unbiased_over_time():
+    """Repeatedly shipping the SAME payload with error feedback: the
+    time-averaged decoded value converges to the true value (bias decays
+    as 1/T), which a feedback-free quantizer cannot do."""
+    rng = np.random.default_rng(7)
+    v_pp, K = 256, 16
+    idx = jnp.asarray(np.arange(K, dtype=np.int32))
+    vals = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    codec = wire.get_codec("q8ef")
+    err = wire.init_error_state((jnp.zeros((v_pp,)),))
+    acc = np.zeros(K)
+    T = 64
+    for _ in range(T):
+        w, err = wire.encode_delta(codec, idx, (vals,), v_pp, err=err)
+        _, (dec,) = wire.decode_delta(codec, w, (vals,), v_pp)
+        acc += np.asarray(dec)[:K]
+    v = np.asarray(vals)
+    scale = wire.q8_scale(jnp.max(jnp.abs(vals)))
+    one_shot = wire.q8_dequantize(wire.q8_quantize(vals, scale), scale)
+    bias_ef = np.abs(acc / T - v).max()
+    bias_raw = np.abs(np.asarray(one_shot) - v).max()
+    assert bias_ef <= bias_raw / 4 + 1e-7
+    assert bias_ef < 1e-3
+
+
+def test_payload_nbytes_ratios():
+    """Modeled wire bytes: fp16 exactly halves an all-f32 payload and
+    q8ef cuts it ≥3x (the CI bench gate's analytic counterpart)."""
+    tmpl = (jnp.zeros((), jnp.float32),) * 8  # 8 f32 leaves, 36B/row exact
+    v_pp, K = 4096, 128
+    nb = {c: wire.payload_nbytes(wire.get_codec(c), K, v_pp, tmpl)
+          for c in wire.CODECS}
+    assert nb["exact"] == K * (4 + 32)
+    assert nb["fp16"] * 2 == nb["exact"]
+    assert nb["q8ef"] * 3 <= nb["exact"]
+    # int leaves never compress
+    tmpl_i = (jnp.zeros((), jnp.int32),)
+    assert (wire.payload_nbytes(wire.get_codec("q8ef"), K, v_pp, tmpl_i)
+            == K * (2 + 4) + 0)
+
+
+# ---------------------------------------------------------------------------
+# End to end (in-process mesh): schedule × exchange × frontier × overlap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def part_graph():
+    return gio.part_community_graph(1, 384, degree=12, cross_edges=0,
+                                    seed=11)
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+def test_exchange_matrix_exact_bitwise(schedule, part_graph):
+    """exchange="exact" is BIT-identical to the dense baseline for every
+    frontier mode and overlap setting — the codec layer and the
+    double-buffered schedules must be invisible."""
+    g = part_graph
+    base, _ = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 4), g, max_iter=4,
+        schedule=schedule, frontier="dense", exchange="exact",
+        overlap=False)
+    for fr in ("sparse", "auto", "dense"):
+        for ov in (True, False):
+            out, info = run_vcprog_distributed(
+                PageRankProgram(g.num_vertices, 4), g, max_iter=4,
+                schedule=schedule, frontier=fr, exchange="exact",
+                overlap=ov)
+            assert info["exchange"] == "exact" and info["overlap"] is ov
+            np.testing.assert_array_equal(
+                np.asarray(out["rank"]), np.asarray(base["rank"]),
+                err_msg=f"{schedule}/{fr}/overlap={ov}")
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "push"])
+@pytest.mark.parametrize("exch", ["fp16", "q8ef"])
+def test_exchange_matrix_lossy_bounded(schedule, exch, part_graph):
+    """Lossy codecs stay within tolerance on PageRank (sum combiner) and
+    leave SSSP/CC EXACT (int/distance payloads: min/max combiners see
+    fp16-exact small values; int leaves never compress)."""
+    g = part_graph
+    base, _ = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 8), g, max_iter=8,
+        schedule=schedule, frontier="sparse", exchange="exact")
+    out, _ = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 8), g, max_iter=8,
+        schedule=schedule, frontier="sparse", exchange=exch)
+    err = np.abs(np.asarray(out["rank"]) - np.asarray(base["rank"])).max()
+    assert err < 2e-3, (schedule, exch, err)
+
+    cc_base, _ = run_vcprog_distributed(CCProgram(), g, max_iter=30,
+                                        schedule=schedule, frontier="sparse",
+                                        exchange="exact")
+    cc_out, _ = run_vcprog_distributed(CCProgram(), g, max_iter=30,
+                                       schedule=schedule, frontier="sparse",
+                                       exchange=exch)
+    np.testing.assert_array_equal(np.asarray(cc_out["label"]),
+                                  np.asarray(cc_base["label"]))
+
+
+def test_q8ef_converges_with_iterations(part_graph):
+    """Error feedback at work end to end: more PageRank iterations do
+    not accumulate quantization drift (error stays bounded, not O(T))."""
+    g = part_graph
+    errs = []
+    for iters in (4, 16):
+        base, _ = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, iters), g, max_iter=iters,
+            schedule="ring", frontier="sparse", exchange="exact")
+        out, _ = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, iters), g, max_iter=iters,
+            schedule="ring", frontier="sparse", exchange="q8ef")
+        errs.append(
+            np.abs(np.asarray(out["rank"]) - np.asarray(base["rank"])).max())
+    assert errs[1] < max(4 * errs[0], 1e-3), errs
+
+
+def test_batched_lanes_with_codec(part_graph):
+    """Batched multi-query lanes ride the codec: the [K, Q] lane-packed
+    payload rows encode/decode per leaf, the int32 `_lane_act`
+    bookkeeping column stays exact under every codec (exact batched runs
+    stay bit-identical to single-device; q8ef stays within tolerance)."""
+    g = part_graph
+    roots = [0, 5, 17]
+    ref, _ = run_vcprog([SSSPProgram(r) for r in roots], g, max_iter=40,
+                        engine="pushpull")
+    out, info = run_vcprog_distributed(
+        [SSSPProgram(r) for r in roots], g, max_iter=40, schedule="ring",
+        frontier="sparse", exchange="exact")
+    assert info["batch"] == 3
+    np.testing.assert_array_equal(np.asarray(out["distance"]),
+                                  np.asarray(ref["distance"]))
+    base, _ = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 6), g, max_iter=6, schedule="ring",
+        frontier="sparse", exchange="exact", batch=3)
+    q8, info = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 6), g, max_iter=6, schedule="ring",
+        frontier="sparse", exchange="q8ef", batch=3)
+    assert info["batch"] == 3
+    err = np.abs(np.asarray(q8["rank"]) - np.asarray(base["rank"])).max()
+    assert err < 2e-3, err
+
+
+# ---------------------------------------------------------------------------
+# Knob threading + validation + bytes accounting
+# ---------------------------------------------------------------------------
+
+def test_exchange_knob_through_api(part_graph):
+    import repro
+
+    g = part_graph
+    ref, _ = pagerank(g, num_iters=5, engine="pushpull")
+    u = repro.UniGPS(engine="distributed", exchange="q8ef")
+    r1, i1 = u.pagerank(g, num_iters=5)                      # session default
+    r2, i2 = u.pagerank(g, num_iters=5, exchange="exact")    # per-call wins
+    assert i1["exchange"] == "q8ef" and i2["exchange"] == "exact"
+    np.testing.assert_allclose(r1, ref, atol=2e-3)
+    np.testing.assert_allclose(r2, ref, atol=1e-6)
+    with pytest.raises(ValueError, match="exchange"):
+        u.pagerank(g, num_iters=2, exchange="int4")
+    # inert-but-validated on single-device engines
+    out, _ = sssp(g, 0, max_iter=30, engine="pushpull", exchange="q8ef")
+    base, _ = sssp(g, 0, max_iter=30, engine="pushpull")
+    np.testing.assert_array_equal(out, base)
+    with pytest.raises(ValueError, match="exchange"):
+        run_vcprog(SSSPProgram(0), g, 2, engine="pushpull", exchange="zstd")
+
+
+def test_bytes_exchanged_info(part_graph):
+    g = part_graph
+    out = {}
+    for exch in ("exact", "fp16", "q8ef"):
+        _, info = run_vcprog_distributed(
+            PageRankProgram(g.num_vertices, 2), g, max_iter=2,
+            schedule="ring", frontier="sparse", exchange=exch)
+        b = info["bytes_exchanged"]
+        assert b["per_superstep"] == b["sparse_per_superstep"][exch]
+        assert set(b["sparse_per_superstep"]) == set(wire.CODECS)
+        assert b["capacity"] >= 1
+        out[exch] = b["per_superstep"]
+    assert out["fp16"] < out["exact"]
+    assert out["q8ef"] < out["fp16"]
+    # dense mode ships full rows regardless of codec
+    _, info = run_vcprog_distributed(
+        PageRankProgram(g.num_vertices, 2), g, max_iter=2,
+        schedule="ring", frontier="dense", exchange="q8ef")
+    b = info["bytes_exchanged"]
+    assert b["per_superstep"] == b["dense_per_superstep"]
+
+
+def test_overlap_knob_validated_and_reported(part_graph):
+    _, info = run_vcprog_distributed(
+        SSSPProgram(0), part_graph, max_iter=5, schedule="push",
+        frontier="sparse", overlap=True, prefetch="off")
+    assert info["overlap"] is True
+
+
+def test_roofline_overlap_and_codec_model():
+    from repro.launch import roofline as RL
+
+    rf = RL.Roofline(flops=1e12, hbm_bytes=1e11, wire_bytes=1e10, chips=8,
+                     model_flops=8e12, collectives={})
+    # defaults: overlap on, exact codec
+    assert rf.wire_codec_ratio == 1.0 and rf.overlap is True
+    assert rf.step_s == max(rf.compute_s, rf.memory_s, rf.collective_s)
+    rf_ser = RL.Roofline(flops=1e12, hbm_bytes=1e11, wire_bytes=1e10,
+                         chips=8, model_flops=8e12, collectives={},
+                         overlap=False)
+    assert rf_ser.step_s == max(rf.compute_s, rf.memory_s) + rf.collective_s
+    assert rf_ser.step_s > rf.step_s
+    rf_q8 = RL.Roofline(flops=1e12, hbm_bytes=1e11, wire_bytes=1e10,
+                        chips=8, model_flops=8e12, collectives={},
+                        wire_codec_ratio=0.3)
+    assert rf_q8.collective_s == pytest.approx(rf.collective_s * 0.3)
+    d = rf_q8.to_dict()
+    assert d["wire_codec_ratio"] == 0.3 and d["overlap"] is True
+
+
+# ---------------------------------------------------------------------------
+# The real 8-part mesh (acceptance criterion) — subprocess, slow lane
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import io as gio
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import PageRankProgram, SSSPProgram
+
+g = gio.part_community_graph(8, 192, degree=12, cross_edges=24, seed=13)
+V = g.num_vertices
+out = {"parts": None, "sssp_exact": [], "pr_q8ef": []}
+
+# single-device dense reference (min combiner -> order-independent,
+# so the distributed exact runs must be BIT-identical to it)
+ref, _ = run_vcprog(SSSPProgram(0), g, 60, engine="pushpull")
+ref_d = np.asarray(ref["distance"])
+for schedule in ("allgather", "ring", "push"):
+    for kernel in ("off", "on"):
+        for frontier in ("sparse", "auto"):
+            for overlap in (True, False):
+                d, info = run_vcprog_distributed(
+                    SSSPProgram(0), g, 60, schedule=schedule,
+                    kernel=kernel, frontier=frontier,
+                    exchange="exact", overlap=overlap)
+                out["parts"] = info["num_parts"]
+                out["sssp_exact"].append({
+                    "cfg": [schedule, kernel, frontier, overlap],
+                    "ok": bool((np.asarray(d["distance"]) == ref_d).all()),
+                })
+
+# PageRank under q8ef: bounded error vs the schedule's own exact run
+for schedule in ("allgather", "ring", "push"):
+    base, _ = run_vcprog_distributed(
+        PageRankProgram(V, 10), g, 10, schedule=schedule,
+        frontier="sparse", exchange="exact")
+    q, info = run_vcprog_distributed(
+        PageRankProgram(V, 10), g, 10, schedule=schedule,
+        frontier="sparse", exchange="q8ef")
+    err = float(np.abs(np.asarray(q["rank"])
+                       - np.asarray(base["rank"])).max())
+    bts = info["bytes_exchanged"]
+    out["pr_q8ef"].append({
+        "schedule": schedule, "err": err,
+        "bytes": bts["per_superstep"],
+        "bytes_exact": bts["exact_per_superstep"],
+    })
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_exchange_8dev_subprocess():
+    """Acceptance: on a REAL 8-part mesh, exchange="exact" is bit-identical
+    across 3 schedules × kernel on/off × sparse/auto × overlap on/off
+    against a single-device reference, and q8ef PageRank converges within
+    tolerance while actually shrinking the modeled wire bytes."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    from conftest import subprocess_env
+
+    r = subprocess.run([_sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = _json.loads(line[len("RESULT:"):])
+    assert out["parts"] == 8
+    assert len(out["sssp_exact"]) == 3 * 2 * 2 * 2
+    for rec in out["sssp_exact"]:
+        assert rec["ok"], rec["cfg"]
+    for rec in out["pr_q8ef"]:
+        assert rec["err"] < 2e-3, rec
+        # ≥2x here: PageRank payloads are index-dominated (8-12 B/row
+        # exact — push ships scalar message rows), so the ≥3x reduction
+        # gate lives in bench_kernels.bench_exchange on the D=8
+        # float-vector payload; this asserts the codec genuinely halves
+        # the wire on the real 8-part mesh.
+        assert rec["bytes"] * 2 <= rec["bytes_exact"], rec
