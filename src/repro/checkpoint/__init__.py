@@ -1,1 +1,8 @@
-from .manager import CheckpointManager  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointManager,
+    FingerprintMismatch,
+    array_signature,
+    graph_signature,
+    program_signature,
+    resume_step,
+)

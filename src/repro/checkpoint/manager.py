@@ -10,6 +10,7 @@
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -19,6 +20,11 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class FingerprintMismatch(ValueError):
+    """A checkpoint directory holds snapshots written by a different run
+    configuration (graph / program / knob fingerprint disagrees)."""
 
 
 def _flatten(tree, prefix=""):
@@ -56,11 +62,16 @@ def _unflatten_into(template, flat, prefix=""):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: Optional[int] = 3,
+                 async_save: bool = True):
+        """`keep` retains the newest `keep` complete checkpoints after
+        every save; `keep=None` or `keep <= 0` disables pruning (keep
+        everything)."""
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -86,20 +97,37 @@ class CheckpointManager:
             os.replace(tmp, final)
             self._prune()
 
+        def _write_captured():
+            # a daemon thread's exception would otherwise vanish into
+            # threading.excepthook — capture it; the next wait()/save()
+            # re-raises, so a failed snapshot can never be relied on
+            try:
+                _write()
+            except BaseException as e:
+                self._error = e
+
         if self.async_save and not block:
-            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending = threading.Thread(target=_write_captured,
+                                             daemon=True)
             self._pending.start()
         else:
             _write()
 
     def wait(self):
+        """Block until the in-flight async save (if any) is durable.
+        Re-raises the exception of a failed background save."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint save into {self.dir} failed") from err
 
     def _prune(self):
-        steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
+        if not self.keep or self.keep <= 0:  # keep everything
+            return
+        for s in self.all_steps()[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
 
@@ -124,8 +152,9 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
-        z = np.load(path)
-        flat = {k.replace("\x1f", "/"): z[k] for k in z.files}
+        with np.load(path) as z:  # npz loads lazily: materialize, close
+            flat = {k.replace("\x1f", "/"): np.asarray(z[k])
+                    for k in z.files}
         tree = _unflatten_into(template, flat)
         if shardings is not None:
             tree = jax.tree.map(
@@ -139,3 +168,79 @@ class CheckpointManager:
         with open(os.path.join(self.dir, f"step_{step:010d}",
                                "meta.json")) as f:
             return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Resume fingerprints (graph / program / knob identity of a checkpoint)
+# ---------------------------------------------------------------------------
+
+def array_signature(*arrays) -> str:
+    """sha1 over the raw bytes (and dtypes/shapes) of host arrays."""
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def graph_signature(graph) -> str:
+    """sha1 identity of a PropertyGraph-shaped object (duck-typed — no
+    core import, so the checkpoint layer stays dependency-free): vertex
+    count, directedness, edge endpoints, and every named edge/vertex
+    property in sorted order."""
+    h = hashlib.sha1()
+    h.update(f"V={int(graph.num_vertices)};".encode())
+    h.update(f"directed={bool(getattr(graph, 'directed', True))};".encode())
+    parts = [np.asarray(graph.src), np.asarray(graph.dst)]
+    for name in ("edge_props", "vertex_props"):
+        props = getattr(graph, name, None) or {}
+        for k in sorted(props):
+            h.update(f"{name}/{k};".encode())
+            parts.append(np.asarray(props[k]))
+    h.update(array_signature(*parts).encode())
+    return h.hexdigest()
+
+
+def program_signature(program) -> str:
+    """Deterministic identity of a VCProgram instance: class path plus
+    its (sorted) instance attributes' reprs."""
+    attrs = getattr(program, "__dict__", {})
+    body = ",".join(f"{k}={attrs[k]!r}" for k in sorted(attrs))
+    cls = type(program)
+    return f"{cls.__module__}.{cls.__qualname__}({body})"
+
+
+def resume_step(manager: CheckpointManager, fingerprint: dict,
+                resume: str = "auto") -> Optional[int]:
+    """Pick the checkpoint step to resume from, or None for a fresh run.
+
+    resume="auto"   resume from the latest snapshot if one exists;
+    resume="never"  ignore existing snapshots (fresh run, may overwrite);
+    resume="must"   require a snapshot — FileNotFoundError otherwise.
+
+    A found snapshot's stored fingerprint must match `fingerprint`
+    exactly (graph signature, engine/schedule, program signature, and
+    every layout-relevant knob) — a mismatch raises FingerprintMismatch
+    rather than silently resuming incompatible state."""
+    if resume not in ("auto", "never", "must"):
+        raise ValueError(f'resume must be "auto"|"never"|"must", '
+                         f"got {resume!r}")
+    if resume == "never":
+        return None
+    step = manager.latest_step()
+    if step is None:
+        if resume == "must":
+            raise FileNotFoundError(
+                f'resume="must" but no checkpoints in {manager.dir}')
+        return None
+    saved = manager.metadata(step).get("fingerprint", {})
+    bad = {k: (saved.get(k), v) for k, v in fingerprint.items()
+           if saved.get(k) != v}
+    if bad:
+        raise FingerprintMismatch(
+            f"checkpoint at step {step} in {manager.dir} was written by a "
+            f"different run configuration ({{key: (saved, current)}} = "
+            f"{bad}); pass resume='never' or use a fresh checkpoint_dir")
+    return step

@@ -55,12 +55,21 @@ class UniGPS:
     bit-identical; "fp16"/"q8ef" compress the float value leaves of the
     sparse payloads (indices stay exact via u16/u24 bit-packing). Inert
     for single-device engines.
+
+    checkpoint_dir / checkpoint_every / guards: session-level resilience
+    defaults (docs/robustness.md). A checkpoint_dir snapshots the
+    complete superstep loop carry every `checkpoint_every` supersteps and
+    resumes bit-identically (`resume="auto"` per call); guards="on" arms
+    the wire checksums and the NaN/monotonicity watchdogs with
+    rollback-and-replay recovery. Every operator also accepts these (and
+    `resume=`/`faults=`) as per-call overrides.
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
                  use_kernel: bool | None = None, reorder: str = "none",
                  frontier: str = "dense", prefetch: str = "auto",
-                 exchange: str = "exact"):
+                 exchange: str = "exact", checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 0, guards: str | bool = "off"):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
@@ -69,6 +78,9 @@ class UniGPS:
         self.frontier = frontier
         self.prefetch = prefetch
         self.exchange = exchange
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.guards = guards
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -104,7 +116,14 @@ class UniGPS:
                "reorder": kw.pop("reorder", self.reorder),
                "frontier": kw.pop("frontier", self.frontier),
                "prefetch": kw.pop("prefetch", self.prefetch),
-               "exchange": kw.pop("exchange", self.exchange)}
+               "exchange": kw.pop("exchange", self.exchange),
+               "checkpoint_dir": kw.pop("checkpoint_dir",
+                                        self.checkpoint_dir),
+               "checkpoint_every": kw.pop("checkpoint_every",
+                                          self.checkpoint_every),
+               "resume": kw.pop("resume", "auto"),
+               "guards": kw.pop("guards", self.guards),
+               "faults": kw.pop("faults", ())}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

@@ -8,6 +8,7 @@ Engines are thin *schedule descriptions*: each one picks which
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict
 
 import jax
@@ -26,12 +27,12 @@ def prepare_device_graph(g: PropertyGraph,
     return build_device_graph(g, reorder=reorder)
 
 
-def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
-                  kernel_on: bool, frontier: str = "dense",
-                  prefetch: str = "auto"):
+def _init_state(program, graph: DeviceGraph, engine, kernel_on: bool):
+    """The complete Algorithm-1 loop carry (it, vprops, active, inbox,
+    has_msg, extra) — the chunked/checkpointed path snapshots exactly
+    this tuple at superstep boundaries."""
     V = graph.num_vertices
     empty = jax.tree.map(jnp.asarray, program.empty_message())
-
     # reordered graphs: init_vertex sees ORIGINAL ids (vertex_perm)
     vprops0 = vcprog.init_vertices(program, graph.vprops_in,
                                    graph.out_degree, V,
@@ -40,7 +41,12 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
     active0 = jnp.ones((V,), bool)
     has_msg0 = jnp.zeros((V,), bool)
     extra0 = engine.init_extra(graph, program, vprops0, kernel_on)
+    return (jnp.int32(1), vprops0, active0, inbox0, has_msg0, extra0)
 
+
+def _make_step(program, graph: DeviceGraph, engine, kernel_on: bool,
+               frontier: str, prefetch: str):
+    empty = jax.tree.map(jnp.asarray, program.empty_message())
     compute_override = getattr(engine, "compute_phase", None)
 
     def step(it, vprops, active, inbox, has_msg, extra):
@@ -65,13 +71,24 @@ def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
             frontier, prefetch)
         return vprops, active, inbox, has_msg, extra
 
-    state = vcprog.run_loop(step, (jnp.int32(1), vprops0, active0, inbox0,
-                                   has_msg0, extra0), max_iter)
-    final_it, vprops, active, _, _, _ = state
+    return step
+
+
+def _finish(graph: DeviceGraph, state):
+    final_it, vprops, active = state[0], state[1], state[2]
     if graph.inv_perm is not None:
         # un-permute: row old_id of the result lives at new_id=inv_perm[old]
         vprops = records.tree_gather(vprops, graph.inv_perm)
     return vprops, final_it - 1, jnp.sum(active)
+
+
+def _run_compiled(program, graph: DeviceGraph, max_iter: int, engine,
+                  kernel_on: bool, frontier: str = "dense",
+                  prefetch: str = "auto"):
+    step = _make_step(program, graph, engine, kernel_on, frontier, prefetch)
+    state = vcprog.run_loop(step, _init_state(program, graph, engine,
+                                              kernel_on), max_iter)
+    return _finish(graph, state)
 
 
 @functools.lru_cache(maxsize=64)
@@ -89,6 +106,61 @@ def _jitted_runner(engine_name: str, program_key, max_iter: int,
     # DeviceGraph's static fields (num_vertices/num_edges/...) live in the
     # pytree structure, so jax.jit keys its own cache on graph shape.
     return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=64)
+def _chunked_runner(engine_name: str, program_key, kernel_on: bool,
+                    frontier: str, prefetch: str, guards_on: bool,
+                    fault_specs):
+    """(init, chunk, finish) jitted triple for host-level rounds of
+    supersteps — the resilient path of `run_vcprog`. `chunk(graph, state,
+    limit, fault_on)` runs the same per-superstep body as the monolithic
+    runner until superstep `limit` (inclusive), convergence, or a tripped
+    guard, and returns (state, [NUM_ALARMS] alarm counts); `limit` and
+    `fault_on` are traced operands, so chunk boundaries never retrace.
+    The superstep sequence is identical to the monolithic loop, so a
+    resumed run is bit-identical to an uninterrupted one."""
+    from repro.distributed import faults as faults_mod
+    from . import pregel, gas, pushpull, callback  # noqa: F401 (registration)
+    engine = ENGINES[engine_name]
+    program = program_key.program
+    vspecs = faults_mod.vprop_faults(fault_specs)
+
+    def init(graph: DeviceGraph):
+        return _init_state(program, graph, engine, kernel_on)
+
+    def chunk(graph: DeviceGraph, state, limit, fault_on):
+        step = _make_step(program, graph, engine, kernel_on, frontier,
+                          prefetch)
+
+        def cond(s):
+            it, _, active, _, has_msg, _, alarms = s
+            return ((it <= limit)
+                    & (jnp.sum(active) + jnp.sum(has_msg) > 0)
+                    & (jnp.sum(alarms) == 0))
+
+        def body(s):
+            it, vprops, active, inbox, has_msg, extra, alarms = s
+            prev = vprops
+            vprops, active, inbox, has_msg, extra = step(
+                it, vprops, active, inbox, has_msg, extra)
+            if vspecs:
+                vprops = faults_mod.poison_vprops(vprops, program, it,
+                                                  fault_on, vspecs)
+            if guards_on:
+                alarms = alarms + faults_mod.guard_alarms(program, prev,
+                                                          vprops)
+            return (it + 1, vprops, active, inbox, has_msg, extra, alarms)
+
+        out = jax.lax.while_loop(
+            cond, body,
+            tuple(state) + (jnp.zeros((faults_mod.NUM_ALARMS,), jnp.int32),))
+        return out[:-1], out[-1]
+
+    def finish(graph: DeviceGraph, state):
+        return _finish(graph, tuple(state))
+
+    return jax.jit(init), jax.jit(chunk), jax.jit(finish)
 
 
 class _ProgramKey:
@@ -118,7 +190,10 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
                use_kernel: bool | None = None, reorder: str = "none",
                frontier: str = "dense", prefetch: str = "auto",
                gdev: DeviceGraph | None = None, batch: int | None = None,
-               exchange: str = "exact", overlap: bool = True):
+               exchange: str = "exact", overlap: bool = True,
+               checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+               resume: str = "auto", guards: str | bool = "off",
+               faults=()):
     """Execute a VCProg program (paper Algorithm 1). Returns (vprops, info).
 
     kernel: "auto" (default) picks the fused/segment Pallas kernels on TPU
@@ -162,10 +237,25 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
     so the exchange hides behind the bucket plane passes; bit-identical
     on/off and inert for single-device engines.
 
+    Resilience (docs/robustness.md): `checkpoint_dir`/`checkpoint_every`
+    restructure the loop into host-level rounds of `checkpoint_every`
+    supersteps and snapshot the complete loop carry at every boundary
+    through `repro.checkpoint.CheckpointManager`; `resume="auto"` picks
+    up the latest fingerprint-matching snapshot and the resumed run is
+    bit-identical to an uninterrupted one. `guards="on"` arms the NaN/Inf
+    and monotonicity watchdogs (and, on the distributed engine, the wire
+    checksums) — a tripped guard rolls back to the last committed
+    snapshot and replays. `faults=` takes seeded
+    `repro.distributed.faults.Fault` specs for deterministic injection
+    (tests/CI); `info["converged"]` is False (with a
+    NonConvergenceWarning) when the run hits `max_iter` with a
+    non-empty frontier.
+
     This is the single-device path; `repro.core.engines.distributed` provides
     the shard_map multi-device path with identical semantics.
     """
-    from repro.distributed import wire
+    from repro import checkpoint as ckpt
+    from repro.distributed import faults as faults_mod, wire
     frontier = message_plane.resolve_frontier_mode(frontier)
     prefetch = message_plane.resolve_prefetch_mode(prefetch)
     exchange = wire.resolve_exchange_mode(exchange)
@@ -174,15 +264,79 @@ def run_vcprog(program: vcprog.VCProgram, graph: PropertyGraph, max_iter: int,
         return distributed.run_vcprog_distributed(
             program, graph, max_iter, kernel=kernel, use_kernel=use_kernel,
             reorder=reorder, frontier=frontier, prefetch=prefetch,
-            batch=batch, exchange=exchange, overlap=overlap)
+            batch=batch, exchange=exchange, overlap=overlap,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            resume=resume, guards=guards, faults=faults)
+    guards_on = faults_mod.resolve_guards_mode(guards)
+    fault_specs = faults_mod.resolve_faults(faults)
     program = vcprog.as_batched(program, batch)
     if gdev is None:
         gdev = prepare_device_graph(graph, reorder=reorder)
     kernel_on = message_plane.resolve_kernel_arg(kernel, use_kernel)
-    runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
-                            kernel_on, frontier, prefetch)
-    vprops, iters, num_active = runner(gdev)
-    info = {"iterations": int(iters), "active_at_end": int(num_active)}
+    resilient = (bool(checkpoint_dir) or int(checkpoint_every or 0) > 0
+                 or guards_on or bool(fault_specs))
+    if not resilient:
+        runner = _jitted_runner(engine, _ProgramKey(program), int(max_iter),
+                                kernel_on, frontier, prefetch)
+        vprops, iters, num_active = runner(gdev)
+        info = {"iterations": int(iters),
+                "active_at_end": int(num_active),
+                "converged": bool(int(num_active) == 0)}
+    else:
+        if faults_mod.wire_faults(fault_specs):
+            raise ValueError(
+                "wire faults (flip_bits/drop_delta) need "
+                "engine='distributed' — single-device engines have no "
+                "delta exchange to corrupt")
+        init_j, chunk_j, finish_j = _chunked_runner(
+            engine, _ProgramKey(program), kernel_on, frontier, prefetch,
+            guards_on, fault_specs)
+        state = init_j(gdev)
+        mgr = resumed = save_cb = None
+        if checkpoint_dir:
+            # max_iter deliberately NOT in the fingerprint: a truncated
+            # run may resume with a higher budget (the kill→resume tests)
+            fp = {"graph": ckpt.graph_signature(graph), "engine": engine,
+                  "program": ckpt.program_signature(program),
+                  "reorder": reorder, "kernel": bool(kernel_on),
+                  "layout": "device", "format": 1}
+            mgr = ckpt.CheckpointManager(checkpoint_dir)
+            step0 = ckpt.resume_step(mgr, fp, resume)
+            if step0 is not None:
+                state = mgr.restore(tuple(state), step0)
+                resumed = step0
+
+            def save_cb(st, done):
+                mgr.save(done, tuple(st), metadata={"fingerprint": fp})
+
+        def chunk(st, limit, f_on):
+            return chunk_j(gdev, tuple(st),
+                           jnp.int32(limit), jnp.int32(f_on))
+
+        def probe(st):
+            it = int(jax.device_get(st[0]))
+            live = (int(jnp.sum(jnp.asarray(st[2]))) +
+                    int(jnp.sum(jnp.asarray(st[4])))) > 0
+            return it, live
+
+        state, rinfo = faults_mod.drive_chunks(
+            chunk, state, max_iter=int(max_iter),
+            every=int(checkpoint_every or 0), probe=probe, save=save_cb,
+            flush=(mgr.wait if mgr is not None else None),
+            guards_on=guards_on, faults=fault_specs, degrade=None)
+        if mgr is not None:
+            mgr.wait()
+        vprops, iters, num_active = finish_j(gdev, tuple(state))
+        info = {"iterations": int(iters),
+                "active_at_end": int(num_active),
+                "converged": bool(int(num_active) == 0),
+                "resumed_from": resumed, **rinfo}
+    if not info["converged"]:
+        warnings.warn(
+            f"run_vcprog hit max_iter={int(max_iter)} with "
+            f"{info['active_at_end']} vertices still active — the result "
+            "is truncated, not converged (info['converged'] is False)",
+            faults_mod.NonConvergenceWarning, stacklevel=2)
     if isinstance(program, vcprog.BatchedProgram):
         # un-wrap the lane axis: the user sees the base record with [V, Q]
         # leaves (the `_lane_act` bookkeeping column stays internal)

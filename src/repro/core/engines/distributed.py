@@ -33,6 +33,7 @@ execution in the paper's sense, where the "platform" here is the mesh.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -43,7 +44,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .. import message_plane, records, vcprog
 from ..graph import PropertyGraph, partition_graph
 from ..graph_device import bucket_layout, workset_capacity
-from repro.distributed import wire
+from repro.distributed import faults as faults_mod, wire
 
 AXIS = "graph"
 
@@ -302,7 +303,9 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                           frontier: str = "dense",
                           prefetch_windows=None,
                           exchange: str = "exact",
-                          overlap: bool = True):
+                          overlap: bool = True,
+                          guards: bool = False,
+                          faults=()):
     """One Algorithm-1 iteration as a shard_map-able local function.
 
     Local args: vprops/active/inbox/has_msg [v_pp,...] slices, edge arrays
@@ -353,6 +356,18 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
     window specializes its own kernel; the ring schedule visits buckets
     with a traced index and therefore requires ONE shared window
     (build with shared=True).
+
+    guards=True arms the integrity guards (docs/robustness.md): every
+    sparse delta payload carries a `wire.attach_checksum` crc (computed
+    by the sender after encoding, verified by every receiver after the
+    collective — all three schedules), and each superstep's vertex-state
+    transition runs the NaN/Inf + monotonicity watchdogs
+    (`faults_mod.guard_alarms`). The step then returns an extra psum'd
+    [NUM_ALARMS] alarm vector before the count, and local_step accepts a
+    trailing `fault_on` scalar gating any `faults=` specs (seeded
+    deterministic injection, baked into the trace so arming costs no
+    recompile). With guards off and no faults the wire format and
+    return shape are unchanged.
     """
     frontier = message_plane.resolve_frontier_mode(frontier)
     codec = wire.get_codec(wire.resolve_exchange_mode(exchange))
@@ -362,6 +377,10 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
     carry_err = codec.error_feedback and frontier != "dense"
     K = (workset_capacity(v_pp, 1.0) if frontier == "sparse"
          else workset_capacity(v_pp))
+    guards = bool(guards)
+    faults = faults_mod.resolve_faults(faults)
+    wf = faults_mod.wire_faults(faults)
+    vf = faults_mod.vprop_faults(faults)
     if prefetch_windows is not None:
         prefetch_windows = tuple(int(w) for w in prefetch_windows)
         if len(prefetch_windows) != num_parts:
@@ -375,18 +394,43 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 "with build_bucket_prefetch(..., shared=True)")
 
     def local_step(it, vprops, active, inbox, has_msg, edges,
-                   wire_err=None):
+                   wire_err=None, fault_on=None):
         empty = jax.tree.map(jnp.asarray, program.empty_message())
         my = jax.lax.axis_index(AXIS)
         werr = wire_err if (carry_err and wire_err is not None) else {}
+        f_on = jnp.int32(0) if fault_on is None else fault_on
+
+        def guard_payload(payload):
+            """Sender side of the wire guard: attach the crc to the
+            encoded payload, THEN apply any injected wire faults — the
+            receiver-side verify sees what a flaky link would deliver."""
+            if guards:
+                payload = wire.attach_checksum(payload)
+            if wf:
+                payload = faults_mod.corrupt_wire(payload, it, f_on, wf,
+                                                  my=my)
+            return payload
+
+        def count_bad(stacked):
+            """Receiver side: verify every row of a [P]-stacked payload
+            tree after the collective."""
+            ok = jax.vmap(wire.checksum_ok)(stacked)
+            return jnp.sum((~ok).astype(jnp.int32))
 
         # Phase 2: vertex_compute on the local slice. The local frontier
         # is first-class from here on: its popcount is computed once and
         # consumed by the delta-exchange crossover conds AND the global
         # termination count below.
         process = active | has_msg
+        prev_vprops = vprops
         vprops, active = vcprog.compute_phase(program, vprops, inbox,
                                               process, it)
+        if vf:
+            vprops = faults_mod.poison_vprops(vprops, program, it, f_on,
+                                              vf, my=my)
+        alarms0 = (faults_mod.guard_alarms(program, prev_vprops, vprops)
+                   if guards else None)
+        crc_bad = jnp.int32(0)
         # batched programs: `active` is the OR across lanes already; the
         # per-lane masks ride the frontier so the delta-exchange payloads
         # (which gather whole [Q]-lane rows of the union frontier) stay
@@ -530,7 +574,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 all_act = jax.lax.all_gather(active, AXIS)
                 inbox, has_msg = ag_run(lambda b: (records.tree_row(all_vp, b),
                                                    all_act[b]))
-                return inbox, has_msg, werr
+                return inbox, has_msg, werr, jnp.int32(0)
 
             def ag_sparse(werr):
                 # delta exchange: gather only the ENCODED (indices, values)
@@ -539,22 +583,26 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 idx, vals, _ = _compact_active(vprops, active, K, v_pp)
                 payload, werr = wire.encode_delta(codec, idx, vals, v_pp,
                                                   err=werr)
+                payload = guard_payload(payload)
                 all_wire = jax.tree.map(
                     lambda a: jax.lax.all_gather(a, AXIS), payload)
+                bad = count_bad(all_wire) if guards else jnp.int32(0)
+                # decode_delta reads only idx/vals keys — the crc riding
+                # `all_wire` is invisible to the reconstruct path
                 inbox, has_msg = ag_run(lambda b: _scatter_part(
                     vprops, v_pp, *wire.decode_delta(
                         codec, records.tree_row(all_wire, b), vals, v_pp)))
-                return inbox, has_msg, werr
+                return inbox, has_msg, werr, bad
 
             if frontier == "dense":
-                inbox, has_msg, werr = ag_dense(werr)
+                inbox, has_msg, werr, crc_bad = ag_dense(werr)
             elif frontier == "sparse":
-                inbox, has_msg, werr = ag_sparse(werr)
+                inbox, has_msg, werr, crc_bad = ag_sparse(werr)
             else:
                 # one pmax so every device takes the same cond branch
                 fits = jax.lax.pmax(front.count, AXIS) <= K
-                inbox, has_msg, werr = jax.lax.cond(fits, ag_sparse,
-                                                    ag_dense, werr)
+                inbox, has_msg, werr, crc_bad = jax.lax.cond(
+                    fits, ag_sparse, ag_dense, werr)
         elif schedule == "ring":
             perm = [(i, (i + 1) % num_parts) for i in range(num_parts)]
             pperm = lambda t: jax.tree.map(
@@ -574,9 +622,15 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 fused kernel; the rotated data is identical either
                 way."""
                 def body(carry, r):
-                    inbox, has_msg, payload = carry
+                    inbox, has_msg, payload, bad = carry
                     nxt = pperm(payload) if overlap else None
                     b = (my - r) % num_parts    # whose props we hold now
+                    if guards:
+                        # every hop verifies the payload it now holds
+                        # (hop 0 = the owner's own, so sender-side
+                        # corruption is caught even before it travels)
+                        bad = bad + (~wire.checksum_ok(payload)).astype(
+                            jnp.int32)
                     vp_b, act_b = reconstruct(payload)
                     b_inbox, b_has = bucket_plane(bucket_at(b, ring_pf_w),
                                                   vp_b, act_b)
@@ -584,20 +638,22 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                                                     b_inbox, b_has)
                     # rotate to the next neighbour
                     nxt = nxt if overlap else pperm(payload)
-                    return (inbox, has_msg, nxt), None
+                    return (inbox, has_msg, nxt, bad), None
 
                 if unroll_buckets:
-                    carry = (inbox0, has0, payload0)
+                    carry = (inbox0, has0, payload0, jnp.int32(0))
                     for r in range(num_parts):
                         carry, _ = body(carry, jnp.int32(r))
-                    return carry[0], carry[1]
-                (inbox, has_msg, _), _ = jax.lax.scan(
-                    body, (inbox0, has0, payload0), jnp.arange(num_parts))
-                return inbox, has_msg
+                    return carry[0], carry[1], carry[3]
+                (inbox, has_msg, _, bad), _ = jax.lax.scan(
+                    body, (inbox0, has0, payload0, jnp.int32(0)),
+                    jnp.arange(num_parts))
+                return inbox, has_msg, bad
 
             def ring_dense(werr):
-                inbox, has_msg = ring_run((vprops, active), lambda p: p)
-                return inbox, has_msg, werr
+                inbox, has_msg, bad = ring_run((vprops, active),
+                                               lambda p: p)
+                return inbox, has_msg, werr, bad
 
             def ring_sparse(werr):
                 # rotate the ENCODED compact (indices, values) of the
@@ -607,18 +663,20 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                 idx, vals, _ = _compact_active(vprops, active, K, v_pp)
                 payload, werr = wire.encode_delta(codec, idx, vals, v_pp,
                                                   err=werr)
-                inbox, has_msg = ring_run(payload, lambda p: _scatter_part(
+                payload = guard_payload(payload)
+                inbox, has_msg, bad = ring_run(payload,
+                                               lambda p: _scatter_part(
                     vprops, v_pp, *wire.decode_delta(codec, p, vals, v_pp)))
-                return inbox, has_msg, werr
+                return inbox, has_msg, werr, bad
 
             if frontier == "dense":
-                inbox, has_msg, werr = ring_dense(werr)
+                inbox, has_msg, werr, crc_bad = ring_dense(werr)
             elif frontier == "sparse":
-                inbox, has_msg, werr = ring_sparse(werr)
+                inbox, has_msg, werr, crc_bad = ring_sparse(werr)
             else:
                 fits = jax.lax.pmax(front.count, AXIS) <= K
-                inbox, has_msg, werr = jax.lax.cond(fits, ring_sparse,
-                                                    ring_dense, werr)
+                inbox, has_msg, werr, crc_bad = jax.lax.cond(
+                    fits, ring_sparse, ring_dense, werr)
         elif schedule == "push":
             # §Perf (Gemini push mode): src props are LOCAL; combine
             # per-dst-part partial inboxes locally, exchange them with ONE
@@ -672,6 +730,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                         if carry_err:
                             werr = jax.tree.map(
                                 lambda e, r: e.at[b].set(r), werr, e_row)
+                        w_o = guard_payload(w_o)
                     else:
                         w_o = (one, oneh)
                     if o == 0:
@@ -687,6 +746,8 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     recv[0][1])
                 for s, w in recv:
                     buf = jax.tree.map(lambda bb, a: bb.at[s].set(a), buf, w)
+                if guards and frontier == "sparse":
+                    crc_bad = count_bad(buf)
                 fold = (sparse_fold if frontier == "sparse"
                         else lambda c, x: (_merge_partial(
                             program, c[0], c[1], x[0], x[1]), None))
@@ -722,7 +783,7 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                     exh = a2a(phas)
                     inbox, has_msg = jax.lax.scan(
                         _fold_partials(program), (inbox0, has0), (ex, exh))[0]
-                    return inbox, has_msg, werr
+                    return inbox, has_msg, werr, jnp.int32(0)
 
                 def push_sparse(werr):
                     # delta exchange of the partial inboxes: each [v_pp]
@@ -740,30 +801,41 @@ def make_distributed_step(program: vcprog.VCProgram, v_pp: int,
                         enc, _ = jax.vmap(
                             lambda i, v: sparse_payload(i, v, None))(
                             idx, partials)
+                    if guards:
+                        enc = jax.vmap(wire.attach_checksum)(enc)
+                    if wf:
+                        enc = faults_mod.corrupt_wire(enc, it, f_on, wf,
+                                                      my=my)
                     ex_wire = jax.tree.map(a2a, enc)
+                    bad = count_bad(ex_wire) if guards else jnp.int32(0)
                     inbox, has_msg = jax.lax.scan(sparse_fold,
                                                   (inbox0, has0), ex_wire)[0]
-                    return inbox, has_msg, werr
+                    return inbox, has_msg, werr, bad
 
                 if frontier == "dense":
-                    inbox, has_msg, werr = push_dense(werr)
+                    inbox, has_msg, werr, crc_bad = push_dense(werr)
                 elif frontier == "sparse":
-                    inbox, has_msg, werr = push_sparse(werr)
+                    inbox, has_msg, werr, crc_bad = push_sparse(werr)
                 else:
                     rows = jnp.sum(phas.astype(jnp.int32), axis=1)  # [P]
                     fits = jax.lax.pmax(jnp.max(rows), AXIS) <= K
-                    inbox, has_msg, werr = jax.lax.cond(
+                    inbox, has_msg, werr, crc_bad = jax.lax.cond(
                         fits, push_sparse, push_dense, werr)
         else:
             raise ValueError(schedule)
 
         num_active = jax.lax.psum(front.count, AXIS)
         num_msg = jax.lax.psum(jnp.sum(has_msg.astype(jnp.int32)), AXIS)
+        ret = (vprops, active, inbox, has_msg)
         if carry_err:
-            return vprops, active, inbox, has_msg, werr, num_active + num_msg
-        return vprops, active, inbox, has_msg, num_active + num_msg
+            ret = ret + (werr,)
+        if guards:
+            alarms = alarms0.at[faults_mod.ALARM_CRC].add(crc_bad)
+            ret = ret + (jax.lax.psum(alarms, AXIS),)
+        return ret + (num_active + num_msg,)
 
     local_step.carries_wire_err = carry_err
+    local_step.carries_alarms = guards
     return local_step
 
 
@@ -831,15 +903,111 @@ def make_distributed_runner(program: vcprog.VCProgram, v_pp: int,
         state = jax.lax.while_loop(cond, body, state)
         vprops, active = state[1], state[2]
         ex = lambda t: jax.tree.map(lambda a: a[None], t)
-        return ex(vprops), ex(active)
+        return (ex(vprops), ex(active), state[0][None],
+                jnp.asarray(state[-1])[None])
 
     from repro.distributed.sharding import shard_map
     smapped = shard_map(
         local_loop, mesh=mesh,
         in_specs=(vspec, vspec, vspec, vspec, vspec, espec),
-        out_specs=(vspec, vspec),
+        out_specs=(vspec, vspec, vspec, vspec),
         check_vma=False)
     return jax.jit(smapped)
+
+
+def make_distributed_chunk_runner(program: vcprog.VCProgram, v_pp: int,
+                                  num_parts: int, mesh: Mesh,
+                                  schedule: str = "ring",
+                                  kernel_on: bool = False,
+                                  frontier: str = "dense",
+                                  prefetch_windows=None,
+                                  exchange: str = "exact",
+                                  overlap: bool = True,
+                                  guards: bool = False,
+                                  faults=()):
+    """jit(shard_map(init)) / jit(shard_map(chunk)) pair for the
+    resilient path: `chunk(state, valid, edges, limit, fault_on)` runs
+    supersteps until `limit` (inclusive), convergence, or a tripped
+    guard, over an explicit state DICT {it, vprops, active, inbox,
+    has_msg, [werr], n} whose leaves keep the [P, ...] sharded layout —
+    the exact carry `run_vcprog_distributed` snapshots at chunk
+    boundaries. Scalars (it, n, limit, fault_on) travel as [P]
+    replicated arrays so the state stays one uniformly-sharded pytree.
+    The superstep sequence is identical to `make_distributed_runner`'s
+    monolithic while_loop, so resume is bit-identical."""
+    local_step = make_distributed_step(program, v_pp, num_parts, schedule,
+                                       kernel_on=kernel_on,
+                                       frontier=frontier,
+                                       prefetch_windows=prefetch_windows,
+                                       exchange=exchange, overlap=overlap,
+                                       guards=guards, faults=faults)
+    carry_err = local_step.carries_wire_err
+    alarmed = local_step.carries_alarms
+    vspec = P(AXIS)
+    espec = P(AXIS)
+
+    def local_init(vprops, active, out_degree, valid, vids):
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        vprops, active, out_degree, valid, vids = map(
+            sq, (vprops, active, out_degree, valid, vids))
+        empty = jax.tree.map(jnp.asarray, program.empty_message())
+        vprops = jax.vmap(program.init_vertex)(vids, out_degree, vprops)
+        state = {"it": jnp.int32(1),
+                 "vprops": vprops,
+                 "active": active & valid,
+                 "inbox": records.tree_tile(empty, v_pp),
+                 "has_msg": jnp.zeros((v_pp,), bool),
+                 "n": jnp.int32(1)}  # bootstrap count (iteration 1 runs)
+        if carry_err:
+            state["werr"] = wire.init_error_state(
+                jax.tree.map(lambda a: jnp.zeros(
+                    (num_parts, v_pp) + jnp.shape(a), jnp.asarray(a).dtype),
+                    empty)
+                if schedule == "push" else vprops)
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return ex(state)
+
+    def local_chunk(state, valid, edges, limit, fault_on):
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        state, valid, edges, limit, fault_on = map(
+            sq, (state, valid, edges, limit, fault_on))
+
+        def cond(s):
+            return ((s["it"] <= limit) & (s["n"] > 0)
+                    & (jnp.sum(s["alarms"]) == 0))
+
+        def body(s):
+            args = (s["it"], s["vprops"], s["active"] & valid, s["inbox"],
+                    s["has_msg"], edges)
+            out = local_step(*args,
+                             wire_err=(s["werr"] if carry_err else None),
+                             fault_on=fault_on)
+            vprops, active, inbox, has_msg = out[:4]
+            rest = list(out[4:])
+            ns = dict(s, it=s["it"] + 1, vprops=vprops,
+                      active=active & valid, inbox=inbox, has_msg=has_msg,
+                      n=out[-1])
+            if carry_err:
+                ns["werr"] = rest.pop(0)
+            if alarmed:
+                ns["alarms"] = s["alarms"] + rest.pop(0)
+            return ns
+
+        s0 = dict(state,
+                  alarms=jnp.zeros((faults_mod.NUM_ALARMS,), jnp.int32))
+        out = jax.lax.while_loop(cond, body, s0)
+        alarms = out.pop("alarms")
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return ex(out), alarms[None]
+
+    from repro.distributed.sharding import shard_map
+    init_m = shard_map(local_init, mesh=mesh,
+                       in_specs=(vspec, vspec, vspec, vspec, vspec),
+                       out_specs=vspec, check_vma=False)
+    chunk_m = shard_map(local_chunk, mesh=mesh,
+                        in_specs=(vspec, vspec, espec, vspec, vspec),
+                        out_specs=(vspec, vspec), check_vma=False)
+    return jax.jit(init_m), jax.jit(chunk_m)
 
 
 # ---------------------------------------------------------------------------
@@ -901,7 +1069,12 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
                            prefetch: str = "auto",
                            batch: int | None = None,
                            exchange: str = "exact",
-                           overlap: bool = True):
+                           overlap: bool = True,
+                           checkpoint_dir: str | None = None,
+                           checkpoint_every: int = 0,
+                           resume: str = "auto",
+                           guards: str | bool = "off",
+                           faults=()):
     """Distributed Algorithm-1 entry point (one part per mesh device).
 
     prefetch ("auto"|"on"|"off"): per-bucket scalar-prefetch window
@@ -932,6 +1105,19 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     Bit-identical on/off. `info["bytes_exchanged"]` reports the modeled
     per-superstep wire bytes per device (exact vs codec-compressed vs
     dense) for benches and CI gates.
+
+    Resilience (docs/robustness.md): `checkpoint_dir`/`checkpoint_every`
+    switch to the chunked runner and snapshot the complete loop carry —
+    including batched `_lane_act` masks and q8ef EF residuals — at every
+    chunk boundary, stored in the ORIGINAL vertex-id space so
+    `resume="auto"` restores elastically onto a different partition
+    count (the push+q8ef residual is partition-structured and pins P via
+    its fingerprint). `guards="on"` arms wire checksums on every delta
+    payload plus the NaN/monotonicity watchdogs; a trip rolls back to
+    the last committed chunk and replays, and a deterministic re-trip on
+    a lossy codec degrades `exchange` to "exact"
+    (`info["degraded_exchange"]`) instead of failing. `faults=` injects
+    seeded deterministic faults (repro.distributed.faults) for tests.
     """
     program = vcprog.as_batched(program, batch)
     if mesh is None:
@@ -969,11 +1155,10 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         if not any(pf_windows):
             pf_blocks = pf_windows = None  # every bucket resident
 
-    runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
-                                     schedule, kernel_on=kernel_on,
-                                     frontier=frontier,
-                                     prefetch_windows=pf_windows,
-                                     exchange=exchange, overlap=overlap)
+    guards_on = faults_mod.resolve_guards_mode(guards)
+    fault_specs = faults_mod.resolve_faults(faults)
+    resilient = (bool(checkpoint_dir) or int(checkpoint_every or 0) > 0
+                 or guards_on or bool(fault_specs))
 
     # initial vertex props: the input props (init_vertex runs on device)
     vprops0 = jax.tree.map(jnp.asarray, sg["vprops_in"])
@@ -992,10 +1177,28 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     }
     if pf_blocks is not None:
         edges["bucket_pf_blocks"] = jnp.asarray(pf_blocks)
-    vprops, active = runner(vprops0, active0,
-                            jnp.asarray(sg["out_degree"]),
-                            jnp.asarray(sg["vertex_valid"]),
-                            jnp.asarray(sg["vertex_ids"]), edges)
+    out_deg_j = jnp.asarray(sg["out_degree"])
+    valid_j = jnp.asarray(sg["vertex_valid"])
+    vids_j = jnp.asarray(sg["vertex_ids"])
+
+    rinfo = {}
+    resumed = None
+    if not resilient:
+        runner = make_distributed_runner(program, v_pp, Pn, mesh, max_iter,
+                                         schedule, kernel_on=kernel_on,
+                                         frontier=frontier,
+                                         prefetch_windows=pf_windows,
+                                         exchange=exchange, overlap=overlap)
+        vprops, active, its, _ = runner(vprops0, active0, out_deg_j,
+                                        valid_j, vids_j, edges)
+        iterations = int(np.asarray(its)[0]) - 1
+    else:
+        vprops, active, iterations, rinfo, resumed = _run_resilient(
+            program, graph, sg, edges, mesh, int(max_iter), schedule,
+            kernel_on, frontier, pf_windows, exchange, overlap, guards_on,
+            fault_specs, checkpoint_dir, int(checkpoint_every or 0),
+            resume, vprops0, active0, out_deg_j, valid_j, vids_j)
+
     V = sg["num_vertices"]
     host = jax.tree.map(
         lambda a: np.asarray(a).reshape((Pn * v_pp,) + a.shape[2:])[:V],
@@ -1003,16 +1206,158 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
     if sg["inv_perm"] is not None:
         # un-permute: row old_id of the result lives at new_id=inv_perm[old]
         host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
+    active_end = int(np.sum(np.asarray(active)))
     info = {"schedule": schedule, "num_parts": Pn,
             "kernel_on": kernel_on, "reorder": reorder,
             "frontier": frontier, "prefetch": prefetch,
             "prefetch_windows": pf_windows,
-            "exchange": exchange, "overlap": overlap,
+            "exchange": rinfo.get("degraded_exchange") or exchange,
+            "overlap": overlap,
+            "iterations": iterations,
+            "active_at_end": active_end,
+            "converged": bool(active_end == 0),
             "bytes_exchanged": _exchange_bytes_info(
                 program, sg, schedule, frontier, exchange)}
+    if resilient:
+        info.update(rinfo, resumed_from=resumed)
+    if not info["converged"]:
+        warnings.warn(
+            f"run_vcprog_distributed hit max_iter={int(max_iter)} with "
+            f"{active_end} vertices still active — the result is "
+            "truncated, not converged (info['converged'] is False)",
+            faults_mod.NonConvergenceWarning, stacklevel=2)
     if isinstance(program, vcprog.BatchedProgram):
         # un-wrap the lane axis: the user sees the base record with [V, Q]
         # leaves (the `_lane_act` bookkeeping column stays internal)
         host = host["p"]
         info["batch"] = program.num_lanes
     return host, info
+
+
+def _run_resilient(program, graph, sg, edges, mesh, max_iter, schedule,
+                   kernel_on, frontier, pf_windows, exchange, overlap,
+                   guards_on, fault_specs, checkpoint_dir, checkpoint_every,
+                   resume, vprops0, active0, out_deg_j, valid_j, vids_j):
+    """Chunked execution + checkpoint/resume + guard ladder for the
+    distributed engine. Returns (vprops [P, v_pp, ...], active, final
+    iteration count, resilience info, resumed_from step)."""
+    from repro import checkpoint as ckpt
+    Pn, v_pp = sg["num_parts"], sg["v_per_part"]
+    codec = wire.get_codec(exchange)
+    carry_err = codec.error_feedback and frontier != "dense"
+
+    def build(exchange_, faults_):
+        return make_distributed_chunk_runner(
+            program, v_pp, Pn, mesh, schedule, kernel_on=kernel_on,
+            frontier=frontier, prefetch_windows=pf_windows,
+            exchange=exchange_, overlap=overlap, guards=guards_on,
+            faults=faults_)
+
+    init_j, chunk_j = build(exchange, fault_specs)
+    state = init_j(vprops0, active0, out_deg_j, valid_j, vids_j)
+
+    # ---- portable checkpoint form: ORIGINAL vertex-id space ------------
+    # [P, v_pp, ...] sharded state globalizes to [V, ...] rows keyed by
+    # original ids, so a snapshot restores onto a different partition
+    # count or reordering (elastic resume). Pad rows restore as zeros —
+    # they are valid-masked inactive and never read by any combine path.
+    inv, perm = sg["inv_perm"], sg["vertex_perm"]
+    V = sg["num_vertices"]
+
+    def to_global(a):
+        a = np.asarray(a)
+        g = a.reshape((Pn * v_pp,) + a.shape[2:])[:V]
+        return g[inv] if inv is not None else g
+
+    def to_parts(a):
+        a = np.asarray(a)
+        b = a[perm] if perm is not None else a
+        out = np.zeros((Pn * v_pp,) + b.shape[1:], b.dtype)
+        out[:V] = b
+        return out.reshape((Pn, v_pp) + b.shape[1:])
+
+    def to_portable(st):
+        port = {"it": int(np.asarray(st["it"])[0]),
+                "n": int(np.asarray(st["n"])[0])}
+        for k in ("vprops", "active", "inbox", "has_msg"):
+            port[k] = jax.tree.map(to_global, st[k])
+        if "werr" in st:
+            # push's EF residual is per-(dst-part, local-row) message
+            # state — partition-structured, stored raw (the fingerprint
+            # pins the layout); allgather/ring residuals are per-vertex
+            # property state and globalize like vprops
+            port["werr"] = (jax.tree.map(np.asarray, st["werr"])
+                            if schedule == "push"
+                            else jax.tree.map(to_global, st["werr"]))
+        return port
+
+    def from_portable(port):
+        st = {"it": jnp.full((Pn,), int(port["it"]), jnp.int32),
+              "n": jnp.full((Pn,), int(port["n"]), jnp.int32)}
+        for k in ("vprops", "active", "inbox", "has_msg"):
+            st[k] = jax.tree.map(lambda a: jnp.asarray(to_parts(a)),
+                                 port[k])
+        if "werr" in port:
+            st["werr"] = (jax.tree.map(jnp.asarray, port["werr"])
+                          if schedule == "push"
+                          else jax.tree.map(
+                              lambda a: jnp.asarray(to_parts(a)),
+                              port["werr"]))
+        return st
+
+    mgr = save_cb = None
+    resumed = None
+    if checkpoint_dir:
+        # max_iter deliberately NOT fingerprinted: a truncated run may
+        # resume with a higher budget. num_parts/reorder are NOT either —
+        # the portable form is partition-independent (elastic resume) —
+        # EXCEPT when the push schedule carries a partition-structured
+        # EF residual, which pins both via `ef_layout`.
+        fp = {"graph": ckpt.graph_signature(graph),
+              "engine": "distributed", "schedule": schedule,
+              "program": ckpt.program_signature(program),
+              "frontier": frontier, "exchange": exchange,
+              "wire_state": bool(carry_err), "format": 1}
+        if carry_err and schedule == "push":
+            fp["ef_layout"] = f"push:{Pn}:{sg['v_per_part']}"
+        mgr = ckpt.CheckpointManager(checkpoint_dir)
+        step0 = ckpt.resume_step(mgr, fp, resume)
+        if step0 is not None:
+            state = from_portable(mgr.restore(to_portable(state), step0))
+            resumed = step0
+
+        def save_cb(st, done):
+            mgr.save(done, to_portable(st), metadata={"fingerprint": fp})
+
+    def make_chunk(cj):
+        def chunk(st, limit, f_on):
+            out, alarms = cj(st, valid_j, edges,
+                             jnp.full((Pn,), limit, jnp.int32),
+                             jnp.full((Pn,), f_on, jnp.int32))
+            return out, np.asarray(alarms)[0]
+        return chunk
+
+    def probe(st):
+        return (int(np.asarray(st["it"])[0]),
+                int(np.asarray(st["n"])[0]) > 0)
+
+    degrade_cb = None
+    if not codec.lossless:
+        def degrade_cb(st):
+            # the degradation rung: deterministic guard trips on a lossy
+            # codec fall back to the exact wire — drop the EF residual,
+            # drop lossy_only fault specs, keep everything else of the
+            # committed state
+            _, cj2 = build("exact", faults_mod.drop_lossy_only(fault_specs))
+            st2 = {k: v for k, v in st.items() if k != "werr"}
+            return make_chunk(cj2), st2, "exact"
+
+    state, rinfo = faults_mod.drive_chunks(
+        make_chunk(chunk_j), state, max_iter=max_iter,
+        every=checkpoint_every, probe=probe, save=save_cb,
+        flush=(mgr.wait if mgr is not None else None),
+        guards_on=guards_on, faults=fault_specs, degrade=degrade_cb)
+    if mgr is not None:
+        mgr.wait()
+    iterations = int(np.asarray(state["it"])[0]) - 1
+    return state["vprops"], state["active"], iterations, rinfo, resumed

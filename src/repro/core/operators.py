@@ -89,12 +89,13 @@ def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
              engine: str = "pushpull", kernel: str = "auto",
              use_kernel: bool | None = None,
              reorder: str = "none", frontier: str = "dense",
-             prefetch: str = "auto", exchange: str = "exact"):
+             prefetch: str = "auto", exchange: str = "exact", **resilience):
     prog = PageRankProgram(graph.num_vertices, num_iters, damping)
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     return np.asarray(vprops["rank"]), info
 
 
@@ -104,6 +105,7 @@ def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
 
 class SSSPProgram(vcprog.VCProgram):
     monoid = "min"
+    monotonic = "decreasing"  # relaxations only ever shrink distances
 
     def __init__(self, root: int):
         self.root = root
@@ -136,7 +138,7 @@ def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
          use_kernel: bool | None = None,
          reorder: str = "none", frontier: str = "dense",
          prefetch: str = "auto", sources=None,
-         exchange: str = "exact"):
+         exchange: str = "exact", **resilience):
     """Bellman-Ford distances. `sources=[r0, r1, ...]` runs Q=len(sources)
     queries as lanes of ONE batched program — one O(E) plane pass per
     superstep total — and returns a [Q, V] distance matrix (row i = the
@@ -147,14 +149,16 @@ def sssp(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
+                                  frontier=frontier, prefetch=prefetch,
+                                  exchange=exchange, **resilience)
         dist = np.asarray(vprops["distance"]).T  # [V, Q] -> [Q, V]
         return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
     prog = SSSPProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     dist = np.asarray(vprops["distance"])
     return np.where(dist >= float(INF) * 0.5, np.inf, dist), info
 
@@ -163,13 +167,15 @@ def landmark_distances(graph: PropertyGraph, landmarks, max_iter: int = 100,
                        engine: str = "pushpull", kernel: str = "auto",
                        use_kernel: bool | None = None,
                        reorder: str = "none", frontier: str = "dense",
-                       prefetch: str = "auto", exchange: str = "exact"):
+                       prefetch: str = "auto", exchange: str = "exact",
+                       **resilience):
     """[Q, V] shortest-path distances from Q landmark vertices, computed
     by ONE batched SSSP run (the landmark table of embedding/oracle
     methods — the serving shape ROADMAP item 1 targets)."""
     return sssp(graph, max_iter=max_iter, engine=engine, kernel=kernel,
                 use_kernel=use_kernel, reorder=reorder, frontier=frontier,
-                prefetch=prefetch, sources=landmarks, exchange=exchange)
+                prefetch=prefetch, sources=landmarks, exchange=exchange,
+                **resilience)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +184,7 @@ def landmark_distances(graph: PropertyGraph, landmarks, max_iter: int = 100,
 
 class CCProgram(vcprog.VCProgram):
     monoid = "min"
+    monotonic = "decreasing"  # labels only ever shrink toward the min id
 
     def init_vertex(self, vid, out_degree, vprop):
         return {"label": vid.astype(jnp.int32)}
@@ -202,12 +209,14 @@ def connected_components(graph: PropertyGraph, max_iter: int = 200,
                          engine: str = "pushpull", kernel: str = "auto",
                          use_kernel: bool | None = None,
                          reorder: str = "none", frontier: str = "dense",
-                         prefetch: str = "auto", exchange: str = "exact"):
+                         prefetch: str = "auto", exchange: str = "exact",
+                         **resilience):
     prog = CCProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     return np.asarray(vprops["label"]), info
 
 
@@ -217,6 +226,7 @@ def connected_components(graph: PropertyGraph, max_iter: int = 200,
 
 class BFSProgram(vcprog.VCProgram):
     monoid = "min"
+    monotonic = "decreasing"  # depths only ever shrink from BIG
     BIG = 2**31 - 1  # python int (no backend init at import)
 
     def __init__(self, root: int):
@@ -248,7 +258,7 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         use_kernel: bool | None = None,
         reorder: str = "none", frontier: str = "dense",
         prefetch: str = "auto", sources=None,
-         exchange: str = "exact"):
+        exchange: str = "exact", **resilience):
     """BFS depths. `sources=[r0, r1, ...]` batches Q root queries into
     one lane-packed run and returns a [Q, V] depth matrix (row i
     bit-identical to `bfs(root=sources[i])`; unreachable = -1)."""
@@ -258,14 +268,16 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
         vprops, info = run_vcprog(progs, graph, max_iter=max_iter,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
+                                  frontier=frontier, prefetch=prefetch,
+                                  exchange=exchange, **resilience)
         depth = np.asarray(vprops["depth"]).T.astype(np.int64)
         return np.where(depth >= 2**31 - 1, -1, depth), info
     prog = BFSProgram(_validate_root(graph, root))
     vprops, info = run_vcprog(prog, graph, max_iter=max_iter, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     depth = np.asarray(vprops["depth"]).astype(np.int64)
     return np.where(depth >= 2**31 - 1, -1, depth), info
 
@@ -302,7 +314,7 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
                           use_kernel: bool | None = None,
                           reorder: str = "none", frontier: str = "dense",
                           prefetch: str = "auto", sources=None,
-         exchange: str = "exact"):
+                          exchange: str = "exact", **resilience):
     """PPR mass from one source, or — with `sources=[s0, s1, ...]` — a
     [Q, V] matrix of Q personalization vectors from ONE batched run (the
     recommendation-serving shape: one plane pass feeds every user)."""
@@ -313,7 +325,8 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
         vprops, info = run_vcprog(progs, graph, max_iter=num_iters,
                                   engine=engine, kernel=kernel,
                                   use_kernel=use_kernel, reorder=reorder,
-                                  frontier=frontier, prefetch=prefetch, exchange=exchange)
+                                  frontier=frontier, prefetch=prefetch,
+                                  exchange=exchange, **resilience)
         return np.asarray(vprops["rank"]).T, info  # [V, Q] -> [Q, V]
     if source is None:
         raise ValueError("personalized_pagerank needs source= or sources=")
@@ -323,7 +336,8 @@ def personalized_pagerank(graph: PropertyGraph, source: int | None = None,
     vprops, info = run_vcprog(prog, graph, max_iter=num_iters, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     return np.asarray(vprops["rank"]), info
 
 
@@ -356,11 +370,12 @@ class DegreeProgram(vcprog.VCProgram):
 def degrees(graph: PropertyGraph, engine: str = "pushpull",
             kernel: str = "auto", use_kernel: bool | None = None,
             reorder: str = "none", frontier: str = "dense",
-            prefetch: str = "auto", exchange: str = "exact"):
+            prefetch: str = "auto", exchange: str = "exact", **resilience):
     prog = DegreeProgram()
     vprops, info = run_vcprog(prog, graph, max_iter=2, engine=engine,
                               kernel=kernel, use_kernel=use_kernel,
                               reorder=reorder, frontier=frontier,
-                              prefetch=prefetch, exchange=exchange)
+                              prefetch=prefetch, exchange=exchange,
+                              **resilience)
     return (np.asarray(vprops["out_degree"]),
             np.asarray(vprops["in_degree"])), info

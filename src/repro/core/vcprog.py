@@ -176,6 +176,14 @@ class VCProgram:
     #: engine-independent.
     monoid = "general"
 
+    #: optional monotonicity contract of the vertex state for the
+    #: integrity guards (`distributed/faults.py`): "decreasing" means no
+    #: vertex-state element may grow across a superstep (min-monoid
+    #: relaxations — SSSP/BFS/CC), "increasing" the mirror, None (default)
+    #: disables the monotonicity watchdog. Advisory: engines never rely
+    #: on it for correctness, only `guards="on"` reads it.
+    monotonic = None
+
     # -- Phase 0 (before iterations) --------------------------------------
     def init_vertex(self, vid, out_degree, vprop) -> Record:
         """Generate the initial property for each vertex."""
@@ -284,6 +292,12 @@ class BatchedProgram(VCProgram):
     @property
     def num_lanes(self) -> int:
         return self._q
+
+    @property
+    def monotonic(self):
+        # the guards watch the lane-stacked base record (`vprops["p"]`)
+        # only, so the base class's contract carries over unchanged
+        return getattr(self._cls, "monotonic", None)
 
     def _lane_program(self, values):
         """A base-class clone whose per-lane attributes are `values` (one

@@ -1,0 +1,369 @@
+"""Resilience layer: fault injection, integrity guards, rollback driver.
+
+One module owns the three host/device seams of fault-tolerant superstep
+execution (ISSUE 8; Pregel's checkpoint-at-superstep-boundary model):
+
+  * a seeded, **deterministic fault-injection registry** (:class:`Fault`)
+    — bit flips and dropped deltas on the encoded wire payloads, NaN /
+    monotonicity poison on the vertex state, and a kill-the-process fault
+    for the subprocess resume tests. Traced faults are baked into the
+    compiled step gated by a runtime ``fault_on`` scalar, so arming and
+    disarming them costs no retrace;
+  * the **integrity guards** (`guards="on"`): per-payload checksums on
+    every delta exchange (repro.distributed.wire), a NaN/Inf watchdog on
+    float vertex-state leaves, and a monotonicity watchdog for programs
+    that declare a :attr:`~repro.core.vcprog.VCProgram.monotonic`
+    contract (SSSP distances never increase). Guards report into a
+    ``[NUM_ALARMS]`` int32 alarm vector carried by the superstep loop —
+    a nonzero alarm exits the chunk without committing state;
+  * the **host-level round driver** (:func:`drive_chunks`) that runs the
+    compiled chunk function ``checkpoint_every`` supersteps at a time and
+    applies the recovery ladder to a tripped guard: roll back to the
+    chunk-entry state (the last committed snapshot) and replay once; on a
+    deterministic re-trip, degrade a lossy wire codec to ``"exact"``;
+    otherwise raise :class:`GuardError` — never a silent wrong answer.
+
+Engines plug in via `core/engines/common.py` (single-device chunked
+runner) and `core/engines/distributed.py` (shard_map chunked runner).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# alarm vector layout ([NUM_ALARMS] int32, summed across devices)
+ALARM_CRC, ALARM_NAN, ALARM_MONO = 0, 1, 2
+ALARM_NAMES = ("checksum", "nan", "mono")
+NUM_ALARMS = 3
+
+WIRE_KINDS = ("flip_bits", "drop_delta")     # corrupt an encoded payload
+VPROP_KINDS = ("nan_poison", "mono_poison")  # corrupt the vertex state
+HOST_KINDS = ("kill_part",)                  # os._exit after a checkpoint
+KINDS = WIRE_KINDS + VPROP_KINDS + HOST_KINDS
+
+#: exit code of a `kill_part` fault — the subprocess resume tests assert
+#: the first run died *this* way before resuming from its checkpoint
+KILL_EXIT_CODE = 17
+
+
+class GuardError(RuntimeError):
+    """An integrity guard tripped again on replay (deterministic fault)
+    and no degradation rung was available — the run refuses to return a
+    potentially corrupt result."""
+
+
+class NonConvergenceWarning(UserWarning):
+    """The Algorithm-1 loop hit max_iterations with a non-empty frontier;
+    the returned result is truncated (``info["converged"] is False``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One seeded, deterministic injected fault.
+
+    kind       one of :data:`KINDS`. Wire kinds corrupt the encoded delta
+               payload a part sends (after the checksum is attached, so
+               the receiver-side verify sees what a flaky link delivers);
+               vprop kinds corrupt the post-compute vertex state; kill_part
+               calls ``os._exit(KILL_EXIT_CODE)`` from the host driver
+               after the checkpoint covering `superstep` is flushed.
+    superstep  the 1-based iteration the fault fires on.
+    part       the injecting part (device) for distributed runs.
+    seed       derives which leaf / row / bit is corrupted (deterministic).
+    transient  a transient fault fires once: after the first guard trip
+               the driver replays with injection disarmed (the soft-error
+               model). ``transient=False`` keeps firing on replay — the
+               deterministic-corruption model that exercises the
+               degrade/raise rungs of the ladder.
+    lossy_only the fault only exists while a lossy wire codec is active —
+               it models q8ef quantization drift, so degrading the
+               exchange to "exact" removes it (see `drop_lossy_only`).
+    """
+
+    kind: str
+    superstep: int
+    part: int = 0
+    seed: int = 0
+    transient: bool = True
+    lossy_only: bool = False
+
+
+def resolve_faults(faults) -> Tuple[Fault, ...]:
+    """Validate a faults= argument into a canonical tuple (hashable, so
+    it can key the lru-cached chunk runners)."""
+    if not faults:
+        return ()
+    out = []
+    for f in faults:
+        if not isinstance(f, Fault):
+            raise TypeError(f"faults= entries must be Fault, got {f!r}")
+        if f.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {f.kind!r}; one of {KINDS}")
+        out.append(f)
+    return tuple(out)
+
+
+def wire_faults(specs) -> Tuple[Fault, ...]:
+    return tuple(s for s in specs if s.kind in WIRE_KINDS)
+
+
+def vprop_faults(specs) -> Tuple[Fault, ...]:
+    return tuple(s for s in specs if s.kind in VPROP_KINDS)
+
+
+def kill_faults(specs) -> Tuple[Fault, ...]:
+    return tuple(s for s in specs if s.kind in HOST_KINDS)
+
+
+def traced_faults(specs) -> Tuple[Fault, ...]:
+    return tuple(s for s in specs if s.kind in WIRE_KINDS + VPROP_KINDS)
+
+
+def drop_lossy_only(specs) -> Tuple[Fault, ...]:
+    """The fault set after degrading to the exact codec: lossy_only
+    faults model codec drift and vanish with the codec."""
+    return tuple(s for s in specs if not s.lossy_only)
+
+
+def resolve_guards_mode(guards) -> bool:
+    """Resolve the `guards=` knob ("off"|"on", bool, None) to a bool."""
+    if guards in (None, False, "off"):
+        return False
+    if guards in (True, "on"):
+        return True
+    raise ValueError(f'guards must be "on"/"off" (or bool), got {guards!r}')
+
+
+# ---------------------------------------------------------------------------
+# Traced injection (baked into the compiled step, gated by `fault_on`)
+# ---------------------------------------------------------------------------
+
+def _base_props(program, vprops):
+    """The user-visible record of a vertex-state tree (unwraps the
+    BatchedProgram envelope so lane bookkeeping is never poisoned or
+    guarded — `_lane_act` toggling is not a monotonicity violation)."""
+    from repro.core import vcprog
+    return vprops["p"] if isinstance(program, vcprog.BatchedProgram) \
+        else vprops
+
+
+def _hit(spec: Fault, it, fault_on, my=None):
+    h = (jnp.asarray(it) == spec.superstep) & (jnp.asarray(fault_on) > 0)
+    if my is not None:
+        h = h & (jnp.asarray(my) == spec.part)
+    return h
+
+
+def _flip_element(leaf, seed: int, hit):
+    """XOR one seeded bit of one seeded element when `hit` (else
+    identity). Works at every wire dtype (packed uint indices, int8 q
+    grids, fp16/f32 rows, bool flags, uint32 checksums)."""
+    x = jnp.asarray(leaf)
+    flat = x.reshape(-1)
+    if flat.size == 0:
+        return leaf
+    pos = seed % flat.size
+    if x.dtype == jnp.bool_:
+        cur = flat[pos]
+        return flat.at[pos].set(jnp.where(hit, ~cur, cur)).reshape(x.shape)
+    widths = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+    unsigned = widths[x.dtype.itemsize]
+    reinterpret = (jnp.issubdtype(x.dtype, jnp.floating)
+                   or jnp.issubdtype(x.dtype, jnp.signedinteger))
+    u = jax.lax.bitcast_convert_type(flat, unsigned) if reinterpret else flat
+    bit = (seed // 101) % (x.dtype.itemsize * 8)
+    mask = np.array(1, np.dtype(u.dtype)) << np.array(bit, np.dtype(u.dtype))
+    cur = u[pos]
+    u = u.at[pos].set(jnp.where(hit, cur ^ mask, cur))
+    out = jax.lax.bitcast_convert_type(u, x.dtype) if reinterpret \
+        else u.astype(x.dtype)
+    return out.reshape(x.shape)
+
+
+def corrupt_wire(payload, it, fault_on, specs: Sequence[Fault], my=None):
+    """Apply the wire-kind faults to one ENCODED payload (or a stacked
+    payload tree) on the sending side. Runs after `attach_checksum`, so
+    an attached crc survives a drop_delta (zeroed body, stale crc) and a
+    flip_bits lands on the body — exactly what the receiver-side
+    `checksum_ok` must catch."""
+    from repro.distributed import wire as _wire
+    specs = [s for s in specs if s.kind in WIRE_KINDS]
+    if not specs or not isinstance(payload, dict):
+        return payload
+    for s in specs:
+        h = _hit(s, it, fault_on, my)
+        body = {k: v for k, v in payload.items() if k != _wire._CRC_KEY}
+        if s.kind == "drop_delta":
+            body = jax.tree.map(
+                lambda a: jnp.where(h, jnp.zeros_like(a), a), body)
+        else:  # flip_bits
+            leaves, tdef = jax.tree.flatten(body)
+            i = s.seed % len(leaves)
+            leaves[i] = _flip_element(leaves[i], s.seed, h)
+            body = tdef.unflatten(leaves)
+        payload = {**payload, **body}
+    return payload
+
+
+def poison_vprops(vprops, program, it, fault_on, specs: Sequence[Fault],
+                  my=None):
+    """Apply the vertex-state faults after the compute phase.
+
+    nan_poison sets one seeded row of one seeded float leaf to NaN (the
+    NaN/Inf watchdog's prey). mono_poison bumps every comfortably-finite
+    element of one leaf *against* the program's declared monotone
+    direction (+1 under "decreasing"), leaving sentinel values (practical
+    +inf, BFS BIG) untouched — a guaranteed, detectable violation
+    whenever any real value exists."""
+    specs = [s for s in specs if s.kind in VPROP_KINDS]
+    if not specs:
+        return vprops
+    from repro.core import vcprog
+    base = _base_props(program, vprops)
+    leaves, tdef = jax.tree.flatten(base)
+    float_ix = [i for i, l in enumerate(leaves)
+                if jnp.issubdtype(l.dtype, jnp.floating)]
+    for s in specs:
+        h = _hit(s, it, fault_on, my)
+        if s.kind == "nan_poison":
+            if not float_ix:
+                continue
+            i = float_ix[s.seed % len(float_ix)]
+            l = leaves[i]
+            row = s.seed % max(int(l.shape[0]), 1)
+            leaves[i] = jnp.where(h, l.at[row].set(jnp.nan), l)
+        else:  # mono_poison
+            ix = float_ix or list(range(len(leaves)))
+            i = ix[s.seed % len(ix)]
+            l = leaves[i]
+            dirn = getattr(program, "monotonic", None) or "decreasing"
+            step = 1 if dirn == "decreasing" else -1
+            safe = jnp.abs(l.astype(jnp.float32)) < jnp.float32(2 ** 30)
+            bumped = (l + jnp.asarray(step, l.dtype)).astype(l.dtype)
+            leaves[i] = jnp.where(h, jnp.where(safe, bumped, l), l)
+    base = tdef.unflatten(leaves)
+    if isinstance(program, vcprog.BatchedProgram):
+        return {**vprops, "p": base}
+    return base
+
+
+# ---------------------------------------------------------------------------
+# Guards (traced watchdogs -> alarm vector)
+# ---------------------------------------------------------------------------
+
+def guard_alarms(program, old_vprops, new_vprops) -> jnp.ndarray:
+    """[NUM_ALARMS] int32 alarm counts of one superstep's vertex-state
+    transition: the NaN/Inf watchdog over float leaves and the
+    monotonicity watchdog for programs declaring `monotonic` ("decreasing"
+    means no element may grow — SSSP/BFS/CC relaxations). The crc slot is
+    owned by the wire layer (checksum verification at the exchange).
+    NaNs never false-trip the mono guard (comparisons are False)."""
+    old = _base_props(program, old_vprops)
+    new = _base_props(program, new_vprops)
+    nan = jnp.int32(0)
+    for leaf in jax.tree.leaves(new):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            nan = nan + jnp.sum((~jnp.isfinite(leaf)).astype(jnp.int32))
+    mono = jnp.int32(0)
+    dirn = getattr(program, "monotonic", None)
+    if dirn:
+        for o, n in zip(jax.tree.leaves(old), jax.tree.leaves(new)):
+            viol = (n > o) if dirn == "decreasing" else (n < o)
+            mono = mono + jnp.sum(viol.astype(jnp.int32))
+    return jnp.stack([jnp.int32(0), nan, mono])
+
+
+# ---------------------------------------------------------------------------
+# Host driver: rounds of supersteps + the recovery ladder
+# ---------------------------------------------------------------------------
+
+def drive_chunks(chunk: Callable, state, *, max_iter: int, every: int,
+                 probe: Callable, save: Optional[Callable] = None,
+                 flush: Optional[Callable] = None, guards_on: bool = False,
+                 faults: Sequence[Fault] = (),
+                 degrade: Optional[Callable] = None):
+    """Run `chunk(state, limit, fault_on) -> (state, alarms)` in
+    host-level rounds of `every` supersteps until convergence or
+    `max_iter`, committing (and optionally checkpointing) at every chunk
+    boundary.
+
+    probe(state) -> (next_superstep, live) reads the loop carry;
+    save(state, completed_superstep) snapshots a committed boundary;
+    flush() blocks until the last snapshot is durable (called before a
+    kill_part fault exits).
+
+    Recovery ladder for a nonzero alarm vector (jax arrays are immutable,
+    so the chunk-entry `state` IS the last committed snapshot — rollback
+    is free):
+
+      1. roll back + replay the chunk once. A transient fault set is
+         disarmed first (it already fired; a soft error would not recur),
+         so the replay is clean and the final result is bit-identical to
+         an unfaulted run.
+      2. a re-trip is deterministic. If a `degrade` rung was provided
+         (lossy wire codec), switch to it — degrade(state) returns
+         (new_chunk, new_state, mode) running the exact codec with
+         lossy_only faults dropped — and continue.
+      3. otherwise raise :class:`GuardError`: never return silently
+         wrong state.
+
+    Returns (state, info) with guard_trips / rollbacks / replays /
+    degraded_exchange / checkpoint_saves counters.
+    """
+    info = {"guard_trips": {n: 0 for n in ALARM_NAMES},
+            "rollbacks": 0, "replays": 0,
+            "degraded_exchange": None, "checkpoint_saves": 0}
+    specs = resolve_faults(faults)
+    traced = traced_faults(specs)
+    kills = kill_faults(specs)
+    armed = bool(traced)
+    all_transient = bool(traced) and all(s.transient for s in traced)
+    every = int(every) if every and int(every) > 0 else int(max_iter)
+    attempt = 0
+    while True:
+        it, live = probe(state)
+        if it > int(max_iter) or not live:
+            break
+        limit = min(it + every - 1, int(max_iter))
+        new_state, alarms = chunk(state, limit, 1 if armed else 0)
+        alarms = np.asarray(jax.device_get(alarms)).astype(
+            np.int64).reshape(-1)[:NUM_ALARMS]
+        if int(alarms.sum()) > 0:
+            for name, c in zip(ALARM_NAMES, alarms.tolist()):
+                info["guard_trips"][name] += int(c)
+            info["rollbacks"] += 1
+            if attempt == 0:
+                if all_transient:
+                    armed = False  # the transient fault has fired
+                attempt = 1
+                info["replays"] += 1
+                continue
+            if degrade is not None:
+                chunk, state, mode = degrade(state)
+                info["degraded_exchange"] = mode
+                degrade = None  # one rung only
+                attempt = 0
+                continue
+            raise GuardError(
+                f"integrity guard tripped again on replay of supersteps "
+                f"{it}..{limit} "
+                f"(alarms: {dict(zip(ALARM_NAMES, alarms.tolist()))}); "
+                "state rolled back to the last committed snapshot — "
+                "refusing to return a potentially corrupt result")
+        state = new_state
+        attempt = 0
+        done, live = probe(state)
+        if save is not None:
+            save(state, done - 1)
+            info["checkpoint_saves"] += 1
+        for s in kills:
+            if it <= s.superstep <= done - 1:
+                if flush is not None:
+                    flush()  # the covering snapshot must be durable
+                os._exit(KILL_EXIT_CODE)
+    return state, info

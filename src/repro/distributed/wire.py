@@ -241,6 +241,66 @@ def decode_delta(codec, wire, template, v_pp: int):
 
 
 # ---------------------------------------------------------------------------
+# Wire integrity: per-payload checksums (the `guards=` arm)
+# ---------------------------------------------------------------------------
+# A checksum is computed over the ENCODED payload on the sending side and
+# verified after the collective on the receiving side, so any in-flight
+# corruption (bit flips, dropped/zeroed deltas) of any codec's wire form
+# is detected before the decoded rows can reach a monoid fold. The word
+# fold is position-weighted (a Knuth-hash ramp), so swapped or zeroed
+# rows change the sum even when the plain element sum would not.
+
+_CRC_KEY = "crc"
+_CRC_MUL = np.uint32(2654435761)  # Knuth multiplicative hash constant
+
+
+def _checksum_words(leaf):
+    """One leaf -> uint32 word view (floats bitcast, ints reinterpreted
+    unsigned, bools widened) — bit-exact sensitivity at every width."""
+    x = jnp.asarray(leaf)
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    unsigned = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+    if jnp.issubdtype(x.dtype, jnp.floating) or \
+            jnp.issubdtype(x.dtype, jnp.signedinteger):
+        x = jax.lax.bitcast_convert_type(x, unsigned[x.dtype.itemsize])
+    if x.dtype == jnp.uint64:
+        x = (x ^ (x >> jnp.uint64(32))).astype(jnp.uint32)
+    return x.astype(jnp.uint32).reshape(-1)
+
+
+def payload_checksum(payload) -> jnp.ndarray:
+    """uint32 checksum of one wire payload (the {"idx", "vals"} tree;
+    an existing `crc` entry is excluded). Traced, vmap-safe."""
+    body = {k: v for k, v in payload.items() if k != _CRC_KEY} \
+        if isinstance(payload, dict) else payload
+    total = jnp.uint32(0)
+    for leaf in jax.tree.leaves(body):
+        w = _checksum_words(leaf)
+        ramp = jnp.arange(w.shape[0], dtype=jnp.uint32) * _CRC_MUL \
+            + jnp.uint32(1)
+        total = total + jnp.sum(w * ramp, dtype=jnp.uint32)
+    return total
+
+
+def attach_checksum(payload: dict) -> dict:
+    """Return the payload with its `crc` entry set (sending side). The
+    crc rides the same pytree through the collectives, so every schedule
+    ships it with zero extra launches."""
+    out = dict(payload)
+    out[_CRC_KEY] = payload_checksum(payload)
+    return out
+
+
+def checksum_ok(payload: dict) -> jnp.ndarray:
+    """Scalar bool: the received payload matches its embedded checksum.
+    Payloads without a crc entry (guards off) verify trivially."""
+    if not (isinstance(payload, dict) and _CRC_KEY in payload):
+        return jnp.bool_(True)
+    return payload_checksum(payload) == payload[_CRC_KEY]
+
+
+# ---------------------------------------------------------------------------
 # Host-side byte accounting (info["bytes_exchanged"], bench gates)
 # ---------------------------------------------------------------------------
 

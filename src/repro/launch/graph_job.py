@@ -92,9 +92,12 @@ def build_iteration(prog, v_pp, num_parts, mesh, schedule,
     # structure (the pipelined push would trade its all_to_all for P-1
     # ppermutes and unroll the scan). Overlap is modeled downstream by
     # Roofline(overlap=...), not in the per-op counts.
+    # guards/faults pinned off: the calibration lowers must count the
+    # production exchange ops only — a checksum attach/verify pass would
+    # perturb the per-op cost model it solves for
     local = D.make_distributed_step(prog, v_pp, num_parts, schedule,
                                     skip_buckets=skip_buckets,
-                                    overlap=False)
+                                    overlap=False, guards=False, faults=())
     from jax.sharding import PartitionSpec as P
     spec = P(D.AXIS)
 

@@ -1,0 +1,361 @@
+"""Checkpoint manager + chunked-execution resume tests (ISSUE 8).
+
+The resume contract under test everywhere: a run that is truncated (or
+killed) and resumed from its checkpoint_dir must be BIT-IDENTICAL to the
+same run executed uninterrupted — same vprops, same iteration count.
+"""
+import os
+import tempfile
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import io as gio
+from repro.core import operators as ops
+from repro.core.engines import run_vcprog
+from repro.core.engines.distributed import run_vcprog_distributed
+from repro.core.operators import PageRankProgram, SSSPProgram
+from repro.distributed.faults import NonConvergenceWarning
+
+ENGINES = ("pregel", "gas", "pushpull", "callback")
+SCHEDULES = ("allgather", "ring", "push")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gio.uniform_graph(300, 2500, seed=2, weighted=True)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager unit behavior (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": (np.array([1, 2], np.int32), np.array(True))}
+
+
+def test_manager_async_save_error_reraised(tmp_path, monkeypatch):
+    """A failed background save must surface on the next wait()/save(),
+    never vanish into the daemon thread."""
+    mgr = ckpt.CheckpointManager(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, _tree())
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        mgr.wait()
+    # the error is consumed: manager is usable again
+    monkeypatch.undo()
+    mgr.save(2, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_manager_sync_save_error_raises_directly(tmp_path, monkeypatch):
+    mgr = ckpt.CheckpointManager(str(tmp_path), async_save=False)
+    monkeypatch.setattr(np, "savez",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("x")))
+    with pytest.raises(OSError):
+        mgr.save(1, _tree())
+
+
+@pytest.mark.parametrize("keep,expect", [(2, [3, 4]), (0, [1, 2, 3, 4]),
+                                         (None, [1, 2, 3, 4])])
+def test_manager_keep_semantics(tmp_path, keep, expect):
+    """keep=k retains the newest k; keep=0/None disables pruning."""
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=keep, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == expect
+
+
+def test_manager_restore_closes_npz(tmp_path):
+    """restore() must not leak the npz file handle (np.load is lazy)."""
+    mgr = ckpt.CheckpointManager(str(tmp_path), async_save=False)
+    tree = _tree()
+    mgr.save(7, tree)
+    out = mgr.restore(tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    # the step dir can be rewritten immediately — a leaked handle on the
+    # old arrays.npz would keep stale data alive / fail on some platforms
+    mgr.save(7, {"a": tree["a"] * 2, "b": tree["b"]})
+    out2 = mgr.restore(tree)
+    np.testing.assert_array_equal(out2["a"], tree["a"] * 2)
+
+
+def test_manager_roundtrip_exact_nested():
+    from collections import namedtuple
+    Carry = namedtuple("Carry", ["it", "mask"])
+    with tempfile.TemporaryDirectory() as td:
+        mgr = ckpt.CheckpointManager(td, async_save=False)
+        tree = {"x": {"deep/slash": np.float64(1.5)},
+                "nt": Carry(np.int32(4), np.ones(5, bool)),
+                "t": (np.zeros((0, 3), np.int8), [np.array(2)])}
+        mgr.save(0, tree)
+        out = mgr.restore(tree)
+        flat_in, d1 = __import__("jax").tree.flatten(tree)
+        flat_out, d2 = __import__("jax").tree.flatten(out)
+        assert d1 == d2
+        for a, b in zip(flat_in, flat_out):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_restore_property_hypothesis():
+    """Property: save->restore of an arbitrary nested pytree of arrays is
+    exact (structure, dtype, bits)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+    import jax
+
+    dtypes = st.sampled_from([np.float32, np.float64, np.int32, np.int8,
+                              np.uint16, np.bool_])
+    arrays = dtypes.flatmap(lambda dt: hnp.arrays(
+        dtype=dt, shape=hnp.array_shapes(max_dims=3, max_side=4),
+        elements=hnp.from_dtype(np.dtype(dt), allow_nan=False,
+                                allow_infinity=False)))
+    # keys must survive the "/"-join flatten and the "\x1f" npz escaping
+    keys = st.text(alphabet=st.characters(
+        whitelist_categories=("Ll", "Nd"), max_codepoint=127),
+        min_size=1, max_size=6)
+    trees = st.recursive(
+        arrays,
+        lambda sub: st.one_of(
+            st.dictionaries(keys, sub, min_size=1, max_size=3),
+            st.lists(sub, min_size=1, max_size=3).map(tuple)),
+        max_leaves=8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(tree=trees)
+    def run(tree):
+        with tempfile.TemporaryDirectory() as td:
+            mgr = ckpt.CheckpointManager(td, async_save=False)
+            mgr.save(0, tree)
+            out = mgr.restore(tree)
+        fin, din = jax.tree.flatten(tree)
+        fout, dout = jax.tree.flatten(out)
+        assert din == dout
+        for a, b in zip(fin, fout):
+            a, b = np.asarray(a), np.asarray(b)
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+    run()
+
+
+def test_resume_step_modes(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), async_save=False)
+    fp = {"graph": "sig", "format": 1}
+    assert ckpt.resume_step(mgr, fp, "auto") is None  # empty dir
+    with pytest.raises(FileNotFoundError):
+        ckpt.resume_step(mgr, fp, "must")
+    with pytest.raises(ValueError):
+        ckpt.resume_step(mgr, fp, "bogus")
+    mgr.save(4, _tree(), metadata={"fingerprint": fp})
+    assert ckpt.resume_step(mgr, fp, "auto") == 4
+    assert ckpt.resume_step(mgr, fp, "must") == 4
+    assert ckpt.resume_step(mgr, fp, "never") is None
+    with pytest.raises(ckpt.FingerprintMismatch):
+        ckpt.resume_step(mgr, dict(fp, graph="other"), "auto")
+
+
+# ---------------------------------------------------------------------------
+# Chunked execution == monolithic (bitwise), all engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_chunked_bitwise_equals_monolithic(graph, engine):
+    d0, i0 = ops.sssp(graph, 0, max_iter=100, engine=engine)
+    d1, i1 = ops.sssp(graph, 0, max_iter=100, engine=engine,
+                      checkpoint_every=3)
+    assert np.array_equal(d0, d1)
+    assert i1["iterations"] == i0["iterations"]
+    assert i1["converged"]
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_distributed_chunked_bitwise_equals_monolithic(graph, schedule):
+    prog = SSSPProgram(0)
+    v0, i0 = run_vcprog_distributed(prog, graph, 100, schedule=schedule,
+                                    frontier="sparse")
+    v1, i1 = run_vcprog_distributed(prog, graph, 100, schedule=schedule,
+                                    frontier="sparse", checkpoint_every=3)
+    assert np.array_equal(np.asarray(v0["distance"]),
+                          np.asarray(v1["distance"]))
+    assert i1["iterations"] == i0["iterations"]
+
+
+# ---------------------------------------------------------------------------
+# Truncated run -> resume == uninterrupted run (bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_resume_bitwise_single_device(graph, engine, tmp_path):
+    d_full, i_full = ops.sssp(graph, 0, max_iter=100, engine=engine)
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        _, i_trunc = ops.sssp(graph, 0, max_iter=3, engine=engine,
+                              checkpoint_dir=td, checkpoint_every=2)
+    assert not i_trunc["converged"]
+    assert i_trunc["checkpoint_saves"] >= 1
+    d_res, i_res = ops.sssp(graph, 0, max_iter=100, engine=engine,
+                            checkpoint_dir=td, checkpoint_every=2)
+    assert i_res["resumed_from"] is not None
+    assert np.array_equal(d_full, d_res)
+    assert i_res["iterations"] == i_full["iterations"]
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("frontier", ("dense", "sparse"))
+def test_resume_bitwise_distributed(graph, schedule, frontier, tmp_path):
+    prog = SSSPProgram(0)
+    v_full, i_full = run_vcprog_distributed(prog, graph, 100,
+                                            schedule=schedule,
+                                            frontier=frontier)
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        run_vcprog_distributed(prog, graph, 3, schedule=schedule,
+                               frontier=frontier, checkpoint_dir=td,
+                               checkpoint_every=2)
+    v_res, i_res = run_vcprog_distributed(prog, graph, 100,
+                                          schedule=schedule,
+                                          frontier=frontier,
+                                          checkpoint_dir=td,
+                                          checkpoint_every=2)
+    assert i_res["resumed_from"] == 3
+    assert np.array_equal(np.asarray(v_full["distance"]),
+                          np.asarray(v_res["distance"]))
+    assert i_res["iterations"] == i_full["iterations"]
+
+
+def test_resume_bitwise_distributed_kernel_on(kernel_graph, tmp_path):
+    """Fused-kernel (interpret-mode Pallas) chunked path resumes
+    bit-identically too — the chunk runner wraps the same local_step."""
+    prog = SSSPProgram(0)
+    kw = dict(schedule="ring", frontier="sparse", kernel="on")
+    v_full, _ = run_vcprog_distributed(prog, kernel_graph, 100, **kw)
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        run_vcprog_distributed(prog, kernel_graph, 3, checkpoint_dir=td,
+                               checkpoint_every=2, **kw)
+    v_res, i_res = run_vcprog_distributed(prog, kernel_graph, 100,
+                                          checkpoint_dir=td,
+                                          checkpoint_every=2, **kw)
+    assert i_res["resumed_from"] == 3
+    assert np.array_equal(np.asarray(v_full["distance"]),
+                          np.asarray(v_res["distance"]))
+
+
+def test_resume_bitwise_batched_lanes(graph, tmp_path):
+    """The batched `_lane_act` masks are part of the snapshotted carry."""
+    srcs = [0, 7, 31]
+    d_full, _ = ops.sssp(graph, sources=srcs, max_iter=100)
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        ops.sssp(graph, sources=srcs, max_iter=3, checkpoint_dir=td,
+                 checkpoint_every=2)
+    d_res, i_res = ops.sssp(graph, sources=srcs, max_iter=100,
+                            checkpoint_dir=td, checkpoint_every=2)
+    assert i_res["resumed_from"] is not None
+    assert np.array_equal(d_full, d_res)
+
+
+def test_resume_bitwise_distributed_batched(graph, tmp_path):
+    progs = [SSSPProgram(r) for r in (0, 7, 31)]
+    v_full, _ = run_vcprog_distributed(progs, graph, 100, schedule="ring",
+                                       frontier="sparse")
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        run_vcprog_distributed(progs, graph, 3, schedule="ring",
+                               frontier="sparse", checkpoint_dir=td,
+                               checkpoint_every=2)
+    v_res, i_res = run_vcprog_distributed(progs, graph, 100, schedule="ring",
+                                          frontier="sparse",
+                                          checkpoint_dir=td,
+                                          checkpoint_every=2)
+    assert i_res["resumed_from"] == 3
+    assert np.array_equal(np.asarray(v_full["distance"]),
+                          np.asarray(v_res["distance"]))
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_resume_bitwise_q8ef_error_feedback(graph, schedule, tmp_path):
+    """The q8ef per-vertex EF residual is loop-carried wire state: a
+    resume that dropped it would diverge bitwise from the full run."""
+    prog = PageRankProgram(graph.num_vertices, 12)
+    v_full, _ = run_vcprog_distributed(prog, graph, 20, schedule=schedule,
+                                       frontier="sparse", exchange="q8ef")
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        run_vcprog_distributed(prog, graph, 6, schedule=schedule,
+                               frontier="sparse", exchange="q8ef",
+                               checkpoint_dir=td, checkpoint_every=3)
+    v_res, i_res = run_vcprog_distributed(prog, graph, 20, schedule=schedule,
+                                          frontier="sparse", exchange="q8ef",
+                                          checkpoint_dir=td,
+                                          checkpoint_every=3)
+    assert i_res["resumed_from"] == 6
+    assert np.array_equal(np.asarray(v_full["rank"]),
+                          np.asarray(v_res["rank"]))
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints, resume modes, non-convergence (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_mismatch_rejects_foreign_checkpoint(graph, tmp_path):
+    td = str(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", NonConvergenceWarning)
+        ops.sssp(graph, 0, max_iter=3, checkpoint_dir=td, checkpoint_every=2)
+    with pytest.raises(ckpt.FingerprintMismatch):
+        ops.sssp(graph, 5, max_iter=100, checkpoint_dir=td,
+                 checkpoint_every=2)
+    # resume="never" runs fresh over the incompatible dir
+    d, i = ops.sssp(graph, 5, max_iter=100, checkpoint_dir=td,
+                    checkpoint_every=2, resume="never")
+    assert i["resumed_from"] is None
+    d_ref, _ = ops.sssp(graph, 5, max_iter=100)
+    assert np.array_equal(d, d_ref)
+
+
+def test_resume_must_on_empty_dir_raises(graph, tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ops.sssp(graph, 0, max_iter=100, checkpoint_dir=str(tmp_path),
+                 checkpoint_every=2, resume="must")
+
+
+def test_non_convergence_reported(graph):
+    with pytest.warns(NonConvergenceWarning):
+        _, info = ops.sssp(graph, 0, max_iter=2)
+    assert info["converged"] is False
+    assert info["iterations"] == 2
+    assert info["active_at_end"] > 0
+    _, info = ops.sssp(graph, 0, max_iter=100)
+    assert info["converged"] is True
+
+
+def test_non_convergence_reported_distributed(graph):
+    with pytest.warns(NonConvergenceWarning):
+        _, info = run_vcprog_distributed(SSSPProgram(0), graph, 2,
+                                         schedule="ring")
+    assert info["converged"] is False
+
+
+def test_vcprog_info_converged_via_run_vcprog(graph):
+    _, info = run_vcprog(SSSPProgram(0), graph, max_iter=100,
+                         engine="pushpull")
+    assert info["converged"] is True
+    assert info["active_at_end"] == 0
