@@ -575,6 +575,25 @@ def bench_batched(quick: bool):
             f"unfused_us={ts['off']*1e6:.1f};"
             f"backend={jax.default_backend()}")
 
+    # past the slab width the batched plane runs as lane CHUNKS through
+    # the widest compiled runner (serving's q_bucket grid stays finite);
+    # per-query cost must stay flat across the chunk boundary
+    q, chunk = 128, 32
+    roots = list(range(q))
+    fn = lambda: O.personalized_pagerank(g, sources=roots, num_iters=iters,
+                                         kernel="on", lane_chunk=chunk)
+    t = timeit(fn, iters=1, warmup=1)
+    per_query[q] = t / q
+    row(f"kernel.fused_gec.batched.q{q}", t,
+        f"V={V};E={E};iters={iters};q={q};lane_chunk={chunk};"
+        f"per_query_us={t*1e6/q:.1f};"
+        f"backend={jax.default_backend()}")
+    if per_query[128] > 2.0 * per_query[32]:
+        raise AssertionError(
+            "lane chunking does not keep per-query cost flat: "
+            f"{per_query[128]*1e6:.1f}us/query at Q=128 (chunked) vs "
+            f"{per_query[32]*1e6:.1f}us/query at Q=32 (gate: <= 2x)")
+
     for q in qs:
         progs = [PersonalizedPageRankProgram(g.num_vertices, iters, r)
                  for r in range(q)]

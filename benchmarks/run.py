@@ -23,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_algorithms, bench_data_scaling, bench_ipc,
-                   bench_kernels, bench_machine_scaling, common)
+                   bench_kernels, bench_machine_scaling, bench_serving,
+                   common)
 
     benches = {
         "fig8a": lambda: bench_algorithms.main(
@@ -34,6 +35,7 @@ def main() -> None:
         "fig8c": bench_machine_scaling.main,
         "fig8d": lambda: bench_ipc.main(scale=2000 if args.quick else 5000),
         "kernels": lambda: bench_kernels.main(quick=args.quick),
+        "serving": lambda: bench_serving.main(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     unknown = only - set(benches)

@@ -1,12 +1,16 @@
-"""Batched graph-query serving: the production shape ROADMAP item 1
-targets — many concurrent queries of the SAME operator (landmark
-distances, personalized PageRank recommendations, multi-source BFS)
-answered by ONE lane-packed execution instead of a Python loop.
+"""Graph-query serving through the serving tier (`repro.serve`).
 
-Each request batch becomes the `sources=` axis: Q query lanes ride the
-packed message-plane slabs, so every superstep costs one O(E) pass
-regardless of Q, and per-lane results are bit-identical to running the
-queries one at a time.
+A :class:`~repro.serve.ServingSession` answers a query STREAM with three
+mechanisms this example walks through end to end:
+
+  1. compiled-session cache — the first request of a shape pays trace +
+     compile; every later request replays the cached runner (the per-
+     query sources ride as jit operands, so NEW sources still hit);
+  2. adaptive micro-batching — `submit()` coalesces single-source
+     queries into padded lane buckets of ONE batched plane pass;
+  3. frontier-incremental recompute — `apply_edge_deltas` patches the
+     padded edge layout in place and re-converges kept-warm results from
+     their cached fixpoints (bit-identical for SSSP/CC after adds).
 
     PYTHONPATH=src python examples/serving.py
 """
@@ -21,25 +25,11 @@ import repro
 from repro.core import io as gio
 
 
-def serve_landmarks(unigps, g, batch):
-    """Distance-oracle table: one batched SSSP run per request batch."""
+def timed(label, fn):
     t0 = time.time()
-    L, info = unigps.landmark_distances(g, batch)
-    dt = time.time() - t0
-    print(f"  landmark_distances Q={len(batch):2d} {dt*1e3:8.1f} ms  "
-          f"({dt*1e3/len(batch):6.1f} ms/query, iters={info['iterations']})")
-    return L
-
-
-def serve_recommendations(unigps, g, users, num_iters=10):
-    """PPR personalization vectors for a batch of users in one run."""
-    t0 = time.time()
-    P, info = unigps.personalized_pagerank(g, sources=users,
-                                           num_iters=num_iters)
-    dt = time.time() - t0
-    print(f"  personalized_ppr   Q={len(users):2d} {dt*1e3:8.1f} ms  "
-          f"({dt*1e3/len(users):6.1f} ms/query)")
-    return P
+    out = fn()
+    print(f"  {label:34s} {(time.time() - t0) * 1e3:8.1f} ms")
+    return out
 
 
 def main():
@@ -47,31 +37,63 @@ def main():
     g = gio.rmat_graph(12, edge_factor=8, seed=7, weighted=True)
     print(f"serving graph: |V|={g.num_vertices} |E|={g.num_edges}")
 
+    session = unigps.serve(g, deadline_ms=5.0, occupancy=8)
     hubs = np.argsort(-g.out_degree)[:32].tolist()
 
-    # warm the compiled runners (one compile per batch width)
-    serve_landmarks(unigps, g, hubs[:8])
-    serve_recommendations(unigps, g, hubs[:8])
-    print("-- warm --")
+    # -- 1. compiled-session cache ------------------------------------
+    print("compiled-session cache:")
+    session.warmup(ops=("sssp", "ppr"), widths=(1, 8))
+    d0, info = timed("sssp (cache-hot, source A)",
+                     lambda: session.query("sssp", source=hubs[0]))
+    d1, info = timed("sssp (cache-hot, source B)",
+                     lambda: session.query("sssp", source=hubs[1]))
+    assert info["cache_hit"], "post-warmup query must not recompile"
+    solo, _ = unigps.sssp(g, root=hubs[1])
+    assert np.array_equal(np.where(np.asarray(d1) > 1e37, np.inf, d1),
+                          solo, equal_nan=True)
 
-    # request batches of different widths reuse the one-pass plane
-    L8 = serve_landmarks(unigps, g, hubs[:8])
-    serve_landmarks(unigps, g, hubs[:8])
+    # -- 2. micro-batched request stream ------------------------------
+    print("micro-batched stream (8 concurrent sssp queries):")
+    tickets = [session.submit("sssp", int(r)) for r in hubs[:8]]
+    timed("flush (one batched plane pass)",
+          lambda: session.pump(force=True))
+    assert all(t.done for t in tickets)
+    lanes = sorted(t.info["batch_lane"] for t in tickets)
+    print(f"    lanes {lanes}, q_bucket {tickets[0].info['q_bucket']}, "
+          f"waits {[round(t.info['queue_wait_ms'], 2) for t in tickets[:3]]}…")
+    assert np.array_equal(np.asarray(tickets[0].value), np.asarray(d0))
 
-    users = hubs[8:16]
-    P = serve_recommendations(unigps, g, users)
+    # a landmark table is the same thing, requested in one call
+    L, linfo = timed("landmarks (32 sources, one call)",
+                     lambda: session.query("landmarks", sources=hubs))
+    assert L.shape == (32, g.num_vertices)
 
-    # per-lane answers match solo queries exactly (lane bit-identity)
-    solo, _ = unigps.sssp(g, root=hubs[0])
-    assert np.array_equal(L8[0], solo, equal_nan=True), "lane != solo query"
+    # -- 3. incremental edge deltas ------------------------------------
+    print("frontier-incremental deltas:")
+    session.query("sssp", source=hubs[0], keep_warm=True)
+    rng = np.random.default_rng(0)
+    adds = np.stack([rng.integers(0, g.num_vertices, 64),
+                     rng.integers(0, g.num_vertices, 64)], axis=1)
+    report = timed("apply_edge_deltas (64 adds + warm refresh)",
+                   lambda: session.apply_edge_deltas(
+                       adds=adds,
+                       add_props={"weight": np.ones(64, np.float32)}))
+    for r in report["refreshed"]:
+        print(f"    refreshed {r['hot']}: mode={r['mode']} "
+              f"iters={r['iterations']}")
+    # the warm result equals a cold run on the patched graph, bit for bit
+    patched = session._inc.to_property_graph()
+    cold, _ = unigps.sssp(patched, root=hubs[0])
+    warm = np.asarray(session.hot_result("sssp", source=hubs[0]))
+    assert np.array_equal(np.where(warm > 1e37, np.inf, warm), cold,
+                          equal_nan=True)
+    print("    warm refresh bit-identical to cold recompute")
 
-    # top-k recommendations per user from the PPR lanes
-    print("top-3 recommendations per user:")
-    for i, user in enumerate(users[:4]):
-        scores = P[i].copy()
-        scores[user] = -np.inf  # don't recommend the user to themselves
-        top = np.argsort(-scores)[:3]
-        print(f"  user {user:6d} -> {top.tolist()}")
+    info = session.info()
+    print(f"cache: {info['cache']['hits']} hits / "
+          f"{info['cache']['misses']} misses, size {info['cache']['size']}; "
+          f"batcher: {info['batcher']['flushes']} flushes, "
+          f"{info['batcher']['filler_lanes']} filler lanes")
     print("OK")
 
 

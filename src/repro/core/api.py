@@ -69,7 +69,8 @@ class UniGPS:
                  use_kernel: bool | None = None, reorder: str = "none",
                  frontier: str = "dense", prefetch: str = "auto",
                  exchange: str = "exact", checkpoint_dir: str | None = None,
-                 checkpoint_every: int = 0, guards: str | bool = "off"):
+                 checkpoint_every: int = 0, guards: str | bool = "off",
+                 lane_chunk=None):
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
@@ -81,6 +82,23 @@ class UniGPS:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.guards = guards
+        #: lane-chunk width for batched (`sources=`/`batch=`) runs: None
+        #: keeps one slab regardless of Q, "auto"/int splits wide batches
+        #: into sub-batches of at most that many lanes (run_vcprog's
+        #: `lane_chunk=`; the serving session sets this to its slab width)
+        self.lane_chunk = lane_chunk
+
+    def serve(self, graph, **kw):
+        """A :class:`repro.serve.ServingSession` over this handle's
+        defaults — the compiled-cache + micro-batching + incremental-
+        recompute request path (docs/serving.md)."""
+        from ..serve import ServingSession
+        kw.setdefault("engine", self.engine)
+        kw.setdefault("kernel", self.kernel)
+        kw.setdefault("frontier", self.frontier)
+        kw.setdefault("prefetch", self.prefetch)
+        kw.setdefault("exchange", self.exchange)
+        return ServingSession(graph, **kw)
 
     # -- graph creation (unified I/O module) -------------------------------
     def create_by_edge_list(self, path: str, directed: bool = True,
@@ -123,7 +141,8 @@ class UniGPS:
                                           self.checkpoint_every),
                "resume": kw.pop("resume", "auto"),
                "guards": kw.pop("guards", self.guards),
-               "faults": kw.pop("faults", ())}
+               "faults": kw.pop("faults", ()),
+               "lane_chunk": kw.pop("lane_chunk", self.lane_chunk)}
         if kw:
             raise TypeError(f"unexpected keyword argument(s): {sorted(kw)}")
         return out

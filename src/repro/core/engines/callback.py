@@ -35,6 +35,24 @@ def _as_shapes(tree):
     return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
 
 
+def _lane_operands(program):
+    """The per-lane attribute arrays of a bound BatchedProgram, to ride the
+    `pure_callback` operand list. Inside a jitted runner these are TRACERS
+    (`common._bind_lanes` rebinds lane values to the jit's lane operands);
+    the host closure must not capture them — it outlives the trace."""
+    if isinstance(program, vcprog.BatchedProgram):
+        return program.lane_values
+    return ()
+
+
+def _host_program(program, lane_vals):
+    """Rebind the concrete lane values delivered to the host callback."""
+    if lane_vals:
+        return program._with_lane_values(
+            tuple(jnp.asarray(v) for v in lane_vals))
+    return program
+
+
 @register("callback")
 class CallbackEngine:
     def init_extra(self, graph, program, vprops0, kernel_on):
@@ -42,9 +60,16 @@ class CallbackEngine:
 
     # Phase 2 on the host --------------------------------------------------
     def compute_phase(self, graph, program, vprops, inbox, process_mask, it):
-        def host(vp, ib, mask, it_):
+        # a BatchedProgram bound inside a jitted runner carries TRACED
+        # per-lane attribute values (`common._bind_lanes`); the host
+        # closure outlives the trace, so those must ride the operand list
+        # and be rebound host-side, never captured
+        lanes = _lane_operands(program)
+
+        def host(vp, ib, mask, it_, *lane_vals):
+            prog = _host_program(program, lane_vals)
             new_props, is_active = jax.vmap(
-                program.vertex_compute, in_axes=(0, 0, None))(vp, ib, int(it_))
+                prog.vertex_compute, in_axes=(0, 0, None))(vp, ib, int(it_))
             vp2 = records.tree_where(jnp.asarray(mask), new_props, vp)
             act = jnp.asarray(mask) & jnp.asarray(is_active).astype(bool)
             return jax.tree.map(np.asarray, (vp2, act))
@@ -52,7 +77,7 @@ class CallbackEngine:
         out_shapes = (_as_shapes(vprops),
                       jax.ShapeDtypeStruct(process_mask.shape, jnp.bool_))
         vprops, active = jax.pure_callback(
-            host, out_shapes, vprops, inbox, process_mask, it)
+            host, out_shapes, vprops, inbox, process_mask, it, *lanes)
         return vprops, active
 
     # Phase 3 + Phase 1 on the host ----------------------------------------
@@ -67,19 +92,23 @@ class CallbackEngine:
         layout = dataclasses.replace(graph.canonical, canonical=None,
                                      prefetch_blocks=None, prefetch_window=0)
 
-        def host(vp, act, lo):
+        lanes = _lane_operands(program)
+
+        def host(vp, act, lo, *lane_vals):
+            prog = _host_program(program, lane_vals)
             lo = jax.tree.map(jnp.asarray, lo)
             vp = jax.tree.map(jnp.asarray, vp)
             # rebuild the empty record host-side: the traced `empty` closure
             # is a jit-scope tracer and must not leak into eager execution
-            empty_h = jax.tree.map(jnp.asarray, program.empty_message())
+            empty_h = jax.tree.map(jnp.asarray, prog.empty_message())
             inbox, has_msg = message_plane.emit_and_combine(
-                program, lo, vp, jnp.asarray(act), empty_h, kernel_on=False,
+                prog, lo, vp, jnp.asarray(act), empty_h, kernel_on=False,
                 frontier=frontier)
             return jax.tree.map(np.asarray, (inbox, has_msg))
 
         inbox_shape = _as_shapes(records.tree_tile(empty, V))
         out_shapes = (inbox_shape, jax.ShapeDtypeStruct((V,), jnp.bool_))
         inbox, has_msg = jax.pure_callback(
-            host, out_shapes, vprops, vcprog.frontier_mask(active), layout)
+            host, out_shapes, vprops, vcprog.frontier_mask(active), layout,
+            *lanes)
         return inbox, has_msg, extra

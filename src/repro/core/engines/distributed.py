@@ -1207,7 +1207,7 @@ def run_vcprog_distributed(program: vcprog.VCProgram, graph: PropertyGraph,
         # un-permute: row old_id of the result lives at new_id=inv_perm[old]
         host = jax.tree.map(lambda a: a[sg["inv_perm"]], host)
     active_end = int(np.sum(np.asarray(active)))
-    info = {"schedule": schedule, "num_parts": Pn,
+    info = {"engine": "distributed", "schedule": schedule, "num_parts": Pn,
             "kernel_on": kernel_on, "reorder": reorder,
             "frontier": frontier, "prefetch": prefetch,
             "prefetch_windows": pf_windows,

@@ -68,6 +68,27 @@ def workset_capacity(num_items: int, frac: float = SPARSE_CAP_FRAC) -> int:
     return int(min(cap, -(-n // 8) * 8))
 
 
+#: lane-chunk width `lane_chunk="auto"` resolves to: past this many query
+#: lanes one over-wide slab stops paying (VMEM pressure + aligned-step
+#: growth of the packed panels), so `run_vcprog` splits the batch into
+#: sub-batches of this width instead — each chunk rides the compiled
+#: runner of its width, so a 128-source request costs 4 cached Q=32 runs.
+LANE_CHUNK_DEFAULT = 32
+
+
+def resolve_lane_chunk(lane_chunk) -> int:
+    """Resolve the `lane_chunk` knob: None/0 = no chunking (one slab
+    regardless of Q), "auto" = LANE_CHUNK_DEFAULT, an int = that width."""
+    if lane_chunk in (None, 0, False, "none", "off"):
+        return 0
+    if lane_chunk == "auto":
+        return LANE_CHUNK_DEFAULT
+    w = int(lane_chunk)
+    if w < 1:
+        raise ValueError(f"lane_chunk must be >= 1, got {lane_chunk!r}")
+    return w
+
+
 def lane_slab_width(num_lanes: int) -> int:
     """Slab columns Q query lanes occupy in the packed fused kernel:
     a batched scalar leaf is a [V, Q] record leaf, so its PackSlot takes

@@ -140,6 +140,43 @@ def frontier_count(active) -> jnp.ndarray:
     return jnp.sum(jnp.asarray(active).astype(jnp.int32))
 
 
+def delta_frontier(touched, num_vertices: int, num_lanes: int | None = None
+                   ) -> Frontier:
+    """Seed a Frontier from a set of touched vertex ids — the serving
+    tier's edge-delta → frontier bridge (an edge update IS a frontier:
+    re-convergence only needs to start from the endpoints it touched).
+
+    `touched` is a 1-D array of vertex ids (duplicates fine) or a [V]
+    bool mask; `num_lanes` attaches the per-lane view for batched warm
+    restarts (every lane shares the seed — a structural delta touches
+    all queries alike).
+
+    Host inputs scatter in numpy: every delta has a different touched
+    count, and an eager jnp scatter would pay a fresh tiny-kernel
+    compile per count — only the shape-stable [V] mask goes on device."""
+    if isinstance(touched, jax.Array):
+        if touched.dtype == jnp.bool_ and touched.ndim == 1 \
+                and touched.shape[0] == num_vertices:
+            mask = touched
+        else:
+            mask = jnp.zeros((num_vertices,), bool)
+            if touched.size:
+                mask = mask.at[touched.astype(jnp.int32)].set(True)
+    else:
+        t = np.asarray(touched)
+        if t.dtype == np.bool_ and t.ndim == 1 \
+                and t.shape[0] == num_vertices:
+            mask = jnp.asarray(t)
+        else:
+            m = np.zeros((num_vertices,), bool)
+            if t.size:
+                m[t.astype(np.int64)] = True
+            mask = jnp.asarray(m)
+    lanes = (None if num_lanes is None
+             else jnp.broadcast_to(mask[:, None], (num_vertices, num_lanes)))
+    return make_frontier(mask, lane_mask=lanes)
+
+
 def make_segment_meta(dst: jnp.ndarray, num_segments: int,
                       valid: Optional[jnp.ndarray] = None) -> SegmentMeta:
     """Traced fallback for callers without host-side precompute.
@@ -253,7 +290,7 @@ class BatchedProgram(VCProgram):
     exactly like unbatched ones (`engines.common._ProgramKey`).
     """
 
-    def __init__(self, programs):
+    def __init__(self, programs, lane_attrs=()):
         programs = tuple(programs)
         if not programs:
             raise ValueError("BatchedProgram needs at least one program")
@@ -267,13 +304,30 @@ class BatchedProgram(VCProgram):
             if sorted(p.__dict__) != keys:
                 raise ValueError(
                     "batched programs must have identical attribute sets")
+        # `lane_attrs` FORCES the named attrs onto the traced lane axis
+        # even when their values coincide across lanes. Value-equal attrs
+        # otherwise fold into the trace as constants — correct for this
+        # batch, but a runner cached on the lane SIGNATURE (attr names,
+        # not values — engines.common._ProgramKey) would silently replay
+        # those constants for a different query. The serving tier forces
+        # its per-source attr so one compiled width serves every source
+        # set, including all-equal and width-1 batches.
+        forced = set(lane_attrs)
+        unknown = forced - set(keys)
+        if unknown:
+            raise ValueError(
+                f"lane_attrs {sorted(unknown)} not attributes of "
+                f"{cls.__name__} (has {keys})")
         common, lane_attrs = [], []
         for k in keys:
             vals = [p.__dict__[k] for p in programs]
-            try:
-                same = all(bool(v == vals[0]) for v in vals[1:])
-            except (TypeError, ValueError):
+            if k in forced:
                 same = False
+            else:
+                try:
+                    same = all(bool(v == vals[0]) for v in vals[1:])
+                except (TypeError, ValueError):
+                    same = False
             if same:
                 common.append((k, vals[0]))
             else:
@@ -292,6 +346,62 @@ class BatchedProgram(VCProgram):
     @property
     def num_lanes(self) -> int:
         return self._q
+
+    # -- lane-value plumbing (compiled-runner reuse + chunking) -----------
+    #
+    # The per-lane attribute VALUES (query roots/sources) are data, not
+    # code: the engine drivers hash the compiled runner on the attribute
+    # NAMES only and feed the values in as traced operands
+    # (`lane_values` -> jit argument -> `_with_lane_values` clone inside
+    # the traced function), so a new source set NEVER retraces — the
+    # serving tier's "second same-shape request pays zero trace+compile"
+    # contract, and a free win for every `sources=` operator call.
+
+    @property
+    def lane_signature(self):
+        """The retrace-relevant identity: class, lane count, lane-invariant
+        attrs, and the NAMES of the per-lane attrs (not their values)."""
+        return (self._cls, self._q, self._common,
+                tuple(k for k, _ in self._lane_attrs))
+
+    @property
+    def lane_values(self):
+        """The per-lane attribute arrays, in `_lane_attrs` order — exactly
+        what `_vmap_lanes` would materialize. Feed these through a jit
+        boundary and rebind with `_with_lane_values` inside."""
+        return tuple(jnp.asarray(vals) for _, vals in self._lane_attrs)
+
+    def _with_lane_values(self, values):
+        """Clone with the per-lane attribute values replaced (typically by
+        traced arrays inside a jitted runner). Names/order must match
+        `_lane_attrs`."""
+        if len(values) != len(self._lane_attrs):
+            raise ValueError("lane value count mismatch")
+        p = object.__new__(BatchedProgram)
+        p._cls, p._q, p._common = self._cls, self._q, self._common
+        p._lane_attrs = tuple((k, v) for (k, _), v
+                              in zip(self._lane_attrs, values))
+        return p
+
+    def split(self, width: int):
+        """Slice the lanes into sub-batches of at most `width` — the lane
+        chunking past `lane_slab_width` sweet spots (`run_vcprog`'s
+        `lane_chunk=`). Each sub-batch is a standalone BatchedProgram over
+        the same class/common attrs, so chunks of equal width share one
+        compiled runner."""
+        w = int(width)
+        if w < 1:
+            raise ValueError(f"lane chunk width must be >= 1, got {width}")
+        subs = []
+        for lo in range(0, self._q, w):
+            hi = min(lo + w, self._q)
+            p = object.__new__(BatchedProgram)
+            p._cls, p._common = self._cls, self._common
+            p._q = hi - lo
+            p._lane_attrs = tuple((k, tuple(vals[lo:hi]))
+                                  for k, vals in self._lane_attrs)
+            subs.append(p)
+        return subs
 
     @property
     def monotonic(self):
@@ -385,15 +495,18 @@ class BatchedProgram(VCProgram):
                                "_lane_msg": emit.astype(jnp.int32)}
 
 
-def as_batched(program, batch=None):
+def as_batched(program, batch=None, lane_attrs=()):
     """Normalize `run_vcprog`'s (program, batch=) argument pair.
 
     A sequence of programs becomes a :class:`BatchedProgram` (one lane
     each); `batch=Q` with a single program replicates it across Q lanes
     (identical queries — the bench shape). Returns the program unchanged
-    when no batching was requested."""
+    when no batching was requested. `lane_attrs` names attrs to force
+    onto the traced lane axis even when value-equal (see
+    :class:`BatchedProgram` — the serving tier's compiled-runner reuse
+    needs the per-source attr to always be an operand)."""
     if isinstance(program, (list, tuple)):
-        program = BatchedProgram(program)
+        program = BatchedProgram(program, lane_attrs=lane_attrs)
         if batch is not None and int(batch) != program.num_lanes:
             raise ValueError(
                 f"batch={batch} does not match the {program.num_lanes} "
@@ -410,7 +523,7 @@ def as_batched(program, batch=None):
                 f"batch={q} does not match the BatchedProgram's "
                 f"{program.num_lanes} lanes")
         return program
-    return BatchedProgram((program,) * q)
+    return BatchedProgram((program,) * q, lane_attrs=lane_attrs)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,287 @@
+"""Frontier-incremental graph state — layer (c) of the serving tier.
+
+An edge update is two things: a *layout patch* and a *frontier*. This
+module supplies both:
+
+  * :class:`IncrementalGraph` keeps the canonical + src-sorted
+    :class:`~repro.core.graph_device.EdgeLayout` pair CAPACITY-PADDED:
+    the live edges occupy a dst-sorted prefix, trailing pad slots carry
+    the sentinel ``dst = V`` and ``valid_mask = False`` — exactly the
+    padded-bucket scheme the distributed planes already run bit-exactly.
+    Because ``num_edges`` (a static pytree field) is the *capacity*, a
+    patched graph has the SAME jit signature as the one the cached
+    runner was traced for: `apply_edge_deltas` inserts/removes edges
+    host-side in numpy and no request after it ever re-traces.
+
+  * `apply_edge_deltas` returns the TOUCHED vertex ids — the seed of a
+    :func:`repro.core.vcprog.delta_frontier` from which the warm-start
+    runner (`run_vcprog(..., warm_start=)`) re-converges the cached
+    fixpoint through the sparse plane at O(affected region), instead of
+    recomputing O(E) from scratch.
+
+When a delta overflows the pad capacity the patch refuses with
+:class:`CapacityExceeded`; the session then does a full rebuild (fresh
+capacity, bumped structure version — which invalidates every cache entry
+keyed on the old graph signature) and re-runs hot results cold.
+
+Correctness envelope (argued in docs/serving.md): warm re-convergence
+after edge ADDS is bit-identical to from-scratch for monotone min-monoid
+programs (SSSP/BFS/CC — the cached labels stay valid upper bounds and
+relaxation from the touched endpoints reaches the same fixpoint);
+REMOVALS can invalidate such labels upward, so the session re-runs those
+cold (still through the cached compiled runner — zero trace cost).
+PageRank-family refreshes are tolerance-checked, not bit-exact.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import vcprog
+from ..core.graph import PropertyGraph, from_edges
+from ..core.graph_device import DeviceGraph, EdgeLayout
+
+__all__ = ["CapacityExceeded", "IncrementalGraph"]
+
+
+class CapacityExceeded(RuntimeError):
+    """A delta would overflow the padded edge capacity — the caller must
+    rebuild (new static shapes => new graph signature => cache miss)."""
+
+
+def _align8(n: int) -> int:
+    return max(-(-int(n) // 8) * 8, 8)
+
+
+def _edge_keys(src: np.ndarray, dst: np.ndarray, V: int) -> np.ndarray:
+    """Total order of the canonical (dst-major, src-minor) edge sort, as
+    one sortable int64 key per edge."""
+    return dst.astype(np.int64) * np.int64(V + 1) + src.astype(np.int64)
+
+
+class IncrementalGraph:
+    """Capacity-padded device graph with O(E) host-side delta patching.
+
+    `slack` sizes the pad headroom (capacity = ceil(E * (1 + slack)),
+    8-aligned); `capacity` overrides it outright. Vertex count is fixed
+    for the lifetime of the object — deltas add/remove EDGES (the paper's
+    property-graph updates); growing V is a rebuild at the session layer.
+    """
+
+    def __init__(self, graph: PropertyGraph, slack: float = 0.5,
+                 capacity: Optional[int] = None, version: int = 0,
+                 device: bool = True):
+        self.num_vertices = int(graph.num_vertices)
+        E = int(graph.num_edges)
+        self.capacity = int(capacity) if capacity else _align8(
+            int(np.ceil(E * (1.0 + float(slack)))))
+        if self.capacity < E:
+            raise ValueError(
+                f"capacity {self.capacity} below live edge count {E}")
+        # canonical (dst-sorted) live prefix, host-side
+        self._src = np.asarray(graph.src, np.int32).copy()
+        self._dst = np.asarray(graph.dst, np.int32).copy()
+        self._eprops = {k: np.asarray(v).copy()
+                        for k, v in graph.edge_props.items()}
+        self._vprops = {k: np.asarray(v) for k, v in graph.vertex_props.items()}
+        self._directed = bool(graph.directed)
+        #: structure version — bumped by rebuilds, part of the graph
+        #: signature (pad-slot patches do NOT bump it)
+        self.version = int(version)
+        #: monotone patch counter (diagnostics; every delta bumps it)
+        self.deltas_applied = 0
+        #: device=False keeps only the host bookkeeping (sessions that
+        #: rebuild their own graph form per delta: reordered/distributed)
+        self._device = bool(device)
+        self.gdev: Optional[DeviceGraph] = (self._build_device()
+                                            if self._device else None)
+
+    @property
+    def live_edges(self) -> int:
+        return int(self._src.shape[0])
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.live_edges
+
+    # -- device build -----------------------------------------------------
+    def _build_device(self) -> DeviceGraph:
+        """The padded twin of `graph_device.build_device_graph`: same two
+        layouts, every array padded to `capacity`. Pad slots: sentinel
+        dst = V (keeps the canonical dst ascending), src = 0 (never
+        gathered into a message — valid_mask vetoes the emit), zero edge
+        props. Prefetch metadata is intentionally NOT attached: the
+        static window could change across deltas and force a retrace —
+        the resident fused variant runs instead (full-rebuild paths get
+        windows back via the normal builder)."""
+        V, cap, E = self.num_vertices, self.capacity, self.live_edges
+        pad = cap - E
+
+        def padded(a, fill):
+            out = np.full((cap,) + a.shape[1:], fill, dtype=a.dtype)
+            out[:E] = a
+            return out
+
+        src_p = padded(self._src, 0)
+        dst_p = padded(self._dst, V)  # sentinel: stays ascending
+        valid = np.zeros(cap, bool)
+        valid[:E] = True
+        eprops_p = {k: padded(v, 0) for k, v in self._eprops.items()}
+
+        in_indptr = np.searchsorted(self._dst, np.arange(V + 1))
+        in_degree = np.diff(in_indptr).astype(np.int32)
+        out_degree = np.bincount(self._src, minlength=V).astype(np.int32)
+        meta = vcprog.SegmentMeta(
+            last_edge=jnp.asarray(
+                np.clip(in_indptr[1:] - 1, 0, max(cap - 1, 0))
+                .astype(np.int32)),
+            has_edge=jnp.asarray(in_degree > 0))
+
+        # src-sorted view of the live prefix; pads map to pad slots, so
+        # the gather permutation keeps padding in padding
+        order_s = np.lexsort((self._dst, self._src))
+        inv_csc = np.empty(E, np.int64)
+        inv_csc[order_s] = np.arange(E)
+        # perm maps canonical position -> src-sorted position of that edge
+        # (gathering emissions with it lands them in combine order);
+        # identity over the pad tail keeps padding in padding
+        perm_full = np.arange(cap, dtype=np.int64)
+        perm_full[:E] = inv_csc
+
+        src_s = padded(self._src[order_s], 0)
+        dst_s = padded(self._dst[order_s], V)
+        eprops_s = {k: padded(v[order_s], 0) for k, v in self._eprops.items()}
+
+        canonical = EdgeLayout(
+            src=jnp.asarray(src_p), dst=jnp.asarray(dst_p),
+            eprops=jax.tree.map(jnp.asarray, eprops_p),
+            seg_meta=meta, valid_mask=jnp.asarray(valid),
+            num_segments=V, num_edges=cap)
+        src_sorted = EdgeLayout(
+            src=jnp.asarray(src_s), dst=jnp.asarray(dst_s),
+            eprops=jax.tree.map(jnp.asarray, eprops_s),
+            perm=jnp.asarray(perm_full), valid_mask=jnp.asarray(valid),
+            canonical=canonical,
+            num_segments=V, num_edges=cap)
+        return DeviceGraph(
+            canonical=canonical, src_sorted=src_sorted,
+            out_degree=jnp.asarray(out_degree),
+            in_degree=jnp.asarray(in_degree),
+            vprops_in=jax.tree.map(jnp.asarray, self._vprops),
+            num_vertices=V, num_edges=cap)
+
+    # -- deltas -----------------------------------------------------------
+    def apply_edge_deltas(self, adds=None, removals=None,
+                          add_props: Optional[dict] = None
+                          ) -> Tuple[np.ndarray, DeviceGraph]:
+        """Patch the live edge set in place. `adds`/`removals` are (src,
+        dst) pairs ([n, 2] array or two-column tuple); `add_props` maps
+        edge-prop name -> [n] values for the added edges (missing props
+        default to 1 for "weight", else 0). Removing an edge that is not
+        present raises ValueError; overflowing the pad capacity raises
+        CapacityExceeded (rebuild instead — the session does).
+
+        Returns (touched_vertex_ids, patched DeviceGraph). The returned
+        DeviceGraph has the SAME static structure as before the patch —
+        cached compiled runners replay on it without retracing."""
+        V = self.num_vertices
+        a_src, a_dst = _norm_pairs(adds, V, "adds")
+        r_src, r_dst = _norm_pairs(removals, V, "removals")
+        if self.live_edges + a_src.size - r_src.size > self.capacity:
+            raise CapacityExceeded(
+                f"{a_src.size} adds / {r_src.size} removals overflow "
+                f"capacity {self.capacity} ({self.live_edges} live)")
+
+        keys = _edge_keys(self._src, self._dst, V)
+        keep = np.ones(self.live_edges, bool)
+        if r_src.size:
+            # match each removal to one live instance (parallel edges:
+            # one instance per removal entry, earliest first)
+            rkeys, rcounts = np.unique(_edge_keys(r_src, r_dst, V),
+                                       return_counts=True)
+            for rk, rc in zip(rkeys, rcounts):
+                lo = int(np.searchsorted(keys, rk, side="left"))
+                hi = int(np.searchsorted(keys, rk, side="right"))
+                if hi - lo < rc:
+                    d, s = divmod(int(rk), V + 1)
+                    raise ValueError(
+                        f"removal ({s}, {d}) x{rc}: only {hi - lo} "
+                        "matching live edge(s)")
+                keep[lo:lo + rc] = False
+        src_k, dst_k = self._src[keep], self._dst[keep]
+        eprops_k = {k: v[keep] for k, v in self._eprops.items()}
+        keys_k = keys[keep]
+
+        if a_src.size:
+            a_order = np.argsort(_edge_keys(a_src, a_dst, V), kind="stable")
+            a_src, a_dst = a_src[a_order], a_dst[a_order]
+            a_eprops = {}
+            for k, v in self._eprops.items():
+                given = (add_props or {}).get(k)
+                if given is not None:
+                    av = np.asarray(given, dtype=v.dtype)[a_order]
+                else:
+                    fill = 1 if k == "weight" else 0
+                    av = np.full(a_src.shape[0], fill, dtype=v.dtype)
+                a_eprops[k] = av
+            unknown = set(add_props or {}) - set(self._eprops)
+            if unknown:
+                raise ValueError(f"unknown add_props: {sorted(unknown)}")
+            pos = np.searchsorted(keys_k, _edge_keys(a_src, a_dst, V),
+                                  side="right")
+            src_k = np.insert(src_k, pos, a_src)
+            dst_k = np.insert(dst_k, pos, a_dst)
+            eprops_k = {k: np.insert(v, pos, a_eprops[k], axis=0)
+                        for k, v in eprops_k.items()}
+
+        self._src, self._dst, self._eprops = src_k, dst_k, eprops_k
+        self.deltas_applied += 1
+        if self._device:
+            self.gdev = self._build_device()
+        touched = np.unique(np.concatenate(
+            [a_src, a_dst, r_src, r_dst])) if (a_src.size or r_src.size) \
+            else np.zeros(0, np.int32)
+        return touched.astype(np.int32), self.gdev
+
+    # -- rebuild / export -------------------------------------------------
+    def to_property_graph(self) -> PropertyGraph:
+        """The live edge set as a fresh PropertyGraph (full rebuilds, and
+        the distributed engine's sharded builder)."""
+        return from_edges(self._src, self._dst, self.num_vertices,
+                          edge_props=self._eprops,
+                          vertex_props=self._vprops,
+                          directed=self._directed)
+
+    def rebuild(self, slack: float = 0.5) -> "IncrementalGraph":
+        """A fresh IncrementalGraph over the live edges with new headroom
+        and a bumped structure version (=> new graph signature; cached
+        entries for the old one are stale)."""
+        return IncrementalGraph(self.to_property_graph(), slack=slack,
+                                version=self.version + 1,
+                                device=self._device)
+
+
+def _norm_pairs(pairs, V: int, name: str):
+    """Normalize (src, dst) delta input to two bounds-checked int32
+    arrays."""
+    if pairs is None:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+    arr = np.asarray(pairs)
+    if arr.size == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+    if arr.ndim == 2 and arr.shape[1] == 2:
+        s, d = arr[:, 0], arr[:, 1]
+    elif arr.ndim == 2 and arr.shape[0] == 2:
+        s, d = arr[0], arr[1]
+    else:
+        raise ValueError(f"{name} must be [n, 2] (src, dst) pairs")
+    s = np.asarray(s, np.int64)
+    d = np.asarray(d, np.int64)
+    if s.size and (s.min() < 0 or s.max() >= V or d.min() < 0
+                   or d.max() >= V):
+        raise ValueError(f"{name} contain out-of-range vertex ids "
+                         f"(V={V})")
+    return s.astype(np.int32), d.astype(np.int32)

@@ -1,0 +1,426 @@
+"""Serving tier (`repro.serve`): compiled-session cache, adaptive
+micro-batching, frontier-incremental recompute.
+
+Contracts under test:
+  * cache keys — every compile knob produces a DISTINCT key; a same-key
+    hit replays bit-identically; LRU evicts in recency order; warmup()
+    pre-populates the (op x bucket) grid
+  * micro-batcher — deadline and occupancy flush policies under an
+    injectable clock; lane-bucket padding; filler accounting
+  * forced lane attrs — value-equal roots stay traced operands, so a
+    cached runner answers NEW sources correctly (regression: a baked
+    root constant would replay source A's distances for source B)
+  * incremental deltas — adds re-converge warm BIT-IDENTICALLY for the
+    min-monoid ops (SSSP/CC), within tolerance for PageRank; removals
+    force a cold refresh; capacity overflow rebuilds and invalidates
+  * info parity — every request reports the same serving keys across
+    engines
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro
+from repro.core import io as gio
+from repro.core import vcprog
+from repro.serve import (CapacityExceeded, IncrementalGraph, LRUCache,
+                         MicroBatcher, ServingSession, bucket_width,
+                         graph_signature, make_key)
+
+INF = 3.4e38
+
+
+def _definf(v):
+    v = np.asarray(v)
+    return np.where(v > 1e37, np.inf, v)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return gio.uniform_graph(300, 2500, seed=2, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def session(g):
+    """Shared cache-hot session (tests that only READ state reuse it)."""
+    s = ServingSession(g, deadline_ms=5.0, occupancy=4, lane_buckets=(1, 8))
+    s.warmup(ops=("sssp",), widths=(1,))
+    return s
+
+
+def _ref_sssp(graph, root):
+    d, _ = repro.UniGPS().sssp(graph, root=root)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# cache keys: distinctness, hits, LRU
+# ---------------------------------------------------------------------------
+
+def test_every_knob_changes_the_key():
+    base = dict(kernel="on", frontier="dense", prefetch="auto",
+                multileaf="auto", reorder="none", exchange="exact",
+                overlap=True, q_bucket=8, max_iter=100, warm=False,
+                graph_sig=(300, 2500))
+    k0 = make_key("sssp", "pushpull", **base)
+    assert k0 == make_key("sssp", "pushpull", **base)  # deterministic
+    alternates = dict(kernel="off", frontier="sparse", prefetch="off",
+                      multileaf="off", reorder="rcm", exchange="fp16",
+                      overlap=False, q_bucket=32, max_iter=50, warm=True,
+                      graph_sig=(300, 2504))
+    for knob, alt in alternates.items():
+        assert make_key("sssp", "pushpull", **{**base, knob: alt}) != k0, \
+            f"knob {knob} must change the cache key"
+    assert make_key("bfs", "pushpull", **base) != k0
+    assert make_key("sssp", "pregel", **base) != k0
+
+
+def test_graph_signature_components():
+    base = graph_signature(100, 808, {"d": np.float32(0)},
+                           {"w": np.float32(0)}, ("single", 1),
+                           reorder_perm=None, version=0)
+    assert base == graph_signature(100, 808, {"d": np.float32(0)},
+                                   {"w": np.float32(0)}, ("single", 1))
+    assert graph_signature(101, 808) != graph_signature(100, 808)
+    assert graph_signature(100, 816) != graph_signature(100, 808)
+    assert base != graph_signature(100, 808, {"d": np.float64(0)},
+                                   {"w": np.float32(0)})
+    assert base != graph_signature(100, 808, {"d": np.float32(0)},
+                                   {"w": np.float32(0)},
+                                   ("distributed", 4))
+    assert base != graph_signature(100, 808, {"d": np.float32(0)},
+                                   {"w": np.float32(0)}, ("single", 1),
+                                   version=1)
+    p = np.arange(100)
+    with_perm = graph_signature(100, 808, reorder_perm=p)
+    assert with_perm != graph_signature(100, 808)
+    assert with_perm != graph_signature(100, 808, reorder_perm=p[::-1])
+
+
+def test_lru_eviction_order_and_counters():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refreshes a: b is now LRU
+    c.put("c", 3)                   # evicts b
+    assert c.keys() == ["a", "c"]
+    assert c.get("b") is None
+    assert (c.hits, c.misses, c.evictions) == (1, 1, 1)
+    assert c.peek("zzz") is None    # peek never counts
+    assert (c.hits, c.misses) == (1, 1)
+
+
+def test_lru_invalidate_on_signature():
+    c = LRUCache(capacity=8)
+    old, new = (10, 80, (), (), ("single", 1), "none", 0), \
+               (10, 80, (), (), ("single", 1), "none", 1)
+    c.put(make_key("sssp", "pushpull", graph_sig=old), 1)
+    c.put(make_key("cc", "pushpull", graph_sig=old), 2)
+    c.put(make_key("sssp", "pushpull", graph_sig=new), 3)
+    assert c.invalidate(graph_sig=new) == 2
+    assert len(c) == 1 and c.invalidations == 2
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher policy (pure, injectable clock)
+# ---------------------------------------------------------------------------
+
+def test_bucket_width_policy():
+    for n, w in [(1, 1), (2, 8), (8, 8), (9, 32), (32, 32), (33, 64),
+                 (40, 64), (64, 64), (65, 96)]:
+        assert bucket_width(n, (1, 8, 32)) == w, (n, w)
+
+
+def test_batcher_deadline_flush():
+    t = [0.0]
+    b = MicroBatcher(deadline_ms=5.0, occupancy=32, clock=lambda: t[0])
+
+    class Tk:
+        def _resolve(self, *a):
+            pass
+
+    b.submit(("sssp",), 3, Tk())
+    t[0] = 0.002
+    b.submit(("sssp",), 4, Tk())
+    assert b.poll() == []                    # oldest is 2ms old: not due
+    t[0] = 0.0051
+    (fl,) = b.poll()
+    assert fl.reason == "deadline" and list(fl.payloads) == [3, 4]
+    assert fl.width == 8                     # 2 requests pad to bucket 8
+    assert fl.queue_wait_ms[0] == pytest.approx(5.1)
+    assert fl.queue_wait_ms[1] == pytest.approx(3.1)
+    assert b.info()["filler_lanes"] == 6
+
+
+def test_batcher_occupancy_flush_before_deadline():
+    t = [0.0]
+    b = MicroBatcher(deadline_ms=1000.0, occupancy=4, clock=lambda: t[0])
+
+    class Tk:
+        def _resolve(self, *a):
+            pass
+
+    for s in range(4):
+        b.submit(("bfs",), s, Tk())
+    (fl,) = b.poll()
+    assert fl.reason == "occupancy" and fl.width == 8
+    assert b.poll() == []                    # queue drained
+
+
+def test_batcher_force_flush():
+    t = [0.0]
+    b = MicroBatcher(deadline_ms=1000.0, occupancy=32, clock=lambda: t[0])
+
+    class Tk:
+        def _resolve(self, *a):
+            pass
+
+    b.submit(("sssp",), 9, Tk())
+    (fl,) = b.poll(force=True)
+    assert fl.reason == "forced" and fl.width == 1
+
+
+# ---------------------------------------------------------------------------
+# session: cache hits are bit-identical, new sources stay correct
+# ---------------------------------------------------------------------------
+
+def test_second_request_zero_compile_and_bit_identical(g):
+    s = ServingSession(g)
+    v_cold, i_cold = s.query("sssp", source=3)
+    assert not i_cold["cache_hit"]
+    v_hot, i_hot = s.query("sssp", source=3)
+    assert i_hot["cache_hit"]
+    np.testing.assert_array_equal(np.asarray(v_cold), np.asarray(v_hot))
+    np.testing.assert_array_equal(_definf(v_hot), _ref_sssp(g, 3))
+
+
+def test_new_sources_hit_and_stay_correct(session, g):
+    """Regression: warmup uses THROWAWAY sources; if the lane attr were
+    baked as a trace constant, every later query would silently replay
+    the warmup root's distances (forced lane_attrs keep it an operand)."""
+    for root in (7, 31, 299):
+        v, info = session.query("sssp", source=root)
+        assert info["cache_hit"], "post-warmup query must not recompile"
+        np.testing.assert_array_equal(_definf(v), _ref_sssp(g, root),
+                                      err_msg=f"root={root}")
+
+
+def test_warmup_prepopulates_the_grid(g):
+    s = ServingSession(g, lane_buckets=(1, 8))
+    rep = s.warmup(ops=("sssp", "pagerank"), widths=(1, 8))
+    assert set(rep["built"]) == {"sssp.q1", "sssp.q8", "pagerank"}
+    assert rep["cache"]["size"] == 3
+    assert s.query("sssp", source=5)[1]["cache_hit"]
+    assert s.query("sssp", sources=[1, 2, 3])[1]["cache_hit"]  # bucket 8
+    assert s.query("pagerank")[1]["cache_hit"]
+
+
+def test_lane_chunking_past_top_bucket(session, g):
+    """12 sources with buckets (1, 8) -> width 16 runs as 2 chunks of 8
+    through the SAME compiled runner; every lane stays bit-identical."""
+    roots = [2 * i + 1 for i in range(12)]
+    D, info = session.query("sssp", sources=roots)
+    assert D.shape == (12, g.num_vertices)
+    assert info["lane_chunks"] == {"width": 8, "chunks": 2}
+    for i, r in enumerate(roots):
+        np.testing.assert_array_equal(_definf(D[i]), _ref_sssp(g, r),
+                                      err_msg=f"lane {i} root {r}")
+
+
+def test_eviction_is_recompiled_not_wrong(g):
+    s = ServingSession(g, cache_capacity=1)
+    s.query("sssp", source=1)
+    s.query("bfs", source=1)          # evicts the sssp entry
+    v, info = s.query("sssp", source=2)
+    assert not info["cache_hit"]      # evicted: pays compile again
+    assert s.info()["cache"]["evictions"] >= 1
+    np.testing.assert_array_equal(_definf(v), _ref_sssp(g, 2))
+
+
+# ---------------------------------------------------------------------------
+# session: micro-batched request path
+# ---------------------------------------------------------------------------
+
+def test_submit_pump_deadline_with_fake_clock(g):
+    t = [0.0]
+    s = ServingSession(g, deadline_ms=5.0, occupancy=32,
+                       lane_buckets=(1, 8), clock=lambda: t[0])
+    tickets = [s.submit("sssp", r) for r in (3, 11)]
+    assert s.pump() == 0 and not tickets[0].done
+    t[0] = 0.006
+    assert s.pump() == 1
+    for lane, (tk, root) in enumerate(zip(tickets, (3, 11))):
+        assert tk.done
+        assert tk.info["flush_reason"] == "deadline"
+        assert tk.info["batch_lane"] == lane
+        assert tk.info["q_bucket"] == 8
+        assert tk.info["queue_wait_ms"] >= 0.0
+        np.testing.assert_array_equal(_definf(tk.value), _ref_sssp(g, root))
+
+
+def test_submit_occupancy_and_result_force(g):
+    s = ServingSession(g, deadline_ms=10_000.0, occupancy=2,
+                       lane_buckets=(1, 8))
+    s.warmup(ops=("sssp",), widths=(8,))
+    t1, t2 = s.submit("sssp", 4), s.submit("sssp", 5)
+    assert s.pump() == 1                      # occupancy trigger
+    assert t1.info["flush_reason"] == "occupancy" and t2.done
+    t3 = s.submit("sssp", 6)
+    v3, i3 = t3.result()                        # result() force-pumps
+    np.testing.assert_array_equal(_definf(v3), _ref_sssp(g, 6))
+    assert i3["flush_reason"] == "forced"
+
+
+def test_submit_rejects_global_ops(session):
+    with pytest.raises(ValueError, match="global"):
+        session.submit("pagerank", 0)
+    with pytest.raises(ValueError, match="serving ops"):
+        session.query("nope")
+    with pytest.raises(ValueError, match="source"):
+        session.query("pagerank", source=0)
+    with pytest.raises(ValueError, match="source"):
+        session.query("sssp")
+
+
+# ---------------------------------------------------------------------------
+# incremental deltas
+# ---------------------------------------------------------------------------
+
+def _rand_adds(rng, V, n):
+    return (np.stack([rng.integers(0, V, n), rng.integers(0, V, n)], axis=1),
+            {"weight": (rng.random(n).astype(np.float32) + 0.25)})
+
+
+def test_adds_refresh_warm_and_bit_identical(g):
+    s = ServingSession(g)
+    s.query("sssp", source=3, keep_warm=True)
+    s.query("cc", keep_warm=True)
+    rng = np.random.default_rng(4)
+    adds, props = _rand_adds(rng, g.num_vertices, 25)
+    rep = s.apply_edge_deltas(adds=adds, add_props=props)
+    assert rep["rebuilt"] is False and rep["cache_invalidated"] == 0
+    assert rep["live_edges"] == g.num_edges + 25
+    modes = {r["hot"]: r["mode"] for r in rep["refreshed"]}
+    assert modes == {"sssp[3]": "warm", "cc": "warm"}
+    patched = s._inc.to_property_graph()
+    np.testing.assert_array_equal(
+        _definf(s.hot_result("sssp", source=3)), _ref_sssp(patched, 3))
+    fresh = ServingSession(patched)
+    np.testing.assert_array_equal(np.asarray(s.hot_result("cc")),
+                                  np.asarray(fresh.query("cc")[0]))
+
+
+def test_pagerank_refresh_within_tolerance(g):
+    s = ServingSession(g, refresh_iters=5)
+    s.query("pagerank", keep_warm=True)
+    rng = np.random.default_rng(5)
+    adds, props = _rand_adds(rng, g.num_vertices, 25)
+    rep = s.apply_edge_deltas(adds=adds, add_props=props)
+    (entry,) = rep["refreshed"]
+    assert entry["mode"] == "warm"
+    pr_cold, _ = s.query("pagerank")
+    drift = float(np.max(np.abs(np.asarray(s.hot_result("pagerank"))
+                                - np.asarray(pr_cold))))
+    # warm refresh truncates the power iteration: drift ~ damping^5
+    assert drift < 5e-3, drift
+
+
+def test_removals_force_cold_refresh(g):
+    s = ServingSession(g)
+    s.query("sssp", source=3, keep_warm=True)
+    pairs = np.stack([np.asarray(g.src), np.asarray(g.dst)], axis=1)
+    uniq = np.unique(pairs, axis=0)[:10]
+    rep = s.apply_edge_deltas(removals=uniq)
+    (entry,) = rep["refreshed"]
+    assert entry["mode"] == "cold"   # removals break monotone warm-start
+    patched = s._inc.to_property_graph()
+    assert patched.num_edges < g.num_edges
+    np.testing.assert_array_equal(
+        _definf(s.hot_result("sssp", source=3)), _ref_sssp(patched, 3))
+
+
+def test_capacity_overflow_rebuilds_and_invalidates(g):
+    s = ServingSession(g, slack=0.0)
+    s.query("sssp", source=3, keep_warm=True)
+    sig0 = s._graph_sig
+    rng = np.random.default_rng(6)
+    n = s._inc.capacity - s._inc.live_edges + 1   # one past the pads
+    adds, props = _rand_adds(rng, g.num_vertices, n)
+    rep = s.apply_edge_deltas(adds=adds, add_props=props)
+    assert rep["rebuilt"] is True
+    assert rep["cache_invalidated"] >= 1
+    assert s._graph_sig != sig0                    # version bumped
+    assert rep["live_edges"] == g.num_edges + n <= rep["capacity"]
+    (entry,) = rep["refreshed"]
+    assert entry["mode"] == "cold"   # new layout shape: no warm twin yet
+    patched = s._inc.to_property_graph()
+    np.testing.assert_array_equal(
+        _definf(s.hot_result("sssp", source=3)), _ref_sssp(patched, 3))
+    v, info = s.query("sssp", source=3)
+    assert info["cache_hit"]          # refresh repopulated the new shape
+
+
+def test_removing_absent_edge_raises(g):
+    s = ServingSession(g)
+    present = set(zip(np.asarray(g.src).tolist(),
+                      np.asarray(g.dst).tolist()))
+    absent = next((u, v) for u in range(g.num_vertices)
+                  for v in range(g.num_vertices) if (u, v) not in present)
+    with pytest.raises(ValueError):
+        s.apply_edge_deltas(removals=np.array([absent]))
+
+
+def test_incremental_graph_padding_is_invisible(g):
+    """A capacity-padded layout answers identically to the tight one."""
+    inc = IncrementalGraph(g, slack=0.5)
+    assert inc.capacity % 8 == 0 and inc.capacity > g.num_edges
+    u = repro.UniGPS()
+    d_tight, _ = u.sssp(g, root=3)
+    rt = inc.to_property_graph()
+    d_padded, _ = u.sssp(rt, root=3)
+    np.testing.assert_array_equal(d_tight, d_padded)
+
+
+def test_delta_frontier_host_and_device_agree():
+    ids = np.array([3, 7, 7, 11], np.int32)
+    fh = vcprog.delta_frontier(ids, 16)               # host path (numpy)
+    fd = vcprog.delta_frontier(jnp.asarray(ids), 16)  # device path
+    np.testing.assert_array_equal(np.asarray(fh.mask), np.asarray(fd.mask))
+    assert int(fh.count) == 3
+    mask = np.zeros(16, bool)
+    mask[[3, 7, 11]] = True
+    np.testing.assert_array_equal(np.asarray(fh.mask), mask)
+    fl = vcprog.delta_frontier(mask, 16, num_lanes=4)
+    assert fl.lane_mask.shape == (16, 4)
+
+
+# ---------------------------------------------------------------------------
+# info parity
+# ---------------------------------------------------------------------------
+
+SERVING_KEYS = {"cache_hit", "q_bucket", "warm_start", "engine", "kernel_on",
+                "frontier", "prefetch", "iterations", "active_at_end",
+                "converged", "bytes_exchanged"}
+
+
+def test_info_keys_query_and_ticket(session):
+    _, info = session.query("sssp", source=1)
+    missing = SERVING_KEYS - set(info)
+    assert not missing, f"query info missing {missing}"
+    tk = session.submit("sssp", 2)
+    tk.result()
+    missing = (SERVING_KEYS | {"batch_lane", "queue_wait_ms",
+                               "flush_reason"}) - set(tk.info)
+    assert not missing, f"ticket info missing {missing}"
+
+
+@pytest.mark.slow
+def test_info_parity_distributed_engine(g):
+    s = ServingSession(g, engine="distributed")
+    v, info = s.query("sssp", source=3)
+    missing = SERVING_KEYS - set(info)
+    assert not missing, f"distributed info missing {missing}"
+    assert info["bytes_exchanged"]["per_superstep"] > 0
+    np.testing.assert_array_equal(_definf(v), _ref_sssp(g, 3))
+    assert s.query("sssp", source=4)[1]["cache_hit"]
