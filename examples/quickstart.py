@@ -20,6 +20,7 @@ from repro import VCProgram
 # --- user program: inherit the base class, implement the five methods ----
 class UniSSSP(VCProgram):
     monoid = "min"  # fast-path hint; "general" also works
+    lane_attrs = ("root",)  # per-query: rides batched lanes traced
 
     def __init__(self, root=0):
         self.root = root

@@ -63,6 +63,13 @@ class UniGPS:
     the wire checksums and the NaN/monotonicity watchdogs with
     rollback-and-replay recovery. Every operator also accepts these (and
     `resume=`/`faults=`) as per-call overrides.
+
+    lint: "warn"|"error"|"off" — static-analyze user programs before
+    running them (`repro.lint`, docs/linting.md): every `vcprog()` call
+    checks the program's cross-superstep contracts and trace hygiene,
+    warning ("warn", default) or raising ("error") on findings. Results
+    cache per program class + graph schema, so hot request loops pay
+    one dict probe.
     """
 
     def __init__(self, engine: str = DEFAULT_ENGINE, kernel: str = "auto",
@@ -70,7 +77,9 @@ class UniGPS:
                  frontier: str = "dense", prefetch: str = "auto",
                  exchange: str = "exact", checkpoint_dir: str | None = None,
                  checkpoint_every: int = 0, guards: str | bool = "off",
-                 lane_chunk=None):
+                 lane_chunk=None, lint: str = "warn"):
+        from ..lint import resolve_lint_mode
+        self.lint = resolve_lint_mode(lint)
         self.engine = engine
         self.kernel = "on" if use_kernel else kernel
         if use_kernel is False:
@@ -151,10 +160,15 @@ class UniGPS:
     def vcprog(self, graph: PropertyGraph, user_program: VCProgram,
                max_iter: int = 100, engine: Optional[str] = None,
                output_file: Optional[str] = None, batch: int | None = None,
-               **kw):
+               lint: Optional[str] = None, **kw):
         """`user_program` may be one program, a sequence of programs (one
         query lane each), or one program with `batch=Q` — batched lanes
-        share every O(E) plane pass and return [V, Q] leaves."""
+        share every O(E) plane pass and return [V, Q] leaves. `lint=`
+        overrides the session's lint mode for this call."""
+        from .. import lint as lint_pkg
+        mode = self.lint if lint is None else \
+            lint_pkg.resolve_lint_mode(lint)
+        lint_pkg.check_and_report(user_program, graph=graph, mode=mode)
         eng = engine or self.engine
         vprops, info = run_vcprog(user_program, graph, max_iter=max_iter,
                                   engine=eng, batch=batch,

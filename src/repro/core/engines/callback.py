@@ -45,9 +45,26 @@ def _lane_operands(program):
     return ()
 
 
+def _no_tracer(tree, what: str):
+    """Host-side guard for the PR-1 bug class (lint rule UL203): a value
+    reaching eager host execution must be concrete. A leaked jit-scope
+    tracer here would either crash deep inside numpy with an opaque
+    TracerArrayConversionError or silently pin stale constants — fail
+    fast with the lint rule's name instead."""
+    for leaf in jax.tree.leaves(tree):
+        if isinstance(leaf, jax.core.Tracer):
+            raise RuntimeError(
+                f"UL203 callback-captures-traced-value: {what} reached "
+                f"the host callback as a jit-scope tracer ({leaf!r}). "
+                f"Traced values must ride the pure_callback operand "
+                f"list and be rebound host-side — run `python -m "
+                f"repro.lint` on the program (docs/linting.md#ul203).")
+
+
 def _host_program(program, lane_vals):
     """Rebind the concrete lane values delivered to the host callback."""
     if lane_vals:
+        _no_tracer(lane_vals, "a per-lane attribute value")
         return program._with_lane_values(
             tuple(jnp.asarray(v) for v in lane_vals))
     return program
@@ -100,7 +117,9 @@ class CallbackEngine:
             vp = jax.tree.map(jnp.asarray, vp)
             # rebuild the empty record host-side: the traced `empty` closure
             # is a jit-scope tracer and must not leak into eager execution
-            empty_h = jax.tree.map(jnp.asarray, prog.empty_message())
+            empty_h = prog.empty_message()
+            _no_tracer(empty_h, "the program's empty_message() record")
+            empty_h = jax.tree.map(jnp.asarray, empty_h)
             inbox, has_msg = message_plane.emit_and_combine(
                 prog, lo, vp, jnp.asarray(act), empty_h, kernel_on=False,
                 frontier=frontier)

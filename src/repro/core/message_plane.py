@@ -57,6 +57,7 @@ import jax.numpy as jnp
 
 from . import records
 from .graph_device import EdgeLayout, SPARSE_CAP_FRAC, workset_capacity
+from .knobs import knob_error
 from .vcprog import Record, RecordBatch, SegmentMeta, VCProgram, \
     frontier_mask, make_segment_meta
 
@@ -114,8 +115,7 @@ def resolve_frontier_mode(frontier) -> str:
     if frontier is None:
         return "dense"
     if frontier not in _FRONTIER:
-        raise ValueError(
-            f"frontier must be one of {_FRONTIER}, got {frontier!r}")
+        raise knob_error("frontier", frontier, _FRONTIER)
     return frontier
 
 
@@ -137,7 +137,8 @@ def resolve_kernel_mode(kernel) -> bool:
         return jax.default_backend() == "tpu"
     if kernel in ("on", "off"):
         return kernel == "on"
-    raise ValueError(f"kernel must be 'auto'|'on'|'off', got {kernel!r}")
+    raise knob_error("kernel", kernel, ("auto", "on", "off"),
+                     note="(or a legacy bool)")
 
 
 def resolve_kernel_arg(kernel, use_kernel) -> bool:
@@ -164,8 +165,7 @@ def resolve_prefetch_mode(prefetch) -> str:
     if prefetch is None:
         return "auto"
     if prefetch not in _PREFETCH:
-        raise ValueError(
-            f"prefetch must be one of {_PREFETCH}, got {prefetch!r}")
+        raise knob_error("prefetch", prefetch, _PREFETCH)
     return prefetch
 
 
@@ -591,10 +591,9 @@ def emit_and_combine(program: VCProgram, layout: EdgeLayout, vprops, active,
     Returns (inbox [num_segments] record batch, has_msg [num_segments]).
     """
     if mode not in _MODES:
-        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+        raise knob_error("mode", mode, _MODES)
     if multileaf not in _MULTILEAF:
-        raise ValueError(
-            f"multileaf must be one of {_MULTILEAF}, got {multileaf!r}")
+        raise knob_error("multileaf", multileaf, _MULTILEAF)
     frontier = resolve_frontier_mode(frontier)
     prefetch = resolve_prefetch_mode(prefetch)
     want_fused = mode == "fused" or (mode == "auto" and kernel_on)

@@ -106,6 +106,7 @@ def pagerank(graph: PropertyGraph, num_iters: int = 20, damping: float = 0.85,
 class SSSPProgram(vcprog.VCProgram):
     monoid = "min"
     monotonic = "decreasing"  # relaxations only ever shrink distances
+    lane_attrs = ("root",)    # per-query: must ride batched lanes traced
 
     def __init__(self, root: int):
         self.root = root
@@ -227,6 +228,7 @@ def connected_components(graph: PropertyGraph, max_iter: int = 200,
 class BFSProgram(vcprog.VCProgram):
     monoid = "min"
     monotonic = "decreasing"  # depths only ever shrink from BIG
+    lane_attrs = ("root",)    # per-query: must ride batched lanes traced
     BIG = 2**31 - 1  # python int (no backend init at import)
 
     def __init__(self, root: int):
@@ -288,6 +290,8 @@ def bfs(graph: PropertyGraph, root: int = 0, max_iter: int = 100,
 
 class PersonalizedPageRankProgram(PageRankProgram):
     """Random-walk-with-restart mass concentrated on a source vertex."""
+
+    lane_attrs = ("source",)  # per-query: must ride batched lanes traced
 
     def __init__(self, num_vertices: int, num_iters: int, source: int,
                  damping: float = 0.85):

@@ -221,6 +221,21 @@ class VCProgram:
     #: on it for correctness, only `guards="on"` reads it.
     monotonic = None
 
+    #: optional declaration of PER-QUERY constructor attributes (e.g.
+    #: ``lane_attrs = ("root",)``): attrs that distinguish one query from
+    #: the next and must therefore ride batched runs as traced lane
+    #: operands, never folded into the trace as constants. `as_batched`
+    #: forces declared attrs onto the lane axis automatically (even when
+    #: value-equal across lanes), and the linter's UL201 rule flags any
+    #: batch where a declared attr got baked anyway (a raw
+    #: ``BatchedProgram(...)`` construction bypassing `as_batched`).
+    lane_attrs = ()
+
+    #: lint-rule suppression list (e.g. ``lint_suppress = ("UL105",)``):
+    #: rule ids `repro.lint.check_program` must not report for this
+    #: class. See docs/linting.md.
+    lint_suppress = ()
+
     # -- Phase 0 (before iterations) --------------------------------------
     def init_vertex(self, vid, out_degree, vprop) -> Record:
         """Generate the initial property for each vertex."""
@@ -346,6 +361,25 @@ class BatchedProgram(VCProgram):
     @property
     def num_lanes(self) -> int:
         return self._q
+
+    # -- introspection (the linter's window into the common/lane split) ---
+
+    @property
+    def base_class(self):
+        """The lane programs' class."""
+        return self._cls
+
+    @property
+    def common_attrs(self):
+        """Dict of the lane-INVARIANT constructor attrs — these fold into
+        the trace as constants and are part of `lane_signature`."""
+        return dict(self._common)
+
+    @property
+    def lane_attr_names(self):
+        """Names of the per-lane constructor attrs, in lane-value order —
+        these ride jitted runners as traced operands."""
+        return tuple(k for k, _ in self._lane_attrs)
 
     # -- lane-value plumbing (compiled-runner reuse + chunking) -----------
     #
@@ -495,6 +529,17 @@ class BatchedProgram(VCProgram):
                                "_lane_msg": emit.astype(jnp.int32)}
 
 
+def _declared_lane_attrs(cls, instance, lane_attrs):
+    """Caller-forced lane attrs ∪ the class's declared per-query attrs
+    (`VCProgram.lane_attrs`), restricted to attrs the instance actually
+    carries — so `as_batched` never bakes a declared query attr as a
+    trace constant even when the caller forgot to force it (the PR 9
+    bug class, now fixed at the source instead of at every call site)."""
+    declared = tuple(getattr(cls, "lane_attrs", ()) or ())
+    present = set(instance.__dict__)
+    return tuple(set(lane_attrs) | (set(declared) & present))
+
+
 def as_batched(program, batch=None, lane_attrs=()):
     """Normalize `run_vcprog`'s (program, batch=) argument pair.
 
@@ -504,8 +549,12 @@ def as_batched(program, batch=None, lane_attrs=()):
     when no batching was requested. `lane_attrs` names attrs to force
     onto the traced lane axis even when value-equal (see
     :class:`BatchedProgram` — the serving tier's compiled-runner reuse
-    needs the per-source attr to always be an operand)."""
+    needs the per-source attr to always be an operand); attrs the class
+    declares in `VCProgram.lane_attrs` are forced automatically."""
     if isinstance(program, (list, tuple)):
+        lane_attrs = _declared_lane_attrs(type(program[0]), program[0],
+                                          lane_attrs) if program \
+            else lane_attrs
         program = BatchedProgram(program, lane_attrs=lane_attrs)
         if batch is not None and int(batch) != program.num_lanes:
             raise ValueError(
@@ -523,7 +572,9 @@ def as_batched(program, batch=None, lane_attrs=()):
                 f"batch={q} does not match the BatchedProgram's "
                 f"{program.num_lanes} lanes")
         return program
-    return BatchedProgram((program,) * q, lane_attrs=lane_attrs)
+    return BatchedProgram(
+        (program,) * q,
+        lane_attrs=_declared_lane_attrs(type(program), program, lane_attrs))
 
 
 # ---------------------------------------------------------------------------

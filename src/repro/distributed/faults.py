@@ -136,7 +136,8 @@ def resolve_guards_mode(guards) -> bool:
         return False
     if guards in (True, "on"):
         return True
-    raise ValueError(f'guards must be "on"/"off" (or bool), got {guards!r}')
+    from ..core.knobs import knob_error
+    raise knob_error("guards", guards, ("on", "off"), note="(or a bool)")
 
 
 # ---------------------------------------------------------------------------

@@ -54,8 +54,8 @@ def resolve_exchange_mode(exchange) -> str:
     if exchange is None:
         return "exact"
     if exchange not in _EXCHANGE:
-        raise ValueError(
-            f"exchange must be one of {_EXCHANGE}, got {exchange!r}")
+        from ..core.knobs import knob_error
+        raise knob_error("exchange", exchange, _EXCHANGE)
     return exchange
 
 

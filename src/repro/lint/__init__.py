@@ -1,0 +1,160 @@
+"""repro.lint — static analysis + retrace sentinel for VCPrograms.
+
+UniGPS's pitch is that an analyst writes one Python VCProg and the
+framework hides distributed execution — which means user mistakes must
+surface as diagnostics at program-definition time, not as silent wrong
+answers deep inside a jitted superstep loop. This package is that
+surface, in three layers:
+
+  layer 1  lint/contracts.py     eval_shape contract checks   UL10x
+  layer 2  lint/jaxpr_audit.py   trace/closure audits         UL20x
+  layer 3  lint/retrace.py       runtime compile counting     UL301
+
+Entry points:
+
+  * :func:`check_program` — lint one program (or BatchedProgram),
+    returns a list of :class:`Finding`;
+  * ``UniGPS(lint="warn"|"error"|"off")`` — every `vcprog()` call lints
+    the user program first (cached per program class);
+  * ``python -m repro.lint <files...>`` — the CLI (``--list-rules``,
+    ``--json``, ``--error``);
+  * ``ServingSession(sentinel=...)`` — the layer-3 retrace sentinel
+    guarding warm cache hits and in-capacity deltas (lint/retrace.py).
+
+Suppression: set ``lint_suppress = ("UL105", ...)`` on the program
+class, or pass ``rules=`` to check only a subset. See docs/linting.md.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from ..core import vcprog as _vcprog
+from . import contracts, jaxpr_audit, retrace
+from .retrace import (CompileWatcher, RetraceError, RetraceWarning,
+                      assert_compiles)
+from .rules import RULES, Finding, finding
+
+__all__ = ["CompileWatcher", "Finding", "LintError", "LintWarning",
+           "RULES", "RetraceError", "RetraceWarning", "assert_compiles",
+           "check_and_report", "check_program", "resolve_lint_mode"]
+
+
+class LintError(ValueError):
+    """Raised under lint='error' / --error; carries the findings."""
+
+    def __init__(self, findings):
+        self.findings = list(findings)
+        n = len(self.findings)
+        body = "\n".join(str(f) for f in self.findings)
+        super().__init__(
+            f"{n} lint finding(s) on the VCProgram:\n{body}")
+
+
+class LintWarning(UserWarning):
+    """Emitted per finding under lint='warn'."""
+
+
+def resolve_lint_mode(lint, knob: str = "lint") -> str:
+    """Validate the lint knob ("warn"|"error"|"off"; None = "warn")."""
+    if lint is None:
+        return "warn"
+    if lint in ("warn", "error", "off"):
+        return lint
+    from ..core.knobs import knob_error
+    raise knob_error(knob, lint, ("warn", "error", "off"))
+
+
+def check_program(program, *, graph=None, vertex_props=None,
+                  edge_props=None, query_attrs=(), rules=None):
+    """Lint one VCProgram (or BatchedProgram); returns the findings.
+
+    `graph` (or explicit `vertex_props`/`edge_props` samples) supplies
+    the property schema the synthetic records carry — lint with the real
+    graph when the program indexes custom props. `query_attrs` names
+    additional attrs that must ride batched lanes as operands (UL201),
+    on top of the class's own `lane_attrs` declaration. `rules`
+    restricts checking to the given rule ids; the class's
+    `lint_suppress` tuple always filters its listed ids out.
+    """
+    base = program
+    batched = isinstance(program, _vcprog.BatchedProgram)
+    if batched:
+        base = program._lane_program(
+            [vals[0] for _, vals in program._lane_attrs])
+    samples = contracts.synthetic_samples(
+        base, graph=graph, vertex_props=vertex_props,
+        edge_props=edge_props)
+
+    findings = list(contracts.check_contracts(base, samples))
+    findings += jaxpr_audit.audit_callbacks(base)
+    if batched:
+        findings += jaxpr_audit.audit_batched(program, samples,
+                                              query_attrs=query_attrs)
+
+    suppress = set(getattr(type(base), "lint_suppress", ()) or ())
+    findings = [f for f in findings if f.rule not in suppress]
+    if rules is not None:
+        allow = set(rules)
+        findings = [f for f in findings if f.rule in allow]
+    # deterministic order: by rule id, then method
+    return sorted(findings, key=lambda f: (f.rule, f.method or "",
+                                           f.message))
+
+
+# -- UniGPS(lint=...) integration -------------------------------------------
+
+#: lint results cached per (program classes, attr names, prop schema):
+#: the rules are value-independent in outcome, so one check per class
+#: per graph schema keeps the per-call overhead at one dict probe.
+_checked: dict = {}
+
+
+def _cache_key(program, graph):
+    progs = program if isinstance(program, (list, tuple)) else (program,)
+    ident = tuple((type(p), tuple(sorted(p.__dict__)))
+                  if not isinstance(p, _vcprog.BatchedProgram)
+                  else (type(p), p.base_class, p.lane_attr_names,
+                        tuple(sorted(p.common_attrs)))
+                  for p in progs)
+    schema = None
+    if graph is not None:
+        schema = (tuple(sorted((k, str(np.asarray(v).dtype))
+                               for k, v in (graph.vertex_props or {})
+                               .items())),
+                  tuple(sorted((k, str(np.asarray(v).dtype))
+                               for k, v in (graph.edge_props or {})
+                               .items())))
+    return (ident, schema)
+
+
+def check_and_report(program, *, graph=None, mode="warn") -> list:
+    """The `UniGPS.vcprog` hook: lint `program` (one program, a program
+    list, or a BatchedProgram) and warn/raise per `mode`. Results are
+    cached per program class + graph schema, so a hot request loop pays
+    one dict probe."""
+    mode = resolve_lint_mode(mode)
+    if mode == "off":
+        return []
+    key = _cache_key(program, graph)
+    findings = _checked.get(key)
+    if findings is None:
+        progs = (program if isinstance(program, (list, tuple))
+                 else (program,))
+        findings = []
+        seen = set()
+        for p in progs:
+            cls = (p.base_class if isinstance(p, _vcprog.BatchedProgram)
+                   else type(p))
+            if cls in seen:
+                continue
+            seen.add(cls)
+            findings += check_program(p, graph=graph)
+        _checked[key] = findings
+    if findings:
+        if mode == "error":
+            raise LintError(findings)
+        for f in findings:
+            warnings.warn(str(f), LintWarning, stacklevel=3)
+    return findings

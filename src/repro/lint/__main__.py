@@ -1,0 +1,7 @@
+"""Entry point: ``python -m repro.lint`` (see lint/cli.py)."""
+import sys
+
+from .cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

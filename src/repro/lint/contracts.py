@@ -1,0 +1,383 @@
+"""Contract checker — layer 1 of the VCProg linter (rules UL10x).
+
+Abstractly interprets the five VCProgram methods with `jax.eval_shape`
+on synthetic scalar records (no real compute, no compile) to verify the
+cross-superstep contracts the engines rely on:
+
+  * the state record is CLOSED under vertex_compute (UL101) — the
+    lax.while_loop carry must keep one pytree structure / dtype set;
+  * emit_message and merge_message stay on empty_message()'s schema
+    (UL102) — inboxes are tiled from the empty record;
+  * the monoid declaration mirrors the message record (UL103), and
+    empty_message() really is merge_message's identity, consistent with
+    the declared named monoid (UL104, checked on concrete samples);
+  * the declared `monotonic` direction does not contradict the combine
+    monoid (UL105);
+  * record leaves are scalars or [D] vectors and the is_active/is_emit
+    flags are scalars (UL106) — the batched lane packing and the packed
+    fused kernel's slab layout require it.
+
+Methods that raise are reported as UL100 (or UL202 for tracer-to-bool
+escapes, classified by lint/jaxpr_audit.py) and dependent checks are
+skipped rather than cascading.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rules import Finding, finding
+
+__all__ = ["Samples", "check_contracts", "synthetic_samples"]
+
+_NAMED_OPS = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+_MONOIDS = ("sum", "min", "max", "general")
+
+
+class Samples(NamedTuple):
+    """Synthetic per-vertex/per-edge scalar inputs for one lint pass."""
+
+    vid: Any
+    dst: Any
+    out_degree: Any
+    it: Any
+    vprop: Any
+    eprop: Any
+
+
+def _prop_sample(props) -> dict:
+    """One scalar (or [D]-vector) sample record from a props dict of
+    per-vertex/per-edge arrays (or of already-scalar samples)."""
+    out = {}
+    for k, v in (props or {}).items():
+        a = np.asarray(v)
+        out[k] = jnp.asarray(a[0] if a.ndim >= 1 else a)
+    return out
+
+
+def synthetic_samples(program=None, *, graph=None, vertex_props=None,
+                      edge_props=None) -> Samples:
+    """Build the synthetic inputs a lint pass feeds the five methods.
+
+    With a `graph` (PropertyGraph), property samples carry the real
+    per-vertex/per-edge schema. Without one, the vertex record is empty
+    and the edge record carries a float32 "weight" (what the built-in
+    weighted loaders produce) — programs indexing other props should be
+    linted with their graph.
+    """
+    if graph is not None:
+        vertex_props = graph.vertex_props
+        edge_props = graph.edge_props
+    eprop = (_prop_sample(edge_props) if edge_props
+             else {"weight": jnp.float32(1.0)})
+    return Samples(vid=jnp.int32(0), dst=jnp.int32(1),
+                   out_degree=jnp.int32(1), it=jnp.int32(1),
+                   vprop=_prop_sample(vertex_props), eprop=eprop)
+
+
+# ---------------------------------------------------------------------------
+# pytree spec comparison
+# ---------------------------------------------------------------------------
+
+def _leaf_paths(tree):
+    """(path-string, leaf) pairs, flattened with key paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _spec(leaf):
+    """(shape, dtype) of an array, ShapeDtypeStruct, or python scalar."""
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        shape = np.shape(leaf)
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:
+        dtype = jnp.result_type(leaf)
+    return (tuple(shape), np.dtype(dtype))
+
+
+def _diff_specs(got, want) -> Optional[str]:
+    """None when the two pytrees agree in structure, shapes and dtypes;
+    otherwise a human-readable description of the first difference."""
+    gs = jax.tree_util.tree_structure(got)
+    ws = jax.tree_util.tree_structure(want)
+    if gs != ws:
+        return f"pytree structure {gs} != expected {ws}"
+    for (path, g), (_, w) in zip(_leaf_paths(got), _leaf_paths(want)):
+        if _spec(g) != _spec(w):
+            return (f"leaf {path or '<root>'}: "
+                    f"{_spec(g)[1].name}{list(_spec(g)[0])} != expected "
+                    f"{_spec(w)[1].name}{list(_spec(w)[0])}")
+    return None
+
+
+def _eval(method, *args):
+    """jax.eval_shape with positional concrete/abstract sample args."""
+    return jax.eval_shape(method, *args)
+
+
+def _classify_failure(program, method_name: str, exc) -> Finding:
+    from . import jaxpr_audit
+    return jaxpr_audit.classify_method_exception(program, method_name, exc)
+
+
+# ---------------------------------------------------------------------------
+# rule bodies
+# ---------------------------------------------------------------------------
+
+def _monoid_table(program, empty_spec, out):
+    """Resolve the declared monoid to a per-leaf name list (in flatten
+    order) or None for general/invalid; UL103 findings appended to out."""
+    m = getattr(program, "monoid", "general")
+    if isinstance(m, str):
+        if m not in _MONOIDS:
+            out.append(finding(
+                "UL103", program,
+                f"monoid={m!r} is not one of {_MONOIDS}",
+                fix="declare monoid as one name, or a pytree of names "
+                    "mirroring the message record"))
+            return None
+        if m == "general":
+            return None
+        return [m] * len(jax.tree_util.tree_leaves(empty_spec))
+    # per-leaf table: validate structure AND names ourselves —
+    # message_plane.leaf_monoids treats unknown names as "general", the
+    # linter must flag them (a typo like "mni" silently forfeits the
+    # fast paths at best, hides a wrong declaration at worst)
+    names, mdef = jax.tree_util.tree_flatten(m)
+    if mdef != jax.tree_util.tree_structure(empty_spec):
+        out.append(finding(
+            "UL103", program,
+            f"per-leaf monoid table {m!r} does not mirror the message "
+            "record returned by empty_message()",
+            fix="make the table's pytree structure exactly match "
+                "empty_message()'s"))
+        return None
+    bad = [n for n in names if n not in _MONOIDS]
+    if bad:
+        out.append(finding(
+            "UL103", program,
+            f"per-leaf monoid table has invalid name(s) {bad} — each "
+            f"entry must be one of {_MONOIDS}"))
+        return None
+    if any(n == "general" for n in names):
+        return None
+    return list(names)
+
+
+def _sample_values(spec, lo_hi=(-3, 7)):
+    """A [K]-stacked concrete record with varied per-leaf sample values,
+    broadcast to each leaf's shape (K = 3 samples)."""
+    vals = np.linspace(lo_hi[0], lo_hi[1], 3)
+
+    def leaf(sd):
+        shape, dtype = _spec(sd)
+        base = vals.astype(np.float64)
+        if np.issubdtype(np.dtype(dtype), np.integer):
+            base = np.round(base)
+        if np.dtype(dtype) == np.bool_:
+            base = base > 0
+        a = np.asarray(base, dtype=np.dtype(dtype))
+        return jnp.asarray(np.broadcast_to(
+            a.reshape((3,) + (1,) * len(shape)), (3,) + shape).copy())
+
+    return jax.tree.map(leaf, spec)
+
+
+def _identity_checks(program, empty_spec, names, out):
+    """UL104 on concrete values: merge(x, empty) == x (both sides), and
+    merge agrees with the declared named monoid on samples."""
+    try:
+        empty = jax.tree.map(jnp.asarray, program.empty_message())
+        x = _sample_values(empty_spec)
+        y = _sample_values(empty_spec, lo_hi=(-1, 5))
+        e3 = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (3,) + jnp.shape(l)), empty)
+        merge = jax.vmap(program.merge_message)
+        left = merge(x, e3)
+        right = merge(e3, x)
+        merged = merge(x, y)
+    except Exception as e:  # noqa: BLE001 — any failure is the finding
+        out.append(_classify_failure(program, "merge_message", e))
+        return
+    for side, res in (("merge(x, empty)", left), ("merge(empty, x)", right)):
+        bad = _first_unequal(res, x)
+        if bad:
+            out.append(finding(
+                "UL104", program,
+                f"empty_message() is not merge_message's identity: "
+                f"{side} changed leaf {bad}",
+                method="empty_message",
+                fix="return the exact identity of the combine (0 for sum, "
+                    "+inf-like for min, -inf-like for max)"))
+            return
+    if names is None:
+        return
+    leaves_m = jax.tree_util.tree_leaves(merged)
+    leaves_x = jax.tree_util.tree_leaves(x)
+    leaves_y = jax.tree_util.tree_leaves(y)
+    paths = [p for p, _ in _leaf_paths(empty_spec)]
+    for name, path, lm, lx, ly in zip(names, paths, leaves_m,
+                                      leaves_x, leaves_y):
+        want = _NAMED_OPS[name](lx, ly)
+        if not bool(jnp.all(lm == want)):
+            out.append(finding(
+                "UL104", program,
+                f"merge_message disagrees with the declared {name!r} "
+                f"monoid on leaf {path} (sample fold mismatch)",
+                method="merge_message",
+                fix=f"make merge_message compute the {name} of the two "
+                    "messages on this leaf, or fix the monoid declaration"))
+            return
+
+
+def _first_unequal(got, want) -> Optional[str]:
+    for (path, g), (_, w) in zip(_leaf_paths(got), _leaf_paths(want)):
+        if not bool(jnp.all(g == w)):
+            return path or "<root>"
+    return None
+
+
+def _monotonic_check(program, names, out):
+    mono = getattr(program, "monotonic", None)
+    if mono is None:
+        return
+    if mono not in ("decreasing", "increasing"):
+        out.append(finding(
+            "UL105", program,
+            f"monotonic={mono!r} is not 'decreasing'|'increasing'|None"))
+        return
+    if names is None:
+        return  # general monoid: direction is unverifiable, trust it
+    conflict = "max" if mono == "decreasing" else "min"
+    bad = [n for n in names if n in (conflict, "sum")]
+    if bad:
+        out.append(finding(
+            "UL105", program,
+            f"monotonic={mono!r} contradicts the {sorted(set(bad))} "
+            "combine monoid: folding toward "
+            f"{'larger' if mono == 'decreasing' else 'smaller'}/"
+            "accumulated values cannot keep the state "
+            f"{mono} every superstep",
+            fix="drop the monotonic declaration or fix the monoid — "
+                "guards='on' would trip its watchdog on correct runs"))
+
+
+def _lane_shape_checks(program, state_spec, empty_spec, act_spec,
+                       emit_spec, out):
+    for what, spec in (("state (init_vertex)", state_spec),
+                       ("message (empty_message)", empty_spec)):
+        if spec is None:
+            continue
+        for path, leaf in _leaf_paths(spec):
+            shape = _spec(leaf)[0]
+            if len(shape) > 1:
+                out.append(finding(
+                    "UL106", program,
+                    f"{what} leaf {path} has shape "
+                    f"{list(shape)} — record leaves must be "
+                    "scalars or rank-1 [D] vectors to pack into the "
+                    "plane's slab lanes",
+                    fix="flatten the leaf to [D] or split it into "
+                        "multiple leaves"))
+    for what, method, order, spec in (
+            ("is_active", "vertex_compute", "(new_state, is_active)",
+             act_spec),
+            ("is_emit", "emit_message", "(is_emit, msg)", emit_spec)):
+        if spec is None:
+            continue
+        leaves = jax.tree_util.tree_leaves(spec)
+        if len(leaves) != 1:
+            out.append(finding(
+                "UL106", program,
+                f"{what} is a {len(leaves)}-leaf pytree — must be one "
+                "scalar flag per vertex/edge",
+                method=method,
+                fix=f"return {order}; a record in the flag slot usually "
+                    "means the pair is swapped"))
+        elif _spec(leaves[0])[0] != ():
+            out.append(finding(
+                "UL106", program,
+                f"{what} has shape {list(_spec(leaves[0])[0])} — must be "
+                "a scalar (one flag per vertex/edge)", method=method))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def check_contracts(program, samples: Samples) -> list:
+    """Run every layer-1 rule; returns the findings (possibly empty)."""
+    out: list = []
+
+    try:
+        state = _eval(program.init_vertex, samples.vid,
+                      samples.out_degree, samples.vprop)
+    except Exception as e:  # noqa: BLE001
+        out.append(_classify_failure(program, "init_vertex", e))
+        state = None
+    try:
+        empty = _eval(program.empty_message)
+    except Exception as e:  # noqa: BLE001
+        out.append(_classify_failure(program, "empty_message", e))
+        empty = None
+
+    act_spec = emit_spec = None
+    if state is not None and empty is not None:
+        # UL101: state closed under vertex_compute
+        try:
+            new_state, act_spec = _eval(program.vertex_compute, state,
+                                        empty, samples.it)
+            diff = _diff_specs(new_state, state)
+            if diff:
+                out.append(finding(
+                    "UL101", program,
+                    f"vertex_compute's state is not closed: {diff}",
+                    method="vertex_compute",
+                    fix="return a record with exactly init_vertex's "
+                        "structure, shapes and dtypes (cast with "
+                        ".astype where needed)"))
+        except Exception as e:  # noqa: BLE001
+            out.append(_classify_failure(program, "vertex_compute", e))
+
+        # UL102: emit + merge stay on the empty schema
+        try:
+            emit_spec, msg = _eval(program.emit_message, samples.vid,
+                                   samples.dst, state, samples.eprop)
+            diff = _diff_specs(msg, empty)
+            if diff:
+                out.append(finding(
+                    "UL102", program,
+                    f"emit_message's message is off-schema: {diff}",
+                    method="emit_message",
+                    fix="emit exactly empty_message()'s record structure "
+                        "and dtypes"))
+        except Exception as e:  # noqa: BLE001
+            out.append(_classify_failure(program, "emit_message", e))
+        try:
+            merged = _eval(program.merge_message, empty, empty)
+            diff = _diff_specs(merged, empty)
+            if diff:
+                out.append(finding(
+                    "UL102", program,
+                    f"merge_message's result is off-schema: {diff}",
+                    method="merge_message",
+                    fix="merge must be closed over the message record "
+                        "(watch integer/float promotion)"))
+        except Exception as e:  # noqa: BLE001
+            out.append(_classify_failure(program, "merge_message", e))
+
+    # UL103/UL104/UL105: monoid declaration vs merge behavior
+    names = None
+    if empty is not None:
+        names = _monoid_table(program, empty, out)
+        if not any(f.rule == "UL102" for f in out):
+            _identity_checks(program, empty, names, out)
+    _monotonic_check(program, names, out)
+
+    # UL106: lane/slab shape rules
+    _lane_shape_checks(program, state, empty, act_spec, emit_spec, out)
+    return out

@@ -1,0 +1,342 @@
+"""Jaxpr auditor — layer 2 of the VCProg linter (rules UL20x).
+
+Three checks that need to look at (or at the failure of) the *trace*
+of the user's methods rather than their shapes:
+
+UL201 — trace-constant query attrs. A :class:`BatchedProgram` splits
+constructor attrs into lane-invariant values (folded into the trace as
+constants) and per-lane values (traced [Q] operands). A PER-QUERY attr
+(SSSP's `root`) that happens to be value-equal across a batch lands on
+the constant side — correct for that batch, but a runner cached on the
+lane *signature* (attr names, not values) silently replays the baked
+value for different queries. Exactly the PR-9 serving bug: a warmed
+width-1 sssp runner answered every source with the warmup root's
+distances. The audit takes each attr the program declares per-query
+(`VCProgram.lane_attrs`, or the caller's `query_attrs=`), and — when it
+sits on the constant side — diffs the jaxprs of the five methods under
+two different attr values. Differing jaxprs mean the value is baked
+into the traced code; the fix is `as_batched(..., lane_attrs=(name,))`.
+
+UL202 — tracer-to-Python escapes. `if traced:` raises JAX's
+TracerBoolConversionError mid-trace with a framework stack; the linter
+reports it as a diagnostic anchored to the user's source line.
+
+UL203/UL204 — pure_callback closure hygiene (AST). A host callback
+outlives the trace: closing over a method parameter (or anything
+data-derived from one) leaks a tracer into eager host execution — the
+PR-1 callback-engine bug (`engines/callback.py` now rebuilds its empty
+record host-side for this reason). jax/jnp calls inside a host callback
+additionally dispatch (and first compile) eagerly per invocation. Both
+are detected on the method's AST, only for methods that actually call
+`pure_callback`/`io_callback` — zero cost and zero false positives for
+ordinary programs.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import vcprog
+from .rules import Finding, finding
+
+__all__ = ["audit_batched", "audit_callbacks", "classify_method_exception",
+           "method_location"]
+
+_METHODS = ("init_vertex", "empty_message", "merge_message",
+            "vertex_compute", "emit_message")
+_CALLBACK_NAMES = ("pure_callback", "io_callback")
+_JAX_ROOTS = ("jax", "jnp")
+
+
+# ---------------------------------------------------------------------------
+# source locations + exception classification (UL202)
+# ---------------------------------------------------------------------------
+
+def method_location(program, method_name: str) -> str:
+    """`file:line` of a method definition, best effort."""
+    cls = program if isinstance(program, type) else type(program)
+    try:
+        fn = getattr(cls, method_name)
+        src_file = inspect.getsourcefile(fn)
+        _, line = inspect.getsourcelines(fn)
+        return f"{src_file}:{line}"
+    except (OSError, TypeError):
+        return ""
+
+
+def _user_frame_location(program, exc) -> str:
+    """The deepest traceback frame inside the program class's source
+    file — where the user's code actually tripped."""
+    cls = type(program)
+    try:
+        src_file = inspect.getsourcefile(cls)
+    except TypeError:
+        src_file = None
+    loc = ""
+    tb = exc.__traceback__
+    while tb is not None:
+        if src_file and tb.tb_frame.f_code.co_filename == src_file:
+            loc = f"{src_file}:{tb.tb_lineno}"
+        tb = tb.tb_next
+    return loc
+
+
+def classify_method_exception(program, method_name: str, exc) -> Finding:
+    """Turn an exception raised while abstractly interpreting a method
+    into the right finding: UL202 for tracer→Python escapes (with the
+    user's source line), UL100 otherwise."""
+    loc = _user_frame_location(program, exc) \
+        or method_location(program, method_name)
+    if isinstance(exc, jax.errors.ConcretizationTypeError):
+        return finding(
+            "UL202", program,
+            "a traced value escapes to Python control flow "
+            f"({type(exc).__name__}) — `if`/`while`/`int()` on a traced "
+            "array cannot work inside the compiled superstep loop",
+            method=method_name, location=loc,
+            fix="branch with jnp.where / jax.lax.cond / jax.lax.select "
+                "instead of Python control flow")
+    return finding(
+        "UL100", program,
+        f"{method_name} raised {type(exc).__name__}: {exc}",
+        method=method_name, location=loc,
+        fix="the method must run on synthetic scalar records; if it "
+            "indexes graph properties, lint with the real graph "
+            "(UniGPS(lint=...) does) or pass prop samples")
+
+
+# ---------------------------------------------------------------------------
+# UL201: query attrs baked as trace constants
+# ---------------------------------------------------------------------------
+
+def _perturb(v):
+    """A second, different sample value for a numeric attr (to diff the
+    jaxprs under); None when the attr is not perturbable."""
+    if isinstance(v, bool) or (isinstance(v, np.ndarray) and v.ndim == 0
+                               and v.dtype == np.bool_):
+        return not bool(v)
+    if isinstance(v, (int, float, np.integer, np.floating)):
+        return v + 1
+    return None
+
+
+def _concrete_like(spec):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(getattr(sd, "shape", ()),
+                             getattr(sd, "dtype", jnp.float32)), spec)
+
+
+def _method_jaxprs(program, samples) -> Optional[dict]:
+    """String jaxprs of the five methods on synthetic inputs; None when
+    any method fails to trace (contracts already reports that)."""
+    try:
+        state = jax.eval_shape(program.init_vertex, samples.vid,
+                               samples.out_degree, samples.vprop)
+        empty = jax.eval_shape(program.empty_message)
+        state_c, empty_c = _concrete_like(state), _concrete_like(empty)
+        return {
+            "init_vertex": str(jax.make_jaxpr(program.init_vertex)(
+                samples.vid, samples.out_degree, samples.vprop)),
+            "empty_message": str(jax.make_jaxpr(program.empty_message)()),
+            "merge_message": str(jax.make_jaxpr(program.merge_message)(
+                empty_c, empty_c)),
+            "vertex_compute": str(jax.make_jaxpr(program.vertex_compute)(
+                state_c, empty_c, samples.it)),
+            "emit_message": str(jax.make_jaxpr(program.emit_message)(
+                samples.vid, samples.dst, state_c, samples.eprop)),
+        }
+    except Exception:  # noqa: BLE001 — tracing failures belong to layer 1
+        return None
+
+
+def audit_batched(bp, samples, query_attrs=()) -> list:
+    """UL201 over an actual BatchedProgram: every declared-per-query
+    attr must be on the traced-lane side of the common/lane split."""
+    if not isinstance(bp, vcprog.BatchedProgram):
+        return []
+    declared = tuple(getattr(bp.base_class, "lane_attrs", ()) or ())
+    expected = sorted(set(declared) | set(query_attrs))
+    common = bp.common_attrs
+    out = []
+    for name in expected:
+        if name not in common:
+            continue  # riding the lanes as an operand — correct
+        v = common[name]
+        v2 = _perturb(v)
+        baked_in = None
+        if v2 is not None:
+            base = bp._lane_program([vals[0] for _, vals
+                                     in bp._lane_attrs])
+            alt = bp._lane_program([vals[0] for _, vals
+                                    in bp._lane_attrs])
+            setattr(alt, name, v2)
+            j1, j2 = _method_jaxprs(base, samples), \
+                _method_jaxprs(alt, samples)
+            if j1 is not None and j2 is not None:
+                baked_in = sorted(m for m in _METHODS if j1[m] != j2[m])
+                if not baked_in:
+                    continue  # never consumed by a trace — harmless
+        consumed = (f" (baked into the trace of "
+                    f"{', '.join(baked_in)})" if baked_in else "")
+        out.append(finding(
+            "UL201", bp.base_class,
+            f"per-query attr {name!r} is value-equal across the "
+            f"{bp.num_lanes} lanes and was folded in as a trace "
+            f"constant{consumed} — a runner cached on the lane "
+            "signature would replay this batch's value "
+            f"({v!r}) for different queries",
+            location=method_location(bp.base_class, "__init__"),
+            fix=f"build the batch via as_batched(..., lane_attrs="
+                f"({name!r},)) (or construct programs through "
+                "as_batched, which forces declared "
+                f"{bp.base_class.__name__}.lane_attrs automatically) so "
+                f"{name!r} rides the jitted runner as a traced operand"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# UL203/UL204: pure_callback closure hygiene
+# ---------------------------------------------------------------------------
+
+def _is_callback_call(node: ast.Call) -> bool:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id in _CALLBACK_NAMES
+    if isinstance(fn, ast.Attribute):
+        return fn.attr in _CALLBACK_NAMES
+    return False
+
+
+def _root_name(node) -> Optional[str]:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class _Names(ast.NodeVisitor):
+    """Loaded/bound name sets of one function body (non-recursive into
+    nested function definitions for the bound set)."""
+
+    def __init__(self):
+        self.loaded = set()
+        self.bound = set()
+        self.jax_calls = []
+
+    def visit_Name(self, node):
+        if isinstance(node.ctx, ast.Load):
+            self.loaded.add(node.id)
+        else:
+            self.bound.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        root = _root_name(node.func)
+        if root in _JAX_ROOTS:
+            self.jax_calls.append((root, node.lineno))
+        self.generic_visit(node)
+
+
+def _callback_fn_node(call: ast.Call, fn_defs: dict):
+    """The AST of the host function passed as the callback's first
+    argument: a lambda, or a function defined in the enclosing method."""
+    if not call.args:
+        return None
+    cb = call.args[0]
+    if isinstance(cb, ast.Lambda):
+        return cb
+    if isinstance(cb, ast.Name):
+        return fn_defs.get(cb.id)
+    return None
+
+
+def _tainted_locals(method_node: ast.AST, params) -> set:
+    """Method-scope names carrying traced data: the method's parameters
+    plus locals assigned from expressions that read a tainted name
+    (light forward taint, statement order)."""
+    tainted = set(params)
+    for stmt in ast.walk(method_node):
+        if isinstance(stmt, ast.Assign) and not isinstance(
+                stmt.value, (ast.Lambda,)):
+            reads = {n.id for n in ast.walk(stmt.value)
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)}
+            if reads & tainted:
+                for tgt in stmt.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+    return tainted
+
+
+def audit_callbacks(program) -> list:
+    """UL203/UL204 over every method that calls pure_callback."""
+    cls = type(program) if not isinstance(program, type) else program
+    out = []
+    for mname in _METHODS:
+        fn = getattr(cls, mname, None)
+        if fn is None:
+            continue
+        try:
+            src = textwrap.dedent(inspect.getsource(fn))
+            tree = ast.parse(src)
+            src_file = inspect.getsourcefile(fn)
+            base_line = inspect.getsourcelines(fn)[1] - 1
+        except (OSError, TypeError, SyntaxError, IndentationError):
+            continue  # dynamically built method — nothing to scan
+        mdef = tree.body[0]
+        if not isinstance(mdef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = [n for n in ast.walk(mdef)
+                 if isinstance(n, ast.Call) and _is_callback_call(n)]
+        if not calls:
+            continue
+        params = [a.arg for a in mdef.args.args if a.arg != "self"]
+        fn_defs = {n.name: n for n in ast.walk(mdef)
+                   if isinstance(n, ast.FunctionDef) and n is not mdef}
+        tainted = _tainted_locals(mdef, params)
+        for call in calls:
+            cb = _callback_fn_node(call, fn_defs)
+            if cb is None:
+                continue
+            names = _Names()
+            body = cb.body if isinstance(cb.body, list) else [cb.body]
+            for stmt in body:
+                names.visit(stmt)
+            cb_params = {a.arg for a in cb.args.args}
+            free = names.loaded - names.bound - cb_params - {"self"}
+            leaked = sorted(free & tainted)
+            loc = (f"{src_file}:{base_line + call.lineno}"
+                   if src_file else "")
+            if leaked:
+                out.append(finding(
+                    "UL203", cls,
+                    f"the host callback closes over traced value(s) "
+                    f"{leaked} from the enclosing method — the closure "
+                    "outlives the trace, so the tracer leaks into eager "
+                    "host execution",
+                    method=mname, location=loc,
+                    fix=f"pass {leaked} through the callback's operand "
+                        "list (extra positional args of pure_callback) "
+                        "and take them as host-function parameters"))
+            jax_in_cb = [(root, ln) for root, ln in names.jax_calls]
+            if jax_in_cb:
+                root, ln = jax_in_cb[0]
+                out.append(finding(
+                    "UL204", cls,
+                    f"the host callback calls {root}.* eagerly "
+                    f"({len(jax_in_cb)} call site(s)) — each host "
+                    "invocation dispatches (and first compiles) these "
+                    "ops outside the compiled superstep loop",
+                    method=mname,
+                    location=(f"{src_file}:{base_line + ln}"
+                              if src_file else ""),
+                    fix="compute with numpy inside host callbacks, or "
+                        "move the op out of the callback into the "
+                        "traced method body"))
+    return out

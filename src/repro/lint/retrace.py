@@ -1,0 +1,136 @@
+"""Retrace sentinel — runtime layer 3 of the linter (rule UL301).
+
+The serving tier's core latency claim is "a warm request replays a
+compiled executable" (docs/serving.md): after `warmup()`, neither a
+cache-hit query nor an in-capacity `apply_edge_deltas` may trigger a
+single new XLA compile. That invariant used to be unverifiable — a
+leaked trace constant or a shape wobble showed up only as a latency
+blip. This module counts *actual backend compiles* via JAX's monitoring
+events and turns "compiled when it shouldn't have" into a hard error.
+
+Mechanism: `jax.monitoring` emits one
+``/jax/core/compile/backend_compile_duration`` duration event per XLA
+compilation (jitted functions AND first-use eager ops). One process-wide
+listener increments a monotonic counter; :class:`CompileWatcher`
+snapshots it around a code region. There is no unregister API, so the
+listener is registered once and never removed — it costs one integer
+add per compile.
+
+Use directly::
+
+    with retrace.assert_compiles(0, label="warm replay"):
+        runner(gdev, lane_values)          # raises RetraceError on compile
+
+or through the pytest fixture ``compile_watcher`` (tests/conftest.py),
+or implicitly through ``ServingSession(sentinel=...)`` which guards
+every warm cache hit and in-capacity delta patch.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import warnings
+
+__all__ = ["CompileWatcher", "RetraceError", "RetraceWarning", "arm",
+           "assert_compiles", "compile_count", "resolve_sentinel_mode"]
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_count = 0
+_armed = False
+
+
+class RetraceError(RuntimeError):
+    """A retrace budget was exceeded (lint rule UL301)."""
+
+
+class RetraceWarning(UserWarning):
+    """A retrace budget was exceeded under a warn-mode sentinel."""
+
+
+def _listener(event: str, duration: float, **kw) -> None:
+    global _count
+    if event == _COMPILE_EVENT:
+        with _lock:
+            _count += 1
+
+
+def arm() -> None:
+    """Register the compile-event listener (idempotent). Compiles that
+    happen before the first `arm()` are not counted; `ServingSession`
+    and `CompileWatcher` arm on construction/entry, so anything they
+    observe is counted."""
+    global _armed
+    with _lock:
+        if _armed:
+            return
+        _armed = True
+    import jax
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+
+
+def compile_count() -> int:
+    """Monotonic count of backend compiles observed since `arm()`."""
+    arm()
+    with _lock:
+        return _count
+
+
+class CompileWatcher:
+    """Context manager counting XLA compiles inside its region.
+
+    ``watcher.count`` is live inside the region and frozen at exit.
+    Watchers nest freely (they only read the global counter)."""
+
+    def __init__(self):
+        self._start = 0
+        self._stop = None
+
+    def __enter__(self):
+        self._start = compile_count()
+        self._stop = None
+        return self
+
+    def __exit__(self, *exc):
+        self._stop = compile_count()
+        return False
+
+    @property
+    def count(self) -> int:
+        stop = self._stop if self._stop is not None else compile_count()
+        return stop - self._start
+
+
+def resolve_sentinel_mode(sentinel, knob: str = "sentinel") -> str:
+    """Validate a sentinel/lint tri-state knob ("error"|"warn"|"off";
+    None = "error")."""
+    if sentinel is None:
+        return "error"
+    if sentinel in ("error", "warn", "off"):
+        return sentinel
+    from ..core.knobs import knob_error
+    raise knob_error(knob, sentinel, ("error", "warn", "off"))
+
+
+@contextlib.contextmanager
+def assert_compiles(budget: int = 0, *, action: str = "error",
+                    label: str = ""):
+    """Assert that at most `budget` XLA compiles happen in the region.
+
+    action: "error" raises :class:`RetraceError`, "warn" emits a
+    :class:`RetraceWarning`, "off" only counts. Yields the
+    :class:`CompileWatcher` so callers can read the observed count."""
+    action = resolve_sentinel_mode(action, knob="action")
+    w = CompileWatcher()
+    with w:
+        yield w
+    if action == "off" or w.count <= budget:
+        return
+    what = f" in {label}" if label else ""
+    msg = (f"UL301 retrace-budget-exceeded: {w.count} XLA compile(s)"
+           f"{what}, budget {budget} — a path asserted to replay "
+           "compiled executables traced/compiled again")
+    if action == "error":
+        raise RetraceError(msg)
+    warnings.warn(msg, RetraceWarning, stacklevel=3)

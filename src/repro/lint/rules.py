@@ -1,0 +1,120 @@
+"""Finding/rule vocabulary of the VCProg linter.
+
+Every diagnostic `repro.lint` can emit is registered here with a stable
+id, so CI tooling can diff findings across revisions and user programs
+can suppress specific rules (`VCProgram.lint_suppress = ("UL105",)`).
+Rule ids are grouped by analysis layer:
+
+  UL1xx  contract checker  (lint/contracts.py, jax.eval_shape)
+  UL2xx  jaxpr auditor     (lint/jaxpr_audit.py, jax.make_jaxpr + AST)
+  UL3xx  retrace sentinel  (lint/retrace.py, runtime compile counting)
+
+See docs/linting.md for the full catalog with example diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+__all__ = ["Finding", "Rule", "RULES", "finding"]
+
+
+class Rule(NamedTuple):
+    id: str
+    title: str
+    severity: str  # default severity: "error" | "warning"
+    summary: str
+
+
+#: The rule catalog — the single source of truth for `--list-rules`,
+#: docs/linting.md, and the per-rule mutant tests.
+RULES = {r.id: r for r in [
+    Rule("UL100", "method-crash", "error",
+         "a VCProgram method raised while abstractly interpreted on "
+         "synthetic records — it would fail identically inside the "
+         "compiled superstep loop"),
+    Rule("UL101", "state-not-closed", "error",
+         "vertex_compute returns a state record whose pytree structure, "
+         "leaf shapes, or dtypes differ from init_vertex's — the "
+         "lax.while_loop carry must be shape-stable across supersteps"),
+    Rule("UL102", "message-schema-mismatch", "error",
+         "emit_message / merge_message produce a message record that "
+         "does not match empty_message()'s structure or dtypes — the "
+         "combine plane folds messages into inboxes tiled from the "
+         "empty record"),
+    Rule("UL103", "bad-monoid-table", "error",
+         "the declared `monoid` is not one of sum|min|max|general, or a "
+         "per-leaf monoid table does not mirror the message record"),
+    Rule("UL104", "monoid-identity-violated", "error",
+         "empty_message() is not the identity of merge_message, or "
+         "merge_message disagrees with the declared named monoid on "
+         "sample values — folds would change converged lanes' results"),
+    Rule("UL105", "monotonic-contradicts-monoid", "error",
+         "the declared `monotonic` direction contradicts the combine "
+         "monoid (e.g. monotonic='decreasing' with a max/sum monoid) — "
+         "the guards' monotonicity watchdog would trip on correct runs"),
+    Rule("UL106", "bad-lane-shape", "error",
+         "a record leaf has rank > 1, or is_active/is_emit is not a "
+         "scalar — batched lanes pack record leaves as slab columns, so "
+         "per-vertex/per-message leaves must be scalars or [D] vectors"),
+    Rule("UL201", "attr-baked-as-trace-constant", "error",
+         "a per-query constructor attr is value-equal across batch lanes "
+         "and was folded into the trace as a constant — a runner cached "
+         "on the lane signature would silently replay this batch's value "
+         "for different queries (the PR-9 serving bug class)"),
+    Rule("UL202", "tracer-bool-escape", "error",
+         "a method forces a traced value to a Python bool/int (`if`, "
+         "`while`, int()) — inside jit this raises "
+         "TracerBoolConversionError; use jnp.where/lax.cond instead"),
+    Rule("UL203", "callback-captures-traced-value", "error",
+         "a pure_callback/io_callback host function closes over a method "
+         "parameter or a value derived from one — the closure outlives "
+         "the trace, so the captured tracer leaks into eager host "
+         "execution (the PR-1 callback-engine bug class); pass it "
+         "through the callback's operand list instead"),
+    Rule("UL204", "eager-jax-op-in-callback", "warning",
+         "a pure_callback/io_callback host function calls jax/jnp ops — "
+         "each call dispatches (and first compiles) eagerly on the host "
+         "per invocation; compute with numpy inside host callbacks"),
+    Rule("UL301", "retrace-budget-exceeded", "error",
+         "a code path asserted to replay compiled executables triggered "
+         "new XLA compiles (reported by the runtime retrace sentinel, "
+         "not the static linter)"),
+]}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a rule instance anchored to a program/method."""
+
+    rule: str                      # rule id, key into RULES
+    program: str                   # VCProgram class name
+    message: str                   # what is wrong, concretely
+    method: Optional[str] = None   # offending method, when attributable
+    fix: str = ""                  # actionable remediation
+    location: str = ""             # "file:line" when resolvable
+    severity: str = ""             # filled from RULES when empty
+
+    def __str__(self) -> str:
+        where = self.location or self.program
+        meth = f".{self.method}" if self.method else ""
+        out = (f"{where}: {self.rule} {self.severity}: "
+               f"[{self.program}{meth}] {self.message}")
+        if self.fix:
+            out += f"\n    fix: {self.fix}"
+        return out
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["title"] = RULES[self.rule].title
+        return d
+
+
+def finding(rule: str, program, message: str, **kw) -> Finding:
+    """Build a Finding with the rule's default severity filled in.
+    `program` may be a class, an instance, or a name string."""
+    if not isinstance(program, str):
+        cls = program if isinstance(program, type) else type(program)
+        program = cls.__name__
+    kw.setdefault("severity", RULES[rule].severity)
+    return Finding(rule=rule, program=program, message=message, **kw)

@@ -103,6 +103,16 @@ class LRUCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        #: XLA compiles observed while building/first-running entries
+        #: (reported by the session's retrace sentinel; every compile a
+        #: healthy session ever pays shows up here, because hits are
+        #: asserted compile-free — lint/retrace.py rule UL301)
+        self.compile_events = 0
+
+    def note_compiles(self, n: int) -> None:
+        """Record `n` XLA compiles attributed to a cache miss (the
+        sentinel's accounting of where compile time legitimately went)."""
+        self.compile_events += int(n)
 
     def __len__(self) -> int:
         return len(self._d)
@@ -154,4 +164,5 @@ class LRUCache:
         return {"size": len(self._d), "capacity": self.capacity,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
-                "invalidations": self.invalidations}
+                "invalidations": self.invalidations,
+                "compile_events": self.compile_events}

@@ -49,6 +49,7 @@ import numpy as np
 from ..core import message_plane, operators, records, vcprog
 from ..core.engines import common as engines
 from ..core.engines.common import run_vcprog
+from ..lint import retrace as retrace_mod
 from . import cache as cache_mod
 from .batcher import DEFAULT_LANE_BUCKETS, MicroBatcher, Ticket, bucket_width
 from .incremental import CapacityExceeded, IncrementalGraph
@@ -125,6 +126,16 @@ class ServingSession:
     micro-batcher; `slack` sizes the incremental layout's pad headroom;
     `refresh_iters` the warm PageRank tail; `clock` injects a monotonic
     time source (tests drive batching deterministically with it).
+
+    sentinel: "error" (default) | "warn" | "off" — the retrace sentinel
+    (repro.lint.retrace, rule UL301). The serving tier's contract is
+    that a warm cache hit and an in-capacity `apply_edge_deltas` patch
+    never trace or compile; the sentinel counts XLA compiles around
+    exactly those paths and raises (or warns) when the contract breaks,
+    instead of letting a silent retrace eat the latency budget. Compiles
+    on cache MISSES are legitimate and are recorded in the cache's
+    `compile_events` counter. The distributed engine serves through
+    `run_vcprog` (its own cache) and is not gated.
     """
 
     def __init__(self, graph, *, engine: str = "pushpull",
@@ -136,7 +147,7 @@ class ServingSession:
                  damping: float = 0.85, refresh_iters: int = 5,
                  cache_capacity: int = 64, deadline_ms: float = 5.0,
                  occupancy: int = 32, lane_buckets=DEFAULT_LANE_BUCKETS,
-                 slack: float = 0.5,
+                 slack: float = 0.5, sentinel: str = "error",
                  clock: Callable[[], float] = time.monotonic):
         self.engine = str(engine)
         self.frontier = message_plane.resolve_frontier_mode(frontier)
@@ -153,6 +164,10 @@ class ServingSession:
         self.slack = float(slack)
         self.lane_buckets = tuple(sorted(int(b) for b in lane_buckets))
         self._clock = clock
+        self.sentinel = retrace_mod.resolve_sentinel_mode(sentinel)
+        self.sentinel_trips = 0
+        if self.sentinel != "off":
+            retrace_mod.arm()
 
         self._distributed = self.engine == "distributed"
         self._reordered = self.reorder != "none"
@@ -223,6 +238,36 @@ class ServingSession:
         self._cache.put(key, entry)
         return entry, False
 
+    # -- retrace sentinel (lint/retrace.py, rule UL301) --------------------
+    def _trip(self, label: str, count: int):
+        """A guaranteed-compile-free path compiled anyway: trip UL301."""
+        self.sentinel_trips += 1
+        msg = (f"UL301 retrace-budget-exceeded: {label} triggered "
+               f"{count} XLA compile(s) on a path the serving tier "
+               f"guarantees compile-free — a runner was retraced behind "
+               f"the cache's back (shape/dtype drift, a trace-baked "
+               f"query attr, or an out-of-band jit). See docs/linting.md"
+               f"#ul301; sentinel='warn'/'off' downgrades this check.")
+        if self.sentinel == "error":
+            raise retrace_mod.RetraceError(msg)
+        warnings.warn(msg, retrace_mod.RetraceWarning, stacklevel=4)
+
+    def _invoke(self, label: str, compile_free: bool, fn: Callable[[], Any]):
+        """Run one cached-runner call (or delta patch) under the
+        sentinel. `compile_free` paths (warm hits, in-capacity patches)
+        trip UL301 on any compile; miss-path compiles are attributed to
+        the cache's `compile_events` accounting."""
+        if self.sentinel == "off":
+            return fn()
+        with retrace_mod.CompileWatcher() as w:
+            out = fn()
+        if w.count:
+            if compile_free:
+                self._trip(label, w.count)
+            else:
+                self._cache.note_compiles(w.count)
+        return out
+
     def _serving_keys(self, info: dict, *, hit: bool, q_bucket: int,
                       warm: bool) -> dict:
         info.setdefault("cache_hit", hit)
@@ -285,13 +330,21 @@ class ServingSession:
         outs, iters, acts = [], [], []
         for lo in range(0, W, cw):
             bp = batched(padded[lo:lo + cw])
+            # only the FIRST chunk of a miss may compile; hits and
+            # later chunks replay the same executable (lane values are
+            # operands, so new sources never change the trace)
+            free = hit or lo > 0
+            label = f"{op} runner (q_bucket={cw}, warm={warm is not None})"
             if warm is None:
-                wrapped, it, na = entry["runner"](gdev, bp.lane_values)
+                wrapped, it, na = self._invoke(
+                    label, free, lambda: entry["runner"](gdev,
+                                                         bp.lane_values))
             else:
                 wv, wa = warm
                 wv_c = jax.tree.map(lambda a: a[..., lo:lo + cw], wv)
-                wrapped, it, na = entry["runner"](gdev, bp.lane_values,
-                                                  wv_c, wa)
+                wrapped, it, na = self._invoke(
+                    label, free,
+                    lambda: entry["runner"](gdev, bp.lane_values, wv_c, wa))
             outs.append(wrapped["p"])
             iters.append(int(it))
             acts.append(int(na))
@@ -329,11 +382,14 @@ class ServingSession:
                 use_kernel=self.use_kernel, frontier=self.frontier,
                 prefetch=self.prefetch, warm=warm is not None)[0]})
         gdev = self._gdev()
+        label = f"{op} runner (global, warm={warm is not None})"
         if warm is None:
-            rec, it, na = entry["runner"](gdev, ())
+            rec, it, na = self._invoke(label, hit,
+                                       lambda: entry["runner"](gdev, ()))
         else:
             wv, wa = warm
-            rec, it, na = entry["runner"](gdev, (), wv, wa)
+            rec, it, na = self._invoke(
+                label, hit, lambda: entry["runner"](gdev, (), wv, wa))
         info = {**self._base_info(), "iterations": int(it),
                 "active_at_end": int(na), "converged": int(na) == 0}
         return rec, self._serving_keys(info, hit=hit, q_bucket=0,
@@ -457,8 +513,13 @@ class ServingSession:
         n_rem = 0 if removals is None else int(np.asarray(removals).size // 2)
         rebuilt = False
         try:
-            touched, _ = self._inc.apply_edge_deltas(adds, removals,
-                                                     add_props)
+            # the in-capacity patch is numpy + device transfers — the
+            # sentinel holds it to zero compiles (the CapacityExceeded
+            # rebuild below legitimately recompiles and is NOT gated)
+            touched, _ = self._invoke(
+                "apply_edge_deltas (in-capacity patch)", True,
+                lambda: self._inc.apply_edge_deltas(adds, removals,
+                                                    add_props))
         except CapacityExceeded:
             # rebuild with headroom sized for the incoming delta, replay
             # the delta onto it, and invalidate the old-shape entries
@@ -552,6 +613,8 @@ class ServingSession:
                           "deltas_applied": self.deltas_applied},
                 "cache": self._cache.info(),
                 "batcher": self._batcher.info(),
+                "sentinel": {"mode": self.sentinel,
+                             "trips": self.sentinel_trips},
                 "requests_served": self.requests_served,
                 "hot": [_hot_name(k) for k in self._hot]}
 

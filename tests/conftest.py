@@ -40,6 +40,16 @@ def lognormal_graph():
     return gio.lognormal_graph(400, mu=1.2, sigma=1.0, seed=7, weighted=True)
 
 
+@pytest.fixture
+def compile_watcher():
+    """Armed :class:`repro.lint.CompileWatcher` factory — `with
+    compile_watcher() as w: ...; assert w.count == 0` asserts a block
+    ran compile-free (lint rule UL301)."""
+    from repro.lint import CompileWatcher, retrace
+    retrace.arm()
+    return CompileWatcher
+
+
 def nx_digraph(g):
     """PropertyGraph -> networkx.DiGraph with min-folded parallel weights."""
     import networkx as nx

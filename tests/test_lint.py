@@ -1,0 +1,533 @@
+"""repro.lint — rule-by-rule seeded mutants, dogfood cleanliness of the
+built-in operators, the UniGPS(lint=...) integration, the CLI, and the
+two historical bug classes as regression fixtures:
+
+  * PR-1 callback engine: a host callback closing over a traced value
+    (UL203) / calling jnp eagerly (UL204);
+  * PR-9 serving tier: a per-query attr folded into the trace as a
+    constant because its values coincided across the batch (UL201).
+
+Every mutant asserts the EXACT rule id fires (and nothing unrelated),
+so a rule regression cannot hide behind another rule's finding.
+"""
+import io
+import warnings
+from contextlib import redirect_stderr, redirect_stdout
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import operators, vcprog
+from repro.core.graph import from_edges
+from repro.lint import (LintError, LintWarning, RULES, check_program,
+                        resolve_lint_mode)
+from repro.lint.cli import main as lint_main
+
+
+# ---------------------------------------------------------------------------
+# a minimal well-formed program + its seeded mutants (module level: the
+# AST rules need inspect.getsource, so no closures over test state)
+# ---------------------------------------------------------------------------
+
+INF = jnp.float32(3.4e38)
+
+
+class GoodMin(vcprog.VCProgram):
+    monoid = "min"
+    monotonic = "decreasing"
+    lane_attrs = ("root",)
+
+    def __init__(self, root=0):
+        self.root = root
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"d": jnp.where(vid == self.root, jnp.float32(0), INF)}
+
+    def empty_message(self):
+        return {"d": INF}
+
+    def merge_message(self, a, b):
+        return {"d": jnp.minimum(a["d"], b["d"])}
+
+    def vertex_compute(self, prop, msg, it):
+        new = jnp.minimum(prop["d"], msg["d"])
+        return {"d": new}, new < prop["d"]
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return src_prop["d"] < INF, {"d": src_prop["d"] + 1.0}
+
+
+class CrashInit(GoodMin):                      # UL100
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"d": vprop["no_such_prop"]}
+
+
+class NotClosed(GoodMin):                      # UL101
+    def vertex_compute(self, prop, msg, it):
+        return {"d": prop["d"], "extra": jnp.float32(0)}, jnp.bool_(False)
+
+
+class DtypeDrift(GoodMin):                     # UL101 (dtype, not structure)
+    def vertex_compute(self, prop, msg, it):
+        return {"d": prop["d"].astype(jnp.int32)}, jnp.bool_(False)
+
+
+class OffSchemaEmit(GoodMin):                  # UL102
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return jnp.bool_(True), {"e": src_prop["d"]}
+
+
+class SwappedEmit(GoodMin):                    # UL102 + UL106 (pair swapped)
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return {"d": src_prop["d"] + 1.0}, src_prop["d"] < INF
+
+
+class OffSchemaMerge(GoodMin):                 # UL102
+    def merge_message(self, a, b):
+        return {"d": jnp.minimum(a["d"], b["d"]).astype(jnp.int32)}
+
+
+class TypoMonoid(GoodMin):                     # UL103
+    monoid = "mni"
+    monotonic = None
+
+
+class BadTableShape(GoodMin):                  # UL103 (table != record)
+    monoid = {"d": "min", "ghost": "min"}
+    monotonic = None
+
+
+class BadIdentity(GoodMin):                    # UL104
+    def empty_message(self):
+        return {"d": jnp.float32(0.0)}
+
+
+class WrongNamedOp(GoodMin):                   # UL104 (merge != declared op)
+    def merge_message(self, a, b):
+        return {"d": jnp.maximum(a["d"], b["d"])}
+
+
+class ContradictsMonoid(GoodMin):              # UL105
+    monoid = "max"
+    monotonic = "decreasing"
+
+    def empty_message(self):
+        return {"d": -INF}
+
+    def merge_message(self, a, b):
+        return {"d": jnp.maximum(a["d"], b["d"])}
+
+
+class MatrixLeaf(GoodMin):                     # UL106
+    monotonic = None
+
+    def init_vertex(self, vid, out_degree, vprop):
+        return {"d": jnp.zeros((2, 3))}
+
+    def empty_message(self):
+        return {"d": jnp.full((2, 3), INF)}
+
+    def vertex_compute(self, prop, msg, it):
+        return {"d": jnp.minimum(prop["d"], msg["d"])}, jnp.bool_(False)
+
+    def emit_message(self, src, dst, src_prop, edge_prop):
+        return jnp.bool_(True), {"d": src_prop["d"]}
+
+
+class TracerBool(GoodMin):                     # UL202 (PR-1-adjacent escape)
+    def vertex_compute(self, prop, msg, it):
+        if msg["d"] < prop["d"]:
+            return {"d": msg["d"]}, jnp.bool_(True)
+        return prop, jnp.bool_(False)
+
+
+class LeakyCallback(GoodMin):                  # UL203 + UL204 (PR-1 class)
+    def vertex_compute(self, prop, msg, it):
+        def host():
+            return np.asarray(jnp.minimum(msg["d"], 0.0))
+        d = jax.pure_callback(host, jax.ShapeDtypeStruct((), jnp.float32))
+        return {"d": d}, jnp.bool_(False)
+
+
+class CleanCallback(GoodMin):                  # operands rebound: no finding
+    def vertex_compute(self, prop, msg, it):
+        def host(m):
+            return np.minimum(np.asarray(m), np.float32(0.0))
+        d = jax.pure_callback(host, jax.ShapeDtypeStruct((), jnp.float32),
+                              msg["d"])
+        return {"d": d}, jnp.bool_(False)
+
+
+MUTANTS = [
+    (CrashInit, "UL100"),
+    (NotClosed, "UL101"),
+    (DtypeDrift, "UL101"),
+    (OffSchemaEmit, "UL102"),
+    (SwappedEmit, "UL102"),
+    (OffSchemaMerge, "UL102"),
+    (TypoMonoid, "UL103"),
+    (BadTableShape, "UL103"),
+    (BadIdentity, "UL104"),
+    (WrongNamedOp, "UL104"),
+    (ContradictsMonoid, "UL105"),
+    (MatrixLeaf, "UL106"),
+    (TracerBool, "UL202"),
+    (LeakyCallback, "UL203"),
+]
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_good_program_is_clean():
+    assert check_program(GoodMin()) == []
+
+
+@pytest.mark.parametrize("cls,rule", MUTANTS,
+                         ids=[c.__name__ for c, _ in MUTANTS])
+def test_seeded_mutant_fires_exactly_its_rule(cls, rule):
+    findings = check_program(cls())
+    fired = rules_of(findings)
+    assert rule in fired, f"{cls.__name__} should fire {rule}, got {fired}"
+    # no unrelated layer-1 noise: every fired rule is the seeded one or a
+    # direct consequence of the same seeded defect
+    allowed = {rule}
+    if cls is SwappedEmit:
+        allowed.add("UL106")       # record in the flag slot
+    if cls is LeakyCallback:
+        allowed.add("UL204")       # the leaked closure also calls jnp
+    assert set(fired) <= allowed
+    for f in findings:
+        assert f.fix or f.rule == "UL106", f"finding without fix: {f}"
+
+
+def test_ul204_eager_jax_in_callback():
+    fired = rules_of(check_program(LeakyCallback()))
+    assert "UL204" in fired
+
+
+def test_clean_callback_has_no_callback_findings():
+    assert check_program(CleanCallback()) == []
+
+
+def test_findings_carry_source_locations():
+    (f,) = [f for f in check_program(TracerBool()) if f.rule == "UL202"]
+    assert "test_lint.py" in f.location
+    assert "jnp.where" in f.fix or "lax" in f.fix
+
+
+# ---------------------------------------------------------------------------
+# dogfood: every built-in operator program lints clean
+# ---------------------------------------------------------------------------
+
+BUILTINS = [
+    operators.PageRankProgram(16, 3, 0.85),
+    operators.SSSPProgram(root=0),
+    operators.CCProgram(),
+    operators.BFSProgram(root=0),
+    operators.DegreeProgram(),
+    operators.PersonalizedPageRankProgram(16, 3, 0, 0.85),
+]
+
+
+@pytest.mark.parametrize("prog", BUILTINS,
+                         ids=[type(p).__name__ for p in BUILTINS])
+def test_builtin_operators_lint_clean(prog):
+    assert check_program(prog) == []
+
+
+def test_builtin_batched_lint_clean():
+    bp = vcprog.as_batched([operators.SSSPProgram(root=0),
+                            operators.SSSPProgram(root=5)])
+    assert check_program(bp) == []
+
+
+# ---------------------------------------------------------------------------
+# UL201: the PR-9 trace-constant regression fixture
+# ---------------------------------------------------------------------------
+
+def test_ul201_value_equal_attr_baked_raw_constructor():
+    # bypassing as_batched reproduces the bug: equal roots fold into the
+    # trace as constants even though `root` is declared per-query
+    bad = vcprog.BatchedProgram([operators.SSSPProgram(root=3)] * 2)
+    assert "root" in bad.common_attrs
+    (f,) = check_program(bad)
+    assert f.rule == "UL201"
+    assert "root" in f.message and "lane_attrs" in f.fix
+    assert "as_batched" in f.fix   # diagnostic names the actual fix
+
+
+def test_ul201_silent_for_true_config_attrs():
+    # num_iters/damping are lane-invariant config — no lane declaration,
+    # no finding even though they are value-equal trace constants
+    bp = vcprog.BatchedProgram([operators.PageRankProgram(16, 3, 0.85)] * 2)
+    assert check_program(bp) == []
+
+
+def test_as_batched_auto_forces_declared_lane_attrs():
+    bp = vcprog.as_batched([operators.SSSPProgram(root=3)] * 2)
+    assert "root" in bp.lane_attr_names
+    assert check_program(bp) == []
+
+
+def test_pr9_regression_equal_then_distinct_sources():
+    # the bug's observable symptom: a runner warmed on one root answered
+    # every later source with that root's distances
+    g = from_edges([0, 1, 2, 3], [1, 2, 3, 0], 4)
+    d, _ = operators.sssp(g, 0, 8, engine="pushpull", sources=[2, 2])
+    d2, _ = operators.sssp(g, 0, 8, engine="pushpull", sources=[2, 3])
+    np.testing.assert_array_equal(np.asarray(d)[0], np.asarray(d2)[0])
+    assert not np.array_equal(np.asarray(d2)[0], np.asarray(d2)[1])
+
+
+def test_query_attrs_parameter_flags_undeclared_attr():
+    class NoDecl(GoodMin):
+        lane_attrs = ()
+
+    bad = vcprog.BatchedProgram([NoDecl(root=2)] * 2)
+    assert check_program(bad) == []           # no declared intent: silent
+    fired = rules_of(check_program(bad, query_attrs=("root",)))
+    assert fired == ["UL201"]                 # caller-declared intent
+
+
+# ---------------------------------------------------------------------------
+# suppression + knob plumbing
+# ---------------------------------------------------------------------------
+
+def test_lint_suppress_filters_rule():
+    class Suppressed(ContradictsMonoid):
+        lint_suppress = ("UL105",)
+
+    assert check_program(Suppressed()) == []
+    assert "UL105" in rules_of(check_program(ContradictsMonoid()))
+
+
+def test_rules_whitelist():
+    fs = check_program(ContradictsMonoid(), rules=("UL101",))
+    assert fs == []
+
+
+def test_resolve_lint_mode():
+    assert resolve_lint_mode(None) == "warn"
+    assert resolve_lint_mode("error") == "error"
+    with pytest.raises(ValueError, match="lint must be one of"):
+        resolve_lint_mode("loud")
+
+
+def test_knob_errors_share_format():
+    from repro.core.message_plane import (resolve_frontier_mode,
+                                          resolve_kernel_mode,
+                                          resolve_prefetch_mode)
+    from repro.distributed.wire import resolve_exchange_mode
+    for fn, knob in ((resolve_frontier_mode, "frontier"),
+                     (resolve_kernel_mode, "kernel"),
+                     (resolve_prefetch_mode, "prefetch"),
+                     (resolve_exchange_mode, "exchange"),
+                     (resolve_lint_mode, "lint")):
+        with pytest.raises(ValueError,
+                           match=rf"{knob} must be one of .*got 'bogus'"):
+            fn("bogus")
+
+
+# ---------------------------------------------------------------------------
+# UniGPS(lint=...) integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_graph():
+    return from_edges([0, 1, 2], [1, 2, 0], 3)
+
+
+def test_unigps_lint_error_raises(tiny_graph):
+    u = repro.UniGPS(engine="pushpull", lint="error")
+    with pytest.raises(LintError) as ei:
+        u.vcprog(tiny_graph, TracerBool(), max_iter=3)
+    assert any(f.rule == "UL202" for f in ei.value.findings)
+
+
+def test_unigps_lint_warn_default(tiny_graph):
+    u = repro.UniGPS(engine="pushpull")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with pytest.raises(Exception):       # the program is truly broken
+            u.vcprog(tiny_graph, TracerBool(), max_iter=3)
+    assert any(issubclass(w.category, LintWarning) for w in rec)
+
+
+def test_unigps_lint_off_and_per_call_override(tiny_graph):
+    u = repro.UniGPS(engine="pushpull", lint="off")
+    with pytest.raises(Exception) as ei:
+        u.vcprog(tiny_graph, TracerBool(), max_iter=3)
+    assert not isinstance(ei.value, LintError)
+    with pytest.raises(LintError):
+        u.vcprog(tiny_graph, TracerBool(), max_iter=3, lint="error")
+
+
+def test_unigps_clean_program_runs_under_error(tiny_graph):
+    u = repro.UniGPS(engine="pushpull", lint="error")
+    labels, info = u.vcprog(tiny_graph, operators.CCProgram(), max_iter=10)
+    assert info["converged"]
+
+
+def test_unigps_bad_lint_knob():
+    with pytest.raises(ValueError, match="lint must be one of"):
+        repro.UniGPS(lint="nope")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*argv):
+    out, err = io.StringIO(), io.StringIO()
+    with redirect_stdout(out), redirect_stderr(err):
+        code = lint_main(list(argv))
+    return code, out.getvalue(), err.getvalue()
+
+
+def test_cli_list_rules():
+    code, out, _ = _run_cli("--list-rules")
+    assert code == 0
+    for rid in RULES:
+        assert rid in out
+
+
+def test_cli_clean_operators_file():
+    code, out, _ = _run_cli("src/repro/core/operators.py")
+    assert code == 0
+    assert "0 finding(s)" in out
+
+
+def test_cli_bad_file(tmp_path):
+    bad = tmp_path / "badprog.py"
+    bad.write_text(
+        "import jax.numpy as jnp\n"
+        "from repro.core.vcprog import VCProgram\n"
+        "class Bad(VCProgram):\n"
+        "    monoid = 'mni'\n"
+        "    def init_vertex(self, vid, out_degree, vprop):\n"
+        "        return {'d': jnp.float32(0)}\n"
+        "    def empty_message(self):\n"
+        "        return {'d': jnp.float32(0)}\n"
+        "    def merge_message(self, a, b):\n"
+        "        return {'d': jnp.minimum(a['d'], b['d'])}\n"
+        "    def vertex_compute(self, prop, msg, it):\n"
+        "        return prop, jnp.bool_(False)\n"
+        "    def emit_message(self, src, dst, src_prop, edge_prop):\n"
+        "        return jnp.bool_(True), {'d': src_prop['d']}\n")
+    code, out, _ = _run_cli(str(bad))
+    assert code == 0 and "UL103" in out       # findings but no --error
+    code, out, _ = _run_cli(str(bad), "--error")
+    assert code == 1
+    code, out, _ = _run_cli(str(bad), "--json")
+    import json
+    rep = json.loads(out)
+    # the typo'd monoid fires UL103; the 0-filled empty record is also
+    # genuinely not min's identity (UL104)
+    assert "UL103" in [f["rule"] for f in rep["findings"]]
+    assert all(f["program"] == "Bad" for f in rep["findings"])
+
+
+def test_cli_unimportable_file(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("this is not python ][\n")
+    code, _, err = _run_cli(str(p))
+    assert code == 2
+
+
+def test_cli_uninstantiable_class_is_skip_not_error(tmp_path):
+    p = tmp_path / "needs_arg.py"
+    p.write_text(
+        "from repro.core.vcprog import VCProgram\n"
+        "class NeedsExotic(VCProgram):\n"
+        "    def __init__(self, mystery_thing):\n"
+        "        self.mystery_thing = mystery_thing\n")
+    code, out, _ = _run_cli(str(p))
+    assert code == 0
+    assert "skipped NeedsExotic" in out
+
+
+# ---------------------------------------------------------------------------
+# property test: random well-formed programs never produce findings
+# ---------------------------------------------------------------------------
+
+_IDENTITY = {"min": INF, "max": -INF, "sum": jnp.float32(0.0)}
+_OPS = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}
+
+
+def _make_wellformed(monoid, nleaves, root, use_vec, vec_d):
+    """A structurally sound program: consistent schema, true identity,
+    merge = declared op, scalar flags, closed state."""
+    keys = [f"x{i}" for i in range(nleaves)]
+    ident = _IDENTITY[monoid]
+    op = _OPS[monoid]
+
+    def rec(fill):
+        return {k: (jnp.full((vec_d,), fill) if use_vec and i == 0
+                    else jnp.float32(fill))
+                for i, k in enumerate(keys)}
+
+    class RandomProgram(vcprog.VCProgram):
+        lane_attrs = ("root",)
+
+        def __init__(self, root=0):
+            self.root = root
+
+        def init_vertex(self, vid, out_degree, vprop):
+            r = rec(0.0)
+            return jax.tree.map(
+                lambda l: jnp.where(vid == self.root, l, l + 1.0), r)
+
+        def empty_message(self):
+            return rec(ident)
+
+        def merge_message(self, a, b):
+            return jax.tree.map(op, a, b)
+
+        def vertex_compute(self, prop, msg, it):
+            new = jax.tree.map(op, prop, msg) if monoid != "sum" else prop
+            return new, jnp.bool_(False)
+
+        def emit_message(self, src, dst, src_prop, edge_prop):
+            return jnp.bool_(True), src_prop
+
+    RandomProgram.monoid = monoid
+    return RandomProgram(root=root)
+
+
+def _assert_wellformed_clean(monoid, nleaves, root, use_vec, vec_d):
+    prog = _make_wellformed(monoid, nleaves, root, use_vec, vec_d)
+    assert check_program(prog) == [], (monoid, nleaves, root, use_vec,
+                                       vec_d)
+    bp = vcprog.as_batched([prog, prog])
+    assert check_program(bp) == []
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_wellformed_programs_have_zero_findings(seed):
+    """Zero false positives over randomized well-formed programs
+    (deterministic seeded sweep; the hypothesis variant below widens the
+    search when the optional dependency is installed)."""
+    rng = np.random.default_rng(seed)
+    _assert_wellformed_clean(
+        monoid=["min", "max", "sum"][int(rng.integers(3))],
+        nleaves=int(rng.integers(1, 4)), root=int(rng.integers(8)),
+        use_vec=bool(rng.integers(2)), vec_d=int(rng.integers(1, 5)))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(monoid=st.sampled_from(["min", "max", "sum"]),
+           nleaves=st.integers(1, 3), root=st.integers(0, 7),
+           use_vec=st.booleans(), vec_d=st.integers(1, 4))
+    def test_wellformed_programs_hypothesis(monoid, nleaves, root,
+                                            use_vec, vec_d):
+        _assert_wellformed_clean(monoid, nleaves, root, use_vec, vec_d)
+except ImportError:  # optional dev dependency (docs/perf.md)
+    pass

@@ -1,0 +1,184 @@
+"""Retrace sentinel (lint layer 3, rule UL301): compile-counter units,
+the assert_compiles context manager, and the serving-tier guarantees it
+gates in CI — a warm serving loop and an in-capacity delta burst run
+with EXACTLY zero XLA compiles.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import io as gio
+from repro.lint import (CompileWatcher, RetraceError, RetraceWarning,
+                        assert_compiles, retrace)
+
+
+# ---------------------------------------------------------------------------
+# counter units
+# ---------------------------------------------------------------------------
+
+def test_watcher_counts_fresh_compile(compile_watcher):
+    with compile_watcher() as w:
+        jax.jit(lambda x: x * 3 + 1)(jnp.arange(13))
+    assert w.count >= 1
+
+
+def test_watcher_zero_on_cached_executable(compile_watcher):
+    f = jax.jit(lambda x: x - 2)
+    f(jnp.arange(9))                       # pay the compile outside
+    with compile_watcher() as w:
+        for _ in range(3):
+            f(jnp.arange(9))
+    assert w.count == 0
+
+
+def test_watcher_count_freezes_on_exit(compile_watcher):
+    with compile_watcher() as w:
+        pass
+    frozen = w.count
+    jax.jit(lambda x: x / 7)(jnp.arange(5))
+    assert w.count == frozen
+
+
+def test_arm_is_idempotent():
+    retrace.arm()
+    retrace.arm()
+    x = jax.block_until_ready(jnp.arange(3) + 0)  # absorb eager-op compiles
+    before = retrace.compile_count()
+    jax.jit(lambda a: a + 11)(x)
+    # one compile event for one jit, not one per arm() call
+    assert retrace.compile_count() - before == 1
+
+
+def test_assert_compiles_raises_over_budget():
+    with pytest.raises(RetraceError, match="UL301"):
+        with assert_compiles(0, label="unit"):
+            jax.jit(lambda x: x * 5 - 4)(jnp.arange(17))
+
+
+def test_assert_compiles_warn_action():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with assert_compiles(0, action="warn", label="unit"):
+            jax.jit(lambda x: x * 9 + 2)(jnp.arange(19))
+    assert any(issubclass(w.category, RetraceWarning) for w in rec)
+
+
+def test_assert_compiles_within_budget():
+    with assert_compiles(10, label="unit"):
+        jax.jit(lambda x: x + 21)(jnp.arange(23))
+
+
+def test_resolve_sentinel_mode():
+    assert retrace.resolve_sentinel_mode(None) == "error"
+    assert retrace.resolve_sentinel_mode("warn") == "warn"
+    with pytest.raises(ValueError, match="sentinel must be one of"):
+        retrace.resolve_sentinel_mode("maybe")
+
+
+# ---------------------------------------------------------------------------
+# serving-tier gates (the CI smoke): warm loop + in-capacity deltas = 0
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def session():
+    g = gio.uniform_graph(60, 300, seed=11, weighted=True)
+    s = repro.UniGPS(engine="pushpull").serve(
+        g, max_iter=30, lane_buckets=(1, 4), slack=1.0)
+    # pay every compile up front; deltas below stay inside capacity
+    s.warmup(ops=("sssp", "pagerank"), warm_runners=True)
+    return s
+
+
+def test_session_defaults_to_error_sentinel(session):
+    assert session.sentinel == "error"
+    assert session.info()["sentinel"] == {"mode": "error", "trips": 0}
+
+
+def test_warm_serving_loop_is_compile_free(session, compile_watcher):
+    # absorb first-touch EAGER ops (result slicing/transpose) per request
+    # shape — one-time costs, not retraces; the steady-state loop below
+    # must then replay entirely compile-free
+    session.query("sssp", source=0)
+    session.query("sssp", sources=[7, 8, 9])
+    session.query("pagerank", keep_warm=True)
+    with compile_watcher() as w:
+        for src in (1, 2, 3, 4, 5):
+            d, info = session.query("sssp", source=src)
+            assert info["cache_hit"]
+        session.query("sssp", sources=[1, 2, 3])
+        session.query("pagerank", keep_warm=True)
+    assert w.count == 0
+    assert session.sentinel_trips == 0
+
+
+def test_in_capacity_delta_burst_is_compile_free(session, compile_watcher):
+    session.query("sssp", source=0, keep_warm=True)
+    # one throwaway delta absorbs first-touch EAGER-op compiles (frontier
+    # seed masks etc.) — one-time costs, not retraces; the burst below
+    # must then be exactly compile-free end to end
+    session.apply_edge_deltas(adds=[(7, 8)],
+                              add_props={"weight": [1.0]})
+    rng = np.random.default_rng(3)
+    with compile_watcher() as w:
+        for _ in range(3):
+            adds = rng.integers(0, 60, (2, 2))
+            rep = session.apply_edge_deltas(
+                adds=adds, add_props={"weight": np.ones(2, np.float32)})
+            assert not rep["rebuilt"]
+    assert w.count == 0
+    assert session.sentinel_trips == 0
+    # the post-delta warm path replays cached runners too
+    with compile_watcher() as w:
+        session.query("sssp", source=0)
+    assert w.count == 0
+
+
+def test_compiles_are_attributed_to_cache_misses(session):
+    assert session.info()["cache"]["compile_events"] >= 1
+
+
+def test_sentinel_trips_on_forced_retrace():
+    g = gio.uniform_graph(30, 100, seed=2)
+    s = repro.UniGPS(engine="pushpull").serve(g, max_iter=15,
+                                              lane_buckets=(1,))
+    s.query("sssp", source=0)
+    jax.clear_caches()                     # drop XLA's cache out from under
+    with pytest.raises(RetraceError, match="UL301"):
+        s.query("sssp", source=1)
+    assert s.sentinel_trips == 1
+
+
+def test_sentinel_warn_mode_downgrades():
+    g = gio.uniform_graph(30, 100, seed=2)
+    s = repro.UniGPS(engine="pushpull").serve(g, max_iter=15,
+                                              lane_buckets=(1,),
+                                              sentinel="warn")
+    s.query("sssp", source=0)
+    jax.clear_caches()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        d, info = s.query("sssp", source=1)
+    assert any(issubclass(w.category, RetraceWarning) for w in rec)
+    assert s.sentinel_trips == 1
+    assert info["cache_hit"]               # the request still answered
+
+
+def test_sentinel_off_mode_is_silent():
+    g = gio.uniform_graph(30, 100, seed=2)
+    s = repro.UniGPS(engine="pushpull").serve(g, max_iter=15,
+                                              lane_buckets=(1,),
+                                              sentinel="off")
+    s.query("sssp", source=0)
+    jax.clear_caches()
+    s.query("sssp", source=1)
+    assert s.sentinel_trips == 0
+
+
+def test_bad_sentinel_knob():
+    g = gio.uniform_graph(20, 60, seed=1)
+    with pytest.raises(ValueError, match="sentinel must be one of"):
+        repro.UniGPS().serve(g, sentinel="sometimes")
